@@ -1,0 +1,40 @@
+"""Ablation (beyond the paper's figures): reward-coefficient sensitivity.
+
+The paper fixes (β, γ) per dataset (§VI-D: 1.0/1.0 for Java, 0.5/0.5 for
+Python) without ablating. Here we sweep the trade-off coefficients and
+report where the learned policy lands on the layers-used / quality plane —
+optional bench: ``python -m benchmarks.run --bench ablation_coefs``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import artifacts, evaluate, save_result, table
+from repro.core.controller import make_controller
+from repro.rl import EarlyExitEnv, PPOConfig, RewardCoefs
+from repro.rl.ppo import ppo_train
+from repro.rl.rollout import build_rollout_cache
+
+
+def run(full: bool = False, n: int = 24):
+    cfg, ds, _, ft, _ = artifacts("llama", "java")
+    cache = build_rollout_cache(ft, cfg, ds, n_episodes=24, gen_tokens=8)
+    rows = []
+    for alpha, beta, gamma in [(0.2, 1.0, 1.0), (0.2, 0.5, 0.5),
+                               (0.05, 1.0, 0.2), (0.5, 1.0, 1.0)]:
+        env = EarlyExitEnv(cache, RewardCoefs(alpha=alpha, beta=beta,
+                                              gamma=gamma), n_lanes=16)
+        agent, hist = ppo_train(
+            env, config=PPOConfig(total_steps=60_000, horizon=128),
+            log_every=0)
+        # T=0.5 (argmax policy): 40-60k-step agents rarely clear 0.9
+        ctrl = make_controller("policy", agent_params=agent, threshold=0.5)
+        r = evaluate(ft, cfg, ds, ctrl, n=n)
+        rows.append({"alpha": alpha, "beta": beta, "gamma": gamma,
+                     "reward": hist[-1]["mean_step_reward"],
+                     "mean_layers": r["mean_layers"],
+                     "codebleu": r["codebleu"],
+                     "energy_saving_frac": r["energy_saving_frac"]})
+    print(table(rows, ["alpha", "beta", "gamma", "reward", "mean_layers",
+                       "codebleu", "energy_saving_frac"],
+                "Ablation: reward coefficients (llama/java, T=0.5)"))
+    # expectation: higher beta (early-exit penalty) -> deeper exits
+    save_result("ablation_coefs", rows)

@@ -1,0 +1,24 @@
+"""Fig. 12: sensitivity to the context fraction (0.2 / 0.3 / 0.5 / 0.6)."""
+from __future__ import annotations
+
+from benchmarks.common import artifacts, evaluate, save_result, table
+from repro.core.controller import make_controller
+
+
+def run(full: bool = False, n: int = 24):
+    cfg, ds, _, ft, agent = artifacts("llama", "java")
+    rows = []
+    fracs = (0.2, 0.3, 0.5, 0.6) if full else (0.2, 0.5)
+    for frac in fracs:
+        base = evaluate(ft, cfg, ds, make_controller("none"), n=n,
+                        ctx_frac=(frac, frac))
+        rows.append({"ctx": frac, "setting": "full", **base})
+        for t in ((0.6, 0.92) if full else (0.9,)):
+            ctrl = make_controller("policy", agent_params=agent,
+                                   threshold=t)
+            r = evaluate(ft, cfg, ds, ctrl, n=n, ctx_frac=(frac, frac))
+            rows.append({"ctx": frac, "setting": f"GC({t})", **r})
+    print(table(rows, ["ctx", "setting", "codebleu", "energy_j",
+                       "energy_saving_frac"],
+                "Fig.12 context-length sensitivity — llama/java"))
+    save_result("fig12_context", rows)

@@ -1,0 +1,54 @@
+"""Table IV: relative energy/time overhead of the RL agent itself.
+
+Modeled exactly as the paper measures it: the extra forward passes through
+the policy network (one per exit check) relative to the model's own cost,
+at different thresholds (higher T -> more continue actions -> more checks).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import artifacts, save_result, table
+from repro.core import energy
+from repro.core.controller import make_controller
+from repro.core.early_exit import generate
+from repro.models.transformer import plan_segments
+
+import jax
+import jax.numpy as jnp
+
+
+def run(full: bool = False, n: int = 16):
+    rows = []
+    for model in (("llama", "opt") if full else ("llama",)):
+        cfg, ds, _, ft, agent = artifacts(model, "java")
+        segs = plan_segments(cfg)
+        tasks = ds.completion_tasks("test", n, max_context=128)
+        ctx = np.zeros((n, 128), np.int32)
+        for j, (c, _) in enumerate(tasks):
+            ctx[j, 128 - len(c):] = c
+        for t in (0.6, 0.8, 0.9, 0.92):
+            ctrl = make_controller("policy", agent_params=agent,
+                                   threshold=t)
+            out = generate(ft, cfg, jnp.asarray(ctx), 10, ctrl)
+            exits = np.asarray(out["exit_layers"])
+            # checks per token = number of boundaries passed before exit
+            bounds = np.asarray([s.end for s in segs])
+            checks = (exits[..., None] >= bounds[None, None, :-1]).sum(-1)
+            e_model = energy.decode_token_energy(cfg, 128, exits).sum()
+            e_agent = energy.controller_overhead_energy(
+                cfg, checks).sum()
+            e_full = energy.full_token_energy(cfg, 128) * exits.size
+            rows.append({
+                "model": model, "T": t,
+                "mean_checks_per_token": float(checks.mean()),
+                "overhead_vs_ee_model": float(e_agent / e_model),
+                "overhead_vs_full_model": float(e_agent / e_full),
+            })
+    print(table(rows, ["model", "T", "mean_checks_per_token",
+                       "overhead_vs_ee_model", "overhead_vs_full_model"],
+                "Table IV: RL-agent overhead (modeled energy)"))
+    worst = max(r["overhead_vs_ee_model"] for r in rows)
+    print(f"  -> worst-case agent overhead {worst:.1%} of EE-model energy "
+          f"(paper keeps it below ~20%)")
+    save_result("tab4_overhead", rows)

@@ -1,0 +1,54 @@
+"""§Roofline summary: aggregate the dry-run JSONs into the roofline table.
+
+Reads experiments/dryrun/*.json (produced by ``python -m
+repro.launch.dryrun --all``) and prints/writes the per-(arch x shape x
+mesh) three-term table with bottleneck classification and
+MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_result, table
+
+DRY_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def load_all():
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "mfu_ratio": r["mfu_ratio"],
+            "hbm_GiB": d["memory"].get("total_hbm_bytes_per_device", 0)
+            / 2**30,
+            "compile_s": d["compile_s"],
+        })
+    return rows
+
+
+def run(full: bool = False, n: int = 0):
+    rows = load_all()
+    if not rows:
+        print("  (no dry-run results yet — run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return
+    print(table(rows, ["arch", "shape", "mesh", "compute_s", "memory_s",
+                       "collective_s", "bottleneck", "mfu_ratio",
+                       "hbm_GiB"],
+                f"Roofline terms per (arch x shape x mesh) — {len(rows)} "
+                f"combinations"))
+    # summary: bottleneck distribution
+    from collections import Counter
+    c = Counter(r["bottleneck"] for r in rows)
+    print(f"  -> bottleneck distribution: {dict(c)}")
+    save_result("roofline_table", rows)

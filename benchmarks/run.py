@@ -1,0 +1,63 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  fig1_fixed_exit     Fig. 1  : fixed exits -> quality/energy/latency curves
+  fig6_rl_training    Fig. 6  : PPO mean-step-reward convergence
+  fig7_optimal_exits  Fig. 7  : optimal-exit histogram over training data
+  fig8_11_thresholds  Figs 8-11: GC(T) vs baselines (both models/datasets)
+  fig12_context       Fig. 12 : context-length sensitivity
+  fig13_kv_cache      Fig. 13 : KV-cache-propagation impact
+  tab4_overhead       Table IV: RL-agent energy/time overhead
+  roofline            §Roofline summary from the dry-run JSONs
+
+  PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="all")
+    ap.add_argument("--full", action="store_true",
+                    help="both models x both datasets (slower)")
+    ap.add_argument("--n", type=int, default=20,
+                    help="eval tasks per setting")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (ablation_coefs, context_len, fixed_exit,
+                            kv_cache, overhead, rl_curves, roofline,
+                            thresholds)
+    benches = {
+        "fig1_fixed_exit": fixed_exit.run,
+        "fig6_rl_training": rl_curves.run_training,
+        "fig7_optimal_exits": rl_curves.run_histogram,
+        "fig8_11_thresholds": thresholds.run,
+        "fig12_context": context_len.run,
+        "fig13_kv_cache": kv_cache.run,
+        "tab4_overhead": overhead.run,
+        "roofline": roofline.run,
+    }
+    # optional benches (not part of "all" — run by name)
+    extra = {"ablation_coefs": ablation_coefs.run}
+    if args.bench != "all":
+        all_benches = {**benches, **extra}
+        benches = {args.bench: all_benches[args.bench]}
+    failed = []
+    for name, fn in benches.items():
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn(full=args.full, n=args.n)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    if failed:
+        print("\nFAILED:", failed)
+        sys.exit(1)
+    print("\n[bench] all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

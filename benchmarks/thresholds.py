@@ -1,0 +1,52 @@
+"""Figs. 8-11: GREEN-CODE at thresholds T vs the two baselines.
+
+Baselines exactly as in the paper (§VI-E): (i) base model — non-fine-tuned,
+all layers; (ii) fine-tuned model — all layers. GC(T) = fine-tuned model +
+RL agent thresholded at T.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (LANGS, MODELS, artifacts, evaluate,
+                               save_result, table)
+from repro.core.controller import make_controller
+
+
+THRESHOLDS = (0.6, 0.8, 0.9, 0.91, 0.92)
+
+
+def run(full: bool = False, n: int = 32):
+    models = list(MODELS) if full else ["llama"]
+    langs = list(LANGS) if full else ["java"]
+    all_rows = []
+    for model in models:
+        for lang in langs:
+            cfg, ds, base, ft, agent = artifacts(model, lang)
+            rows = []
+            rows.append({"setting": "base(full)",
+                         **evaluate(base, cfg, ds, make_controller("none"),
+                                    n=n)})
+            rows.append({"setting": "finetuned(full)",
+                         **evaluate(ft, cfg, ds, make_controller("none"),
+                                    n=n)})
+            for t in THRESHOLDS:
+                ctrl = make_controller("policy", agent_params=agent,
+                                       threshold=t)
+                rows.append({"setting": f"GC({t})",
+                             **evaluate(ft, cfg, ds, ctrl, n=n)})
+            for r in rows:
+                r.update(model=model, lang=lang)
+            all_rows += rows
+            print(table(rows, ["setting", "rougeL", "codebleu", "syntax",
+                               "dataflow", "mean_layers", "energy_j",
+                               "energy_saving_frac",
+                               "modeled_throughput_tok_s"],
+                        f"Figs.8-11 thresholds — {model}/{lang}"))
+            ft_row = rows[1]
+            best_gc = max(rows[2:], key=lambda r: r["codebleu"])
+            print(f"  -> best GC keeps "
+                  f"{best_gc['codebleu']/max(ft_row['codebleu'],1e-9):.0%}"
+                  f" CodeBLEU, saves "
+                  f"{best_gc['energy_saving_frac']:.0%} energy")
+    save_result("fig8_11_thresholds", all_rows)

@@ -1,0 +1,49 @@
+"""Quickstart: LITE fine-tune a mini code model, generate with early exit.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs in ~2 minutes on CPU: synthetic Java corpus -> LITE fine-tune (Eq. 1)
+-> greedy generation with a fixed early exit -> energy savings report.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.llama32_3b import paper_mini
+from repro.core import energy
+from repro.core.controller import make_controller
+from repro.core.early_exit import generate
+from repro.core.exit_points import exit_points
+from repro.data import CodeCompletionDataset
+from repro.training import train_model
+
+
+def main():
+    cfg = paper_mini(num_layers=12, d_model=192, vocab_size=2048)
+    print(f"model: {cfg.name}  exit points: {exit_points(cfg)}")
+    ds = CodeCompletionDataset(language="java", n_files=120, seq_len=256,
+                               vocab_size=2048)
+    print("LITE fine-tuning (aggregated loss over exit layers) ...")
+    params, hist = train_model(cfg, ds, kind="lite", steps=60,
+                               batch_size=4, lr=1e-3, log_every=20)
+
+    tasks = ds.completion_tasks("test", 4, max_context=96)
+    ctx = np.zeros((4, 96), np.int32)
+    for j, (c, _) in enumerate(tasks):
+        ctx[j, 96 - len(c):] = c
+    ctx = jnp.asarray(ctx)
+
+    for name, ctrl in [("full model", make_controller("none")),
+                       ("early exit @4", make_controller("fixed",
+                                                         exit_idx=0))]:
+        out = generate(params, cfg, ctx, 12, ctrl)
+        exits = np.asarray(out["exit_layers"])
+        stats = energy.summarize_exit_energy(cfg, 96, exits)
+        txt = ds.tokenizer.decode(np.asarray(out["tokens"])[0].tolist())
+        print(f"\n[{name}] mean layers {stats['mean_layers_used']:.1f}"
+              f"/{cfg.num_layers}, energy saving "
+              f"{stats['energy_saving_frac']*100:.1f}%")
+        print(f"  sample completion: {txt!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.config.base import (  # noqa: F401
+    FFN_DENSE, FFN_MOE, FFN_NONE,
+    MIXER_GQA, MIXER_GQA_LOCAL, MIXER_MAMBA, MIXER_MLA, MIXER_SHARED_GQA,
+    SHAPES, ExitConfig, InputShape, LayerSpec, MLAConfig, MoEConfig,
+    ModelConfig, SSMConfig, alternating_pattern, config_for_shape,
+    uniform_pattern, LONG_CONTEXT_WINDOW,
+)

@@ -1,0 +1,268 @@
+"""Config system for the GREEN-CODE reproduction framework.
+
+Every architecture is described by a :class:`ModelConfig`; the paper's early-exit
+technique is configured by :class:`ExitConfig`. Configs are frozen dataclasses so
+they are hashable and can key jit caches.
+
+Layers are described by a ``block_pattern``: a tuple of :class:`LayerSpec`
+(mixer, ffn) pairs, one per layer. The transformer composes consecutive
+repetitions of the smallest repeating unit into a scanned super-block so the
+lowered HLO is O(unit) rather than O(depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Mixer / FFN kinds
+# ---------------------------------------------------------------------------
+MIXER_GQA = "gqa"              # grouped-query attention (global)
+MIXER_GQA_LOCAL = "gqa_local"  # sliding-window attention
+MIXER_MLA = "mla"              # multi-head latent attention (MiniCPM3/DeepSeek style)
+MIXER_MAMBA = "mamba"          # Mamba2 SSD block
+MIXER_SHARED_GQA = "shared_gqa"  # zamba2-style shared-weight attention block
+
+FFN_DENSE = "dense"
+FFN_MOE = "moe"
+FFN_NONE = "none"              # e.g. mamba blocks carry their own expansion
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str
+    ffn: str
+
+    def __post_init__(self):
+        assert self.mixer in (MIXER_GQA, MIXER_GQA_LOCAL, MIXER_MLA, MIXER_MAMBA,
+                              MIXER_SHARED_GQA), self.mixer
+        assert self.ffn in (FFN_DENSE, FFN_MOE, FFN_NONE), self.ffn
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    num_experts_per_tok: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    router_aux_coef: float = 0.01
+    router_jitter: float = 0.0
+    train_capacity_factor: float = 1.25  # §Perf knob: expert buffer slack
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block configuration."""
+    state_dim: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    conv_dim: int = 4
+    chunk_size: int = 256
+    # number of SSD heads = d_model * expand // head_dim (derived)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class ExitConfig:
+    """GREEN-CODE early-exit configuration (paper §III-D)."""
+    enabled: bool = True
+    min_exit_layer: int = 4          # earliest exit point
+    first_half_stride: int = 2       # alternating layers in the first half
+    second_half_stride: int = 4      # every 4th layer in the second half
+    # LITE aggregated-loss weight budgets: (first half, second half, final layer)
+    budgets: Tuple[float, float, float] = (0.7, 0.2, 0.1)
+    decay: float = 0.9               # geometric decay ratio inside each group
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                   # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[LayerSpec, ...] = ()
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention options
+    rope_theta: float = 10000.0
+    positional: str = "rope"         # rope | learned | none
+    sliding_window: int = 4096       # window used by gqa_local mixers
+    attn_logit_softcap: float = 0.0  # 0 disables (gemma2: 50.)
+    final_logit_softcap: float = 0.0  # (gemma2: 30.)
+    qk_norm: bool = False
+    use_bias: bool = False           # OPT uses biases
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    activation: str = "silu"         # silu | gelu | relu
+    mlp_gated: bool = True           # SwiGLU-style gated MLP
+    tie_embeddings: bool = False
+    max_position: int = 1 << 20
+    # KV-cache storage: "compute" (= activation dtype) or "int8"
+    # (per-slot-per-head symmetric quantization; beyond-paper, §Perf)
+    kv_cache_dtype: str = "compute"
+    # full-seq attention sharding: "seq" (query positions over model axis,
+    # works for any head count) or "head" (flat heads over model axis with
+    # G-fold KV broadcast; needs num_heads % model == 0; §Perf C3)
+    attn_shard: str = "seq"
+    # substructure configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    # modality frontend stub: None | "audio" | "vision"
+    frontend: Optional[str] = None
+    frontend_tokens: int = 0         # number of prefix embedding positions
+    # early exit
+    exit: ExitConfig = field(default_factory=ExitConfig)
+    # source citation (model card / paper)
+    source: str = ""
+
+    def __post_init__(self):
+        if not self.block_pattern:
+            object.__setattr__(
+                self, "block_pattern",
+                tuple(LayerSpec(MIXER_GQA, FFN_DENSE) for _ in range(self.num_layers)))
+        assert len(self.block_pattern) == self.num_layers, (
+            f"{self.name}: pattern len {len(self.block_pattern)} != {self.num_layers}")
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks + head)."""
+        n = self.vocab_size * self.d_model  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        for spec in self.block_pattern:
+            n += self._mixer_params(spec.mixer) + self._ffn_params(spec.ffn)
+        # shared block counted once, subtract duplicates
+        n_shared = sum(1 for s in self.block_pattern if s.mixer == MIXER_SHARED_GQA)
+        if n_shared > 1:
+            n -= (n_shared - 1) * self._mixer_params(MIXER_SHARED_GQA)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params activated per token (MoE: only routed top-k + shared)."""
+        n = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        for spec in self.block_pattern:
+            n += self._mixer_params(spec.mixer)
+            if spec.ffn == FFN_MOE:
+                m = self.moe
+                per = 3 * self.d_model * m.d_ff_expert
+                n += per * (m.num_experts_per_tok + m.num_shared_experts)
+                n += self.d_model * m.num_experts  # router
+            elif spec.ffn == FFN_DENSE:
+                n += self._ffn_params(FFN_DENSE)
+        return n
+
+    def _mixer_params(self, mixer: str) -> int:
+        d = self.d_model
+        if mixer in (MIXER_GQA, MIXER_GQA_LOCAL, MIXER_SHARED_GQA):
+            return d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if mixer == MIXER_MLA:
+            m = self.mla
+            qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+            n = d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk_head
+            n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            n += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            n += self.num_heads * m.v_head_dim * d
+            return n
+        if mixer == MIXER_MAMBA:
+            s = self.ssm
+            d_in = d * s.expand
+            nheads = d_in // s.head_dim
+            # in_proj (z, x, B, C, dt) + out_proj
+            n = d * (2 * d_in + 2 * s.state_dim + nheads) + d_in * d
+            n += s.conv_dim * (d_in + 2 * s.state_dim)  # conv over x, B, C
+            n += 2 * nheads  # A_log, D
+            return n
+        raise ValueError(mixer)
+
+    def _ffn_params(self, ffn: str) -> int:
+        d = self.d_model
+        if ffn == FFN_DENSE:
+            mult = 3 if self.mlp_gated else 2
+            return mult * d * self.d_ff
+        if ffn == FFN_MOE:
+            m = self.moe
+            per = 3 * d * m.d_ff_expert
+            return per * (m.num_experts + m.num_shared_experts) + d * m.num_experts
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# Beyond-paper adaptation: window used by full-attention archs at long_500k so
+# that every (arch x shape) combination lowers (see DESIGN.md §4).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt a config for a given input shape.
+
+    For ``long_500k`` all global-attention mixers switch to sliding-window
+    attention (window ``LONG_CONTEXT_WINDOW``) so the KV cache stays bounded.
+    SSM mixers are untouched (constant state).
+    """
+    if shape.seq_len < 100_000:
+        return cfg
+    # shared_gqa and MLA keep their mixer ids (weights/cache layout are
+    # unchanged) and become windowed via the "+win" marker — the ring cache
+    # of size `window` plus the position mask implements the sliding window.
+    # Only plain full-attention GQA mixers are rewritten to gqa_local.
+    new_pattern = tuple(
+        LayerSpec(MIXER_GQA_LOCAL, s.ffn) if s.mixer == MIXER_GQA
+        else s for s in cfg.block_pattern)
+    return dataclasses.replace(
+        cfg, block_pattern=new_pattern,
+        sliding_window=min(cfg.sliding_window, LONG_CONTEXT_WINDOW),
+        name=cfg.name + "+win")
+
+
+# ---------------------------------------------------------------------------
+# helpers for building patterns
+# ---------------------------------------------------------------------------
+def uniform_pattern(n: int, mixer: str = MIXER_GQA, ffn: str = FFN_DENSE):
+    return tuple(LayerSpec(mixer, ffn) for _ in range(n))
+
+
+def alternating_pattern(n: int, specs):
+    """specs: sequence of LayerSpec cycled over n layers."""
+    return tuple(specs[i % len(specs)] for i in range(n))

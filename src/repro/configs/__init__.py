@@ -1,0 +1,49 @@
+"""Architecture registry: ``get_config("<arch-id>", variant="full"|"smoke")``.
+
+Ten assigned architectures (public-literature pool) plus the paper's own two
+models (llama32_3b, opt_2_7b). Each module defines ``full()`` and ``smoke()``;
+smoke variants are reduced same-family configs (2 layers, d_model<=512,
+<=4 experts) runnable on CPU.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m",
+    "zamba2-1.2b",
+    "granite-3-8b",
+    "command-r-35b",
+    "mamba2-1.3b",
+    "qwen2-moe-a2.7b",
+    "gemma2-9b",
+    "musicgen-medium",
+    "minicpm3-4b",
+    "pixtral-12b",
+    # paper's own models
+    "llama32-3b",
+    "opt-2.7b",
+]
+
+# ids assigned from the pool (excludes the paper's own two)
+ASSIGNED_ARCH_IDS = ARCH_IDS[:10]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(arch_id: str, variant: str = "full") -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    if variant == "full":
+        return mod.full()
+    if variant == "smoke":
+        return mod.smoke()
+    raise ValueError(f"variant must be full|smoke, got {variant!r}")
+
+
+def list_archs():
+    return list(ARCH_IDS)

@@ -1,0 +1,27 @@
+"""command-r-35b [dense] — 40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000.
+
+[hf:CohereForAI/c4ai-command-r-v01] GQA, no-bias.
+"""
+from repro.config import ModelConfig, uniform_pattern
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b", arch_type="dense",
+        num_layers=40, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=22528, vocab_size=256000,
+        block_pattern=uniform_pattern(40),
+        use_bias=False, tie_embeddings=True,
+        source="hf:CohereForAI/c4ai-command-r-v01",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-smoke", arch_type="dense",
+        num_layers=2, d_model=256, num_heads=8, num_kv_heads=2,
+        d_ff=512, vocab_size=1024,
+        block_pattern=uniform_pattern(2),
+        use_bias=False, tie_embeddings=True,
+        source="hf:CohereForAI/c4ai-command-r-v01",
+    )

@@ -1,0 +1,34 @@
+"""gemma2-9b [dense] — 42L d_model=3584 16H (GQA kv=8) head_dim=256 d_ff=14336.
+
+[arXiv:2408.00118] local(4096)/global alternating attention, logit softcaps.
+"""
+from repro.config import (FFN_DENSE, LayerSpec, MIXER_GQA, MIXER_GQA_LOCAL,
+                          ModelConfig, alternating_pattern)
+
+_ALT = (LayerSpec(MIXER_GQA_LOCAL, FFN_DENSE), LayerSpec(MIXER_GQA, FFN_DENSE))
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b", arch_type="dense",
+        num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8,
+        head_dim=256, d_ff=14336, vocab_size=256000,
+        block_pattern=alternating_pattern(42, _ALT),
+        sliding_window=4096,
+        attn_logit_softcap=50.0, final_logit_softcap=30.0,
+        activation="gelu", tie_embeddings=True,
+        source="arXiv:2408.00118",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=512,
+        block_pattern=alternating_pattern(2, _ALT),
+        sliding_window=64,
+        attn_logit_softcap=50.0, final_logit_softcap=30.0,
+        activation="gelu", tie_embeddings=True,
+        source="arXiv:2408.00118",
+    )

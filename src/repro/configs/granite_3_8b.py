@@ -1,0 +1,25 @@
+"""granite-3-8b [dense] — 40L d_model=4096 32H (GQA kv=8) d_ff=12800.
+
+[hf:ibm-granite/granite-3.0-2b-base] (granite-3.0 dense family)
+"""
+from repro.config import ModelConfig, uniform_pattern
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-8b", arch_type="dense",
+        num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=12800, vocab_size=49155,
+        block_pattern=uniform_pattern(40),
+        source="hf:ibm-granite/granite-3.0-2b-base",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab_size=512,
+        block_pattern=uniform_pattern(2),
+        source="hf:ibm-granite/granite-3.0-2b-base",
+    )

@@ -1,0 +1,30 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) MoE 40e top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base] (granite-3.0 MoE family)
+"""
+from repro.config import (FFN_MOE, MIXER_GQA, ModelConfig, MoEConfig,
+                          uniform_pattern)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m", arch_type="moe",
+        num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+        d_ff=512, vocab_size=49155,
+        block_pattern=uniform_pattern(32, MIXER_GQA, FFN_MOE),
+        moe=MoEConfig(num_experts=40, num_experts_per_tok=8, d_ff_expert=512),
+        tie_embeddings=True,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke", arch_type="moe",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=64, vocab_size=512,
+        block_pattern=uniform_pattern(2, MIXER_GQA, FFN_MOE),
+        moe=MoEConfig(num_experts=4, num_experts_per_tok=2, d_ff_expert=64),
+        tie_embeddings=True,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )

@@ -1,0 +1,43 @@
+"""llama32-3b — the paper's primary model (Llama 3.2 3B, 28 layers).
+
+[GREEN-CODE §III-C, Table II] 28L d_model=3072 24H (GQA kv=8) d_ff=8192.
+"""
+from repro.config import ModelConfig, uniform_pattern
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama32-3b", arch_type="dense",
+        num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+        d_ff=8192, vocab_size=128256,
+        block_pattern=uniform_pattern(28),
+        rope_theta=500000.0, tie_embeddings=True,
+        source="GREEN-CODE Table II / hf:meta-llama/Llama-3.2-3B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama32-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab_size=512,
+        block_pattern=uniform_pattern(2),
+        tie_embeddings=True,
+        source="GREEN-CODE Table II",
+    )
+
+
+def paper_mini(num_layers: int = 12, d_model: int = 256,
+               vocab_size: int = 2048) -> ModelConfig:
+    """Reduced same-family model used for the CPU paper-reproduction runs
+    (fine-tune + RL agent + threshold sweeps). Enough layers for the paper's
+    exit-point schedule to be non-trivial."""
+    return ModelConfig(
+        name=f"llama32-mini-{num_layers}L{d_model}", arch_type="dense",
+        num_layers=num_layers, d_model=d_model,
+        num_heads=max(4, d_model // 64), num_kv_heads=max(2, d_model // 128),
+        d_ff=d_model * 4, vocab_size=vocab_size,
+        block_pattern=uniform_pattern(num_layers),
+        tie_embeddings=True,
+        source="GREEN-CODE reduced-family variant",
+    )

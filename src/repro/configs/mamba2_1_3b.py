@@ -1,0 +1,32 @@
+"""mamba2-1.3b [ssm] — 48L d_model=2048, attn-free, ssm_state=128 (SSD).
+
+[arXiv:2405.21060] Mamba-2 / state-space duality.
+"""
+from repro.config import (FFN_NONE, MIXER_MAMBA, ModelConfig, SSMConfig,
+                          uniform_pattern)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b", arch_type="ssm",
+        num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        block_pattern=uniform_pattern(48, MIXER_MAMBA, FFN_NONE),
+        ssm=SSMConfig(state_dim=128, expand=2, head_dim=64),
+        positional="none",
+        tie_embeddings=True,
+        source="arXiv:2405.21060",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", arch_type="ssm",
+        num_layers=2, d_model=128, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=512,
+        block_pattern=uniform_pattern(2, MIXER_MAMBA, FFN_NONE),
+        ssm=SSMConfig(state_dim=16, expand=2, head_dim=32, chunk_size=32),
+        positional="none",
+        tie_embeddings=True,
+        source="arXiv:2405.21060",
+    )

@@ -1,0 +1,34 @@
+"""minicpm3-4b [dense/MLA] — 62L d_model=2560 40H d_ff=6400 vocab=73448, MLA.
+
+[hf:openbmb/MiniCPM3-4B] multi-head latent attention (DeepSeek-V2 style).
+"""
+from repro.config import (FFN_DENSE, MIXER_MLA, MLAConfig, ModelConfig,
+                          uniform_pattern)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b", arch_type="dense",
+        num_layers=62, d_model=2560, num_heads=40, num_kv_heads=40,
+        head_dim=96,  # qk_nope+qk_rope (64+32)
+        d_ff=6400, vocab_size=73448,
+        block_pattern=uniform_pattern(62, MIXER_MLA, FFN_DENSE),
+        mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                      qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64),
+        tie_embeddings=True,
+        source="hf:openbmb/MiniCPM3-4B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=48,
+        d_ff=256, vocab_size=512,
+        block_pattern=uniform_pattern(2, MIXER_MLA, FFN_DENSE),
+        mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                      qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32),
+        tie_embeddings=True,
+        source="hf:openbmb/MiniCPM3-4B",
+    )

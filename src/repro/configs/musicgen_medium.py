@@ -1,0 +1,31 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048.
+
+[arXiv:2306.05284] decoder-only over EnCodec tokens. The EnCodec conv
+frontend is a STUB: ``input_specs()`` provides precomputed frame embeddings
+(the allowed carve-out); we implement the decoder backbone.
+"""
+from repro.config import ModelConfig, uniform_pattern
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium", arch_type="audio",
+        num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24,
+        d_ff=6144, vocab_size=2048,
+        block_pattern=uniform_pattern(48),
+        activation="gelu", mlp_gated=False, norm="layernorm", use_bias=True,
+        frontend="audio", frontend_tokens=256,
+        source="arXiv:2306.05284",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke", arch_type="audio",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=256,
+        block_pattern=uniform_pattern(2),
+        activation="gelu", mlp_gated=False, norm="layernorm", use_bias=True,
+        frontend="audio", frontend_tokens=16,
+        source="arXiv:2306.05284",
+    )

@@ -1,0 +1,48 @@
+"""opt-2.7b — the paper's second model (OPT 2.7B, 32 layers).
+
+[GREEN-CODE §III-C, Table II] 32L d_model=2560 32H d_ff=10240, pre-LN
+layernorm, ReLU FFN, learned positions, biases.
+"""
+from repro.config import ModelConfig, uniform_pattern
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="opt-2.7b", arch_type="dense",
+        num_layers=32, d_model=2560, num_heads=32, num_kv_heads=32,
+        d_ff=10240, vocab_size=50272,
+        block_pattern=uniform_pattern(32),
+        positional="learned", norm="layernorm", activation="relu",
+        mlp_gated=False, use_bias=True, max_position=2048,
+        tie_embeddings=True,
+        source="GREEN-CODE Table II / hf:facebook/opt-2.7b",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="opt-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=512,
+        block_pattern=uniform_pattern(2),
+        positional="learned", norm="layernorm", activation="relu",
+        mlp_gated=False, use_bias=True, max_position=2048,
+        tie_embeddings=True,
+        source="GREEN-CODE Table II",
+    )
+
+
+def paper_mini(num_layers: int = 12, d_model: int = 256,
+               vocab_size: int = 2048) -> ModelConfig:
+    """Reduced same-family OPT variant for CPU paper-reproduction runs."""
+    return ModelConfig(
+        name=f"opt-mini-{num_layers}L{d_model}", arch_type="dense",
+        num_layers=num_layers, d_model=d_model,
+        num_heads=max(4, d_model // 64), num_kv_heads=max(4, d_model // 64),
+        d_ff=d_model * 4, vocab_size=vocab_size,
+        block_pattern=uniform_pattern(num_layers),
+        positional="learned", norm="layernorm", activation="relu",
+        mlp_gated=False, use_bias=True, max_position=8192,
+        tie_embeddings=True,
+        source="GREEN-CODE reduced-family variant",
+    )

@@ -1,0 +1,30 @@
+"""pixtral-12b [vlm] — 40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+
+[hf:mistralai/Pixtral-12B-2409] pixtral-ViT + mistral-nemo decoder. The ViT
+vision encoder + projector is a STUB: ``input_specs()`` provides precomputed
+patch embeddings; we implement the language decoder.
+"""
+from repro.config import ModelConfig, uniform_pattern
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", arch_type="vlm",
+        num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+        head_dim=128, d_ff=14336, vocab_size=131072,
+        block_pattern=uniform_pattern(40),
+        rope_theta=1_000_000.0,
+        frontend="vision", frontend_tokens=1024,
+        source="hf:mistralai/Pixtral-12B-2409",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-smoke", arch_type="vlm",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=512,
+        block_pattern=uniform_pattern(2),
+        frontend="vision", frontend_tokens=16,
+        source="hf:mistralai/Pixtral-12B-2409",
+    )

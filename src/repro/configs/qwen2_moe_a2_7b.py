@@ -1,0 +1,32 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (GQA kv=16), 60 routed top-4 + 4 shared.
+
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+"""
+from repro.config import (FFN_MOE, MIXER_GQA, ModelConfig, MoEConfig,
+                          uniform_pattern)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b", arch_type="moe",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=1408, vocab_size=151936,
+        block_pattern=uniform_pattern(24, MIXER_GQA, FFN_MOE),
+        moe=MoEConfig(num_experts=60, num_experts_per_tok=4,
+                      d_ff_expert=1408, num_shared_experts=4),
+        use_bias=True,  # qwen uses qkv bias; applied to attention projections
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-smoke", arch_type="moe",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=64, vocab_size=512,
+        block_pattern=uniform_pattern(2, MIXER_GQA, FFN_MOE),
+        moe=MoEConfig(num_experts=4, num_experts_per_tok=2,
+                      d_ff_expert=64, num_shared_experts=1),
+        use_bias=True,
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    )

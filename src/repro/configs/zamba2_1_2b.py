@@ -1,0 +1,43 @@
+"""zamba2-1.2b [hybrid] — 38L d_model=2048, Mamba2 backbone + shared attn blocks.
+
+[arXiv:2411.15242] Zamba2: one shared-weight attention(+MLP) block invoked
+periodically over a Mamba2 backbone. We invoke the shared block every 6th
+layer (6 invocations over 38 layers); per-invocation LoRA deltas of the
+original are omitted (DESIGN.md §7).
+"""
+from repro.config import (FFN_DENSE, FFN_NONE, LayerSpec, MIXER_MAMBA,
+                          MIXER_SHARED_GQA, ModelConfig, SSMConfig)
+
+
+def _pattern(n_layers: int, period: int):
+    specs = []
+    for i in range(n_layers):
+        if (i + 1) % period == 0:
+            specs.append(LayerSpec(MIXER_SHARED_GQA, FFN_DENSE))
+        else:
+            specs.append(LayerSpec(MIXER_MAMBA, FFN_NONE))
+    return tuple(specs)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b", arch_type="hybrid",
+        num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=32000,
+        block_pattern=_pattern(38, 6),
+        ssm=SSMConfig(state_dim=64, expand=2, head_dim=64),
+        tie_embeddings=True,
+        source="arXiv:2411.15242",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", arch_type="hybrid",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=512,
+        block_pattern=_pattern(2, 2),
+        ssm=SSMConfig(state_dim=16, expand=2, head_dim=32, chunk_size=32),
+        tie_embeddings=True,
+        source="arXiv:2411.15242",
+    )

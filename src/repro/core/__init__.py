@@ -1,0 +1,22 @@
+"""GREEN-CODE core: the paper's contribution.
+
+exit_points  — §III-D exit schedule
+lite_loss    — Eq. 1 aggregated fine-tuning loss (single LM head)
+controller   — exit controllers incl. the RL policy (§IV)
+early_exit   — dynamic early-exit generation loop
+energy       — TPU-adapted analytic energy model (§VI efficiency metrics)
+policy_net   — the small actor-critic network (Table III)
+
+Submodules are imported lazily to avoid a cycle with repro.models (the
+transformer needs the exit schedule; lite_loss needs the transformer head).
+"""
+import importlib
+
+__all__ = ["exit_points", "lite_loss", "controller", "early_exit", "energy",
+           "policy_net"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(name)

@@ -1,0 +1,110 @@
+"""Exit controllers: map a hidden state at an exit point to an exit
+decision.
+
+All controllers return a float in {0., 1.} per token (already thresholded —
+``decode_step`` treats > 0.5 as exit). Kinds:
+
+  * ``none``        never exit (baseline full model)
+  * ``fixed``       exit at a fixed exit-point index (paper §II experiment)
+  * ``confidence``  top-1 softmax probability of the shared LM head > tau
+                    (score-based baseline, CALM-style)
+  * ``entropy``     normalized entropy of the head distribution < tau
+  * ``policy``      the paper's RL agent: softmax(policy logits / temp)[EXIT]
+                    thresholded by T (paper §VI-B)
+
+The confidence/entropy controllers need head logits at intermediate layers;
+they use the fused exit-check kernel when enabled (kernels/exit_head).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import policy_net
+from repro.models.layers import apply_norm
+from repro.models.transformer import head_matrix
+
+Array = jax.Array
+ControllerFn = Callable[[Array, int], Optional[Array]]
+
+
+def make_none() -> ControllerFn:
+    return lambda h, i: None
+
+
+def make_fixed(exit_idx: int) -> ControllerFn:
+    """Exit every token at exit point ``exit_idx`` (0-based segment index)."""
+
+    def ctrl(h: Array, i: int):
+        return jnp.full((h.shape[0],), 1.0 if i >= exit_idx else 0.0)
+
+    return ctrl
+
+
+def _head_stats(params, cfg: ModelConfig, h: Array, use_kernel: bool):
+    """(top1_prob, normalized_entropy) of the shared LM head on h [B, D]."""
+    if use_kernel:
+        from repro.kernels.ops import exit_check
+        hn = apply_norm(params["final_norm"], h)
+        top1, lse, ent = exit_check(hn, head_matrix(params, cfg),
+                                    cfg.final_logit_softcap)
+        p1 = jnp.exp(top1 - lse)
+        ent_n = ent / jnp.log(cfg.vocab_size)
+        return p1, ent_n
+    from repro.models.transformer import lm_logits
+    logits = lm_logits(params, cfg, h[:, None, :])[:, 0, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    p1 = p.max(axis=-1)
+    ent = -(p * logp).sum(axis=-1) / jnp.log(cfg.vocab_size)
+    return p1, ent
+
+
+def make_confidence(params, cfg: ModelConfig, tau: float,
+                    use_kernel: bool = False) -> ControllerFn:
+    def ctrl(h: Array, i: int):
+        p1, _ = _head_stats(params, cfg, h, use_kernel)
+        return (p1 > tau).astype(jnp.float32)
+
+    return ctrl
+
+
+def make_entropy(params, cfg: ModelConfig, tau: float,
+                 use_kernel: bool = False) -> ControllerFn:
+    def ctrl(h: Array, i: int):
+        _, ent = _head_stats(params, cfg, h, use_kernel)
+        return (ent < tau).astype(jnp.float32)
+
+    return ctrl
+
+
+def make_policy(agent_params, threshold: float,
+                temperature: float = 1.0) -> ControllerFn:
+    """The paper's RL controller: exit iff softmax(pi(h))[EXIT] > T."""
+
+    def ctrl(h: Array, i: int):
+        p_exit = policy_net.exit_probability(agent_params, h, temperature)
+        return (p_exit > threshold).astype(jnp.float32)
+
+    return ctrl
+
+
+def make_controller(kind: str, *, params=None, cfg: ModelConfig = None,
+                    agent_params=None, threshold: float = 0.9,
+                    exit_idx: int = 0, temperature: float = 1.0,
+                    use_kernel: bool = False) -> ControllerFn:
+    if kind == "none":
+        return make_none()
+    if kind == "fixed":
+        return make_fixed(exit_idx)
+    if kind == "confidence":
+        return make_confidence(params, cfg, threshold, use_kernel)
+    if kind == "entropy":
+        return make_entropy(params, cfg, threshold, use_kernel)
+    if kind == "policy":
+        return make_policy(agent_params, threshold, temperature)
+    raise ValueError(f"unknown controller kind {kind!r}")

@@ -1,0 +1,77 @@
+"""Autoregressive generation with dynamic early exit.
+
+``generate`` runs prefill (always full-depth — the paper only exits during
+token generation) followed by a ``lax.scan`` over early-exit decode steps.
+Per-token exit layers are recorded so the energy model can account savings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.transformer import decode_step, lm_logits, prefill
+
+Array = jax.Array
+
+
+def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
+             controller=None, *, max_len: Optional[int] = None,
+             temperature: float = 0.0, key: Optional[Array] = None,
+             prefix_embed: Optional[Array] = None):
+    """Greedy (or sampled) generation.
+
+    prompt: [B, S0] token ids. Returns dict with
+      tokens      [B, steps]   generated ids
+      exit_layers [B, steps]   layers used per generated token
+      logprobs    [B, steps]   chosen-token log-probs (full-precision head)
+    """
+    B, S0 = prompt.shape
+    n_prefix = prefix_embed.shape[1] if prefix_embed is not None else 0
+    total0 = S0 + n_prefix
+    max_len = max(max_len or 0, total0 + steps)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    h, caches, _ = prefill(params, cfg, prompt, prefix_embed,
+                           max_len=max_len)
+    logits0 = lm_logits(params, cfg, h[:, -1:, :])[:, 0]
+
+    def pick(logits, k):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        if temperature <= 0.0:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            tok = jax.random.categorical(k, logits / temperature, axis=-1)
+        return tok, jnp.take_along_axis(logp, tok[:, None], 1)[:, 0]
+
+    key, k0 = jax.random.split(key)
+    tok0, lp0 = pick(logits0, k0)
+
+    def step(carry, k):
+        tok, caches, pos = carry
+        logits, caches, info = decode_step(params, cfg, tok, caches, pos,
+                                           controller)
+        nxt, lp = pick(logits, k)
+        return (nxt, caches, pos + 1), (tok, info["exit_layer"], lp)
+
+    if steps > 1:
+        keys = jax.random.split(key, steps - 1)
+        pos0 = jnp.full((B,), total0, jnp.int32)
+        (last_tok, caches, _), (toks, exits, lps) = jax.lax.scan(
+            step, (tok0, caches, pos0), keys)
+        # scan emitted the *input* token of each step; append the last output
+        tokens = jnp.concatenate([toks.T, last_tok[:, None]], axis=1)
+        # first generated token comes from full-depth prefill
+        exit_layers = jnp.concatenate(
+            [jnp.full((B, 1), cfg.num_layers, jnp.int32), exits.T], axis=1)
+        logprobs = jnp.concatenate([lp0[:, None], lps.T], axis=1)
+    else:
+        tokens = tok0[:, None]
+        exit_layers = jnp.full((B, 1), cfg.num_layers, jnp.int32)
+        logprobs = lp0[:, None]
+
+    return {"tokens": tokens, "exit_layers": exit_layers,
+            "logprobs": logprobs}

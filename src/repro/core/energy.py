@@ -1,0 +1,192 @@
+"""Analytic TPU energy model (hardware adaptation of the paper's Zeus/nvml
+GPU measurements — see DESIGN.md §2).
+
+The paper measures wall-plug GPU energy. This runtime is CPU-only with a
+TPU-v5e target, so energy is *modeled*: per-layer FLOPs and HBM bytes are
+derived from the architecture config, execution time is the roofline
+``max(flops/peak, bytes/bw)``, and energy integrates a two-part power model
+
+    E = T_exec · (P_static + P_dyn · util)
+
+with util = compute-roofline fraction. The hardware-independent metric the
+paper also reports — layers used/skipped per token — is exact.
+
+Early exit accounting: a token that exits at layer ℓ saves the full cost of
+layers ℓ+1..N *except* the K/V-projection + cache-write cost of those layers
+(CALM-style propagation keeps the cache complete, paper §VI-G).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (FFN_MOE, FFN_NONE, MIXER_MAMBA, MIXER_MLA,
+                          ModelConfig)
+
+# TPU v5e constants (also used by the roofline analysis)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+P_STATIC_W = 90.0            # idle/static chip power
+P_DYN_W = 110.0              # additional power at full utilization
+
+
+@dataclass(frozen=True)
+class LayerCost:
+    flops: float             # per-token FLOPs for this layer
+    bytes: float             # per-token HBM bytes (weights + cache traffic)
+    kv_flops: float          # K/V projection FLOPs (paid even when skipped)
+    kv_bytes: float          # K/V weight + cache-write bytes (paid when skipped)
+
+
+def _bytes_per_param(dtype_bytes: float = 2.0) -> float:
+    return dtype_bytes
+
+
+def layer_cost(cfg: ModelConfig, layer_idx: int, ctx_len: int,
+               dtype_bytes: float = 2.0) -> LayerCost:
+    """Decode-step cost of one layer for one token with ``ctx_len`` cache."""
+    spec = cfg.block_pattern[layer_idx]
+    d = cfg.d_model
+    bp = dtype_bytes
+    fl = 0.0
+    by = 0.0
+    kv_fl = 0.0
+    kv_by = 0.0
+
+    if spec.mixer == MIXER_MAMBA:
+        s = cfg.ssm
+        d_in = d * s.expand
+        H = d_in // s.head_dim
+        n_proj = d * (2 * d_in + 2 * s.state_dim + H) + d_in * d
+        fl += 2 * n_proj + 2 * H * s.head_dim * s.state_dim * 2
+        by += n_proj * bp + H * s.head_dim * s.state_dim * 4 * 2  # state rw
+        # SSM state update is the "cache write" analogue
+        kv_fl += 2 * H * s.head_dim * s.state_dim
+        kv_by += H * s.head_dim * s.state_dim * 4 * 2
+    elif spec.mixer == MIXER_MLA:
+        m = cfg.mla
+        H = cfg.num_heads
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        n_q = d * m.q_lora_rank + m.q_lora_rank * H * qk_head
+        n_kv = d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        n_o = H * m.v_head_dim * d
+        n_absorb = H * m.kv_lora_rank * (m.qk_nope_head_dim + m.v_head_dim)
+        fl += 2 * (n_q + n_kv + n_o + n_absorb)
+        # latent-space attention over the cache
+        fl += 2 * ctx_len * H * (m.kv_lora_rank + m.qk_rope_head_dim) * 2
+        by += (n_q + n_kv + n_o) * bp
+        by += ctx_len * (m.kv_lora_rank + m.qk_rope_head_dim) * bp  # cache read
+        kv_fl += 2 * n_kv
+        kv_by += n_kv * bp + (m.kv_lora_rank + m.qk_rope_head_dim) * bp
+    else:  # gqa variants
+        from repro.models.transformer import _window_for
+        eff_ctx = min(ctx_len, _window_for(cfg, spec) or ctx_len)
+        n_qo = d * cfg.q_dim + cfg.q_dim * d
+        n_kv = 2 * d * cfg.kv_dim
+        fl += 2 * (n_qo + n_kv)
+        fl += 2 * eff_ctx * cfg.num_heads * cfg.head_dim * 2   # scores + AV
+        by += (n_qo + n_kv) * bp
+        by += eff_ctx * 2 * cfg.kv_dim * bp                    # cache read
+        kv_fl += 2 * n_kv
+        kv_by += n_kv * bp + 2 * cfg.kv_dim * bp               # cache write
+
+    if spec.ffn == FFN_MOE:
+        m = cfg.moe
+        act = m.num_experts_per_tok + m.num_shared_experts
+        n_ffn = 3 * d * m.d_ff_expert * act + d * m.num_experts
+        fl += 2 * n_ffn
+        by += n_ffn * bp
+    elif spec.ffn != FFN_NONE:
+        mult = 3 if cfg.mlp_gated else 2
+        n_ffn = mult * d * cfg.d_ff
+        fl += 2 * n_ffn
+        by += n_ffn * bp
+
+    return LayerCost(fl, by, kv_fl, kv_by)
+
+
+def head_cost(cfg: ModelConfig, dtype_bytes: float = 2.0):
+    n = cfg.d_model * cfg.vocab_size
+    return 2.0 * n, n * dtype_bytes
+
+
+def stack_costs(cfg: ModelConfig, ctx_len: int) -> list[LayerCost]:
+    return [layer_cost(cfg, i, ctx_len) for i in range(cfg.num_layers)]
+
+
+def _exec_time(flops: float, bytes_: float) -> float:
+    return max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+
+
+def _energy(flops: float, bytes_: float) -> float:
+    t = _exec_time(flops, bytes_)
+    util = (flops / PEAK_FLOPS) / max(t, 1e-30)
+    return t * (P_STATIC_W + P_DYN_W * util)
+
+
+def decode_token_energy(cfg: ModelConfig, ctx_len: int,
+                        exit_layer) -> np.ndarray:
+    """Energy (J) per token given its exit layer (1-indexed #layers used).
+
+    ``exit_layer`` may be an int or an array. Skipped layers pay only the
+    K/V-propagation cost; the LM head is always paid once.
+    """
+    costs = stack_costs(cfg, ctx_len)
+    h_fl, h_by = head_cost(cfg)
+    exit_layer = np.asarray(exit_layer)
+    cum_fl = np.cumsum([c.flops for c in costs])
+    cum_by = np.cumsum([c.bytes for c in costs])
+    tot_kv_fl = np.cumsum([c.kv_flops for c in costs])
+    tot_kv_by = np.cumsum([c.kv_bytes for c in costs])
+    N = cfg.num_layers
+    el = np.clip(exit_layer, 1, N)
+    used_fl = cum_fl[el - 1] + (tot_kv_fl[N - 1] - tot_kv_fl[el - 1])
+    used_by = cum_by[el - 1] + (tot_kv_by[N - 1] - tot_kv_by[el - 1])
+    vec = np.vectorize(lambda f, b: _energy(f + h_fl, b + h_by))
+    return vec(used_fl, used_by)
+
+
+def full_token_energy(cfg: ModelConfig, ctx_len: int) -> float:
+    return float(decode_token_energy(cfg, ctx_len, cfg.num_layers))
+
+
+def controller_overhead_energy(cfg: ModelConfig, n_checks,
+                               hidden: int = 64, n_hidden: int = 2,
+                               with_head_check: bool = False,
+                               ctx_len: int = 1) -> np.ndarray:
+    """Energy of the exit controller itself (paper §VI-H overhead analysis).
+
+    Policy MLP: d_model -> hidden^n -> 2 per check; optionally plus a fused
+    LM-head confidence check (the expensive part the Pallas kernel targets).
+    """
+    n_checks = np.asarray(n_checks)
+    mlp_fl = 2 * (cfg.d_model * hidden + (n_hidden - 1) * hidden * hidden
+                  + hidden * 2)
+    mlp_by = (cfg.d_model * hidden + (n_hidden - 1) * hidden * hidden
+              + hidden * 2) * 2.0
+    fl, by = mlp_fl, mlp_by
+    if with_head_check:
+        h_fl, h_by = head_cost(cfg)
+        fl, by = fl + h_fl, by + h_by
+    vec = np.vectorize(lambda n: _energy(n * fl, n * by))
+    return vec(n_checks)
+
+
+def summarize_exit_energy(cfg: ModelConfig, ctx_len: int,
+                          exit_layers: np.ndarray) -> dict:
+    """Aggregate energy/latency stats for a batch of per-token exit layers."""
+    exit_layers = np.asarray(exit_layers).reshape(-1)
+    e = decode_token_energy(cfg, ctx_len, exit_layers)
+    e_full = full_token_energy(cfg, ctx_len)
+    layers_used = exit_layers.mean()
+    return {
+        "mean_energy_j": float(e.mean()),
+        "full_energy_j": float(e_full),
+        "energy_saving_frac": float(1.0 - e.mean() / e_full),
+        "mean_layers_used": float(layers_used),
+        "layers_skipped_frac": float(1.0 - layers_used / cfg.num_layers),
+        "n_tokens": int(exit_layers.size),
+    }

@@ -1,0 +1,42 @@
+"""Exit-point schedule (paper §III-D).
+
+Rules (verbatim from the paper):
+  * earliest exit at layer 4 (1-indexed layers);
+  * first half of the model: exits on alternating layers (every 2nd);
+  * second half: exits every 4th layer;
+  * the final layer is always an implicit exit (normal full forward).
+
+For Llama-3.2-3B (28 layers) this yields 9 exit points and for OPT-2.7B
+(32 layers) 10 exit points, matching the paper's counts.
+
+``exit_points(cfg)`` returns the *intermediate* exit layers (excluding the
+final layer). ``segment_boundaries`` adds the final layer, giving the
+boundaries the transformer uses to place scan segments so per-exit hidden
+states fall out of the layer scan for free.
+"""
+from __future__ import annotations
+
+from repro.config import ExitConfig, ModelConfig
+
+
+def exit_points_for(num_layers: int, ec: ExitConfig) -> tuple[int, ...]:
+    """1-indexed intermediate exit layers per the paper's rule."""
+    half = num_layers // 2
+    pts = list(range(ec.min_exit_layer, half + 1, ec.first_half_stride))
+    start = pts[-1] + ec.second_half_stride if pts else ec.min_exit_layer
+    pts += list(range(start, num_layers, ec.second_half_stride))
+    # final layer is the implicit last exit, not an "early" exit
+    return tuple(p for p in pts if p < num_layers)
+
+
+def exit_points(cfg: ModelConfig) -> tuple[int, ...]:
+    return exit_points_for(cfg.num_layers, cfg.exit)
+
+
+def segment_boundaries(cfg: ModelConfig) -> tuple[int, ...]:
+    """Exit layers + the final layer: segment ends for the layer scan."""
+    return exit_points(cfg) + (cfg.num_layers,)
+
+
+def num_exits(cfg: ModelConfig) -> int:
+    return len(exit_points(cfg))

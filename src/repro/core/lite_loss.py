@@ -1,0 +1,94 @@
+"""LITE aggregated loss (paper Eq. 1 + §III-D weight schedule).
+
+``Loss = Σ w_i · loss_i / Σ w_i`` over the exit layers plus the final layer,
+where ``loss_i`` is the next-token cross-entropy of decoding layer *i*'s
+hidden state through the single shared LM head.
+
+Weights (paper §III-D): exit layers are split into first-half and
+second-half groups with budgets α = (0.7, 0.2); the final layer gets a fixed
+α = 0.1. Within each group the weights follow a geometric sequence with
+decay r = 0.9, highest weight at the *earliest* exit, normalized to the
+group budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.exit_points import exit_points
+from repro.models.transformer import lm_logits
+
+Array = jax.Array
+
+
+def lite_weights(cfg: ModelConfig) -> tuple[tuple[int, ...], jnp.ndarray]:
+    """Returns (layers, weights): 1-indexed exit layers + final layer, and
+    the normalized w_i vector (sums to 1)."""
+    ec = cfg.exit
+    pts = exit_points(cfg)
+    half = cfg.num_layers // 2
+    first = [p for p in pts if p <= half]
+    second = [p for p in pts if p > half]
+    b1, b2, b_final = ec.budgets
+
+    def group_w(n, budget):
+        if n == 0:
+            return []
+        r = ec.decay ** jnp.arange(n)          # highest weight earliest
+        return list(budget * r / r.sum())
+
+    w = group_w(len(first), b1) + group_w(len(second), b2) + [b_final]
+    w = jnp.asarray(w, jnp.float32)
+    return tuple(pts) + (cfg.num_layers,), w / w.sum()
+
+
+def token_ce(logits: Array, labels: Array, mask: Array | None = None):
+    """Mean next-token CE. logits: [B, S, V]; labels: [B, S] (already
+    shifted); mask: [B, S] 1 = count.
+
+    The f32 upcast feeds ONLY the logsumexp reduce (single consumer -> XLA
+    fuses the convert into the reduction loop instead of materializing a
+    [B, S, V] f32 copy); the label gather runs on the original dtype."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0].astype(jnp.float32)
+    ce = lse - ll
+    if mask is None:
+        return ce.mean()
+    m = mask.astype(jnp.float32)
+    return (ce * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def lite_loss(params, cfg: ModelConfig, exit_hiddens, labels: Array,
+              mask: Array | None = None, *, intermediate_stride: int = 1):
+    """Aggregated LITE loss over the per-segment hidden states.
+
+    ``exit_hiddens``: list of [B, S, D], one per segment boundary (last =
+    final layer), as returned by ``transformer.forward``. Each is decoded
+    through the shared LM head (no extra heads — the paper's core point).
+
+    ``intermediate_stride`` > 1 evaluates the *intermediate* boundaries'
+    CE on every stride-th position only (the final layer always uses all
+    positions) — a beyond-paper optimization cutting the dominant LM-head
+    FLOPs of the LITE step by ~n_exits/stride while keeping an unbiased
+    estimate of each layer's loss. Paper-faithful = 1.
+
+    Returns (loss, per_layer_losses [n_exits+1]).
+    """
+    layers, w = lite_weights(cfg)
+    assert len(exit_hiddens) == len(layers), (
+        f"{len(exit_hiddens)} hiddens vs {len(layers)} LITE layers")
+    s = max(1, intermediate_stride)
+    losses = []
+    for i, h in enumerate(exit_hiddens):
+        last = i == len(exit_hiddens) - 1
+        if last or s == 1:
+            logits = lm_logits(params, cfg, h)
+            losses.append(token_ce(logits, labels, mask))
+        else:
+            logits = lm_logits(params, cfg, h[:, ::s])
+            losses.append(token_ce(logits, labels[:, ::s],
+                                   None if mask is None else mask[:, ::s]))
+    per_layer = jnp.stack(losses)
+    return jnp.sum(per_layer * w), per_layer

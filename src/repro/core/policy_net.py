@@ -1,0 +1,59 @@
+"""Small actor-critic network (paper Table III: 1-2 hidden layers, 32/64
+units). Shared torso, separate policy (2 actions: CONTINUE=0, EXIT=1) and
+value heads. Pure functional params, used by both PPO training and the
+inference-time controller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+CONTINUE, EXIT = 0, 1
+
+
+def init_policy(key, d_in: int, hidden: tuple[int, ...] = (64, 64)):
+    ks = jax.random.split(key, len(hidden) + 2)
+    p = {"layers": []}
+    prev = d_in
+    for i, h in enumerate(hidden):
+        w = jax.random.normal(ks[i], (prev, h)) * (2.0 / prev) ** 0.5
+        p["layers"].append({"w": w, "b": jnp.zeros((h,))})
+        prev = h
+    p["pi"] = {"w": jax.random.normal(ks[-2], (prev, 2)) * 0.01,
+               "b": jnp.zeros((2,))}
+    p["v"] = {"w": jax.random.normal(ks[-1], (prev, 1)) * 1.0,
+              "b": jnp.zeros((1,))}
+    return p
+
+
+def _torso(p, x: Array) -> Array:
+    h = x.astype(jnp.float32)
+    # normalize the hidden state (LLM activations vary wildly in scale)
+    h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6) \
+        * jnp.sqrt(h.shape[-1])
+    for layer in p["layers"]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    return h
+
+
+def policy_logits(p, x: Array) -> Array:
+    h = _torso(p, x)
+    return h @ p["pi"]["w"] + p["pi"]["b"]
+
+
+def value(p, x: Array) -> Array:
+    h = _torso(p, x)
+    return (h @ p["v"]["w"] + p["v"]["b"])[..., 0]
+
+
+def policy_value(p, x: Array):
+    h = _torso(p, x)
+    return h @ p["pi"]["w"] + p["pi"]["b"], (h @ p["v"]["w"] + p["v"]["b"])[..., 0]
+
+
+def exit_probability(p, x: Array, temperature: float = 1.0) -> Array:
+    """Softmax(logits / temp)[EXIT] — the quantity thresholded by T."""
+    logits = policy_logits(p, x) / max(temperature, 1e-6)
+    return jax.nn.softmax(logits, axis=-1)[..., EXIT]

@@ -1,0 +1,4 @@
+from repro.data.corpus import CodeGenerator, build_corpus  # noqa: F401
+from repro.data.tokenizer import CodeTokenizer  # noqa: F401
+from repro.data.pipeline import (CodeCompletionDataset, pack_sequences,  # noqa
+                                 sample_context_split)

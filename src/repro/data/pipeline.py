@@ -1,0 +1,107 @@
+"""Dataset pipeline: tokenize -> split -> pack -> batch.
+
+Mirrors the paper's setup (§III-B, §VI-C): whole code files, train/valid/
+test splits, packing of short samples to a maximum sequence length, and the
+context-fraction protocol — the first ``frac`` of a file's tokens are the
+prompt, the following tokens the completion target.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.data.corpus import build_corpus
+from repro.data.tokenizer import EOS, PAD, CodeTokenizer
+
+
+def pack_sequences(token_lists: list[list[int]], seq_len: int,
+                   pad_id: int = PAD, eos_id: int = EOS) -> np.ndarray:
+    """Greedy packing: concatenate samples (EOS-separated), emit fixed-size
+    rows. Long samples are split across rows; the tail row is padded."""
+    buf: list[int] = []
+    rows = []
+    for toks in token_lists:
+        buf.extend(toks)
+        buf.append(eos_id)
+        while len(buf) >= seq_len:
+            rows.append(buf[:seq_len])
+            buf = buf[seq_len:]
+    if buf:
+        rows.append(buf + [pad_id] * (seq_len - len(buf)))
+    return np.asarray(rows, np.int32)
+
+
+def sample_context_split(rng: np.random.Generator, n_tokens: int,
+                         lo: float = 0.2, hi: float = 0.6) -> int:
+    """Paper §IV-F: context fraction sampled uniformly from [lo, hi]."""
+    frac = rng.uniform(lo, hi)
+    return max(1, min(n_tokens - 2, int(n_tokens * frac)))
+
+
+@dataclass
+class CodeCompletionDataset:
+    """End-to-end dataset: synthetic (or real) corpus + tokenizer + splits."""
+    language: str = "java"
+    n_files: int = 400
+    seq_len: int = 512
+    vocab_size: int = 2048
+    seed: int = 0
+    path: str | None = None
+
+    def __post_init__(self):
+        files = build_corpus(self.language, self.n_files, self.seed,
+                             self.path)
+        rng = np.random.default_rng(self.seed)
+        order = rng.permutation(len(files))
+        n_train = int(len(files) * 0.8)
+        n_valid = int(len(files) * 0.1)
+        self.tokenizer = CodeTokenizer.train(
+            [files[i] for i in order[:n_train]], self.vocab_size)
+        self._splits = {}
+        bounds = {"train": order[:n_train],
+                  "valid": order[n_train:n_train + n_valid],
+                  "test": order[n_train + n_valid:]}
+        for name, idx in bounds.items():
+            toks = [self.tokenizer.encode(files[i]) for i in idx]
+            self._splits[name] = toks
+        self.files = files
+
+    def tokens(self, split: str) -> list[list[int]]:
+        return self._splits[split]
+
+    def packed(self, split: str) -> np.ndarray:
+        return pack_sequences(self.tokens(split), self.seq_len)
+
+    def batches(self, split: str, batch_size: int, *, epochs: int = 1,
+                seed: int = 0, drop_last: bool = True):
+        """Yield (tokens [B, S], labels [B, S], mask [B, S]) numpy batches
+        for next-token training (labels = tokens shifted left)."""
+        packed = self.packed(split)
+        rng = np.random.default_rng(seed)
+        for _ in range(epochs):
+            order = rng.permutation(len(packed))
+            for i in range(0, len(order) - (batch_size - 1 if drop_last
+                                            else 0), batch_size):
+                rows = packed[order[i: i + batch_size]]
+                if len(rows) < batch_size and drop_last:
+                    break
+                toks = rows[:, :-1]
+                labels = rows[:, 1:]
+                mask = (labels != PAD).astype(np.float32)
+                yield toks, labels, mask
+
+    def completion_tasks(self, split: str, n: int, *, seed: int = 0,
+                         ctx_lo: float = 0.2, ctx_hi: float = 0.6,
+                         max_context: int = 512):
+        """Paper §VI-C evaluation protocol: (context_ids, target_ids) pairs
+        with the context a sampled fraction of the file."""
+        rng = np.random.default_rng(seed)
+        toks = [t for t in self.tokens(split) if len(t) >= 16]
+        tasks = []
+        for i in range(n):
+            t = toks[int(rng.integers(len(toks)))]
+            cut = sample_context_split(rng, len(t), ctx_lo, ctx_hi)
+            ctx = t[max(0, cut - max_context): cut]
+            tasks.append((ctx, t[cut:]))
+        return tasks

@@ -1,0 +1,73 @@
+"""Deterministic code tokenizer: word/symbol level with byte fallback.
+
+Splits source into identifiers/numbers/symbols/whitespace runs; the
+vocabulary is built from a corpus sample (most frequent tokens first) with
+single-byte fallback entries so any string round-trips exactly.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+_TOKEN_RE = re.compile(
+    r"[A-Za-z_][A-Za-z_0-9]*|\d+|\n|    |[^\sA-Za-z_0-9]| |\s")
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+_SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+
+def _lex(text: str) -> list[str]:
+    return _TOKEN_RE.findall(text)
+
+
+class CodeTokenizer:
+    def __init__(self, vocab: list[str]):
+        self.vocab = list(vocab)
+        self.tok2id = {t: i for i, t in enumerate(self.vocab)}
+        self.byte_base = len(self.vocab)
+
+    @property
+    def vocab_size(self) -> int:
+        return self.byte_base + 256
+
+    @classmethod
+    def train(cls, corpus: list[str], vocab_size: int = 2048
+              ) -> "CodeTokenizer":
+        counts = Counter()
+        for text in corpus:
+            counts.update(_lex(text))
+        budget = vocab_size - len(_SPECIALS) - 256
+        most = [t for t, _ in counts.most_common(budget)]
+        return cls(_SPECIALS + most)
+
+    def encode(self, text: str, add_bos: bool = False,
+               add_eos: bool = False) -> list[int]:
+        ids = [BOS] if add_bos else []
+        for tok in _lex(text):
+            i = self.tok2id.get(tok)
+            if i is not None:
+                ids.append(i)
+            else:
+                ids.extend(self.byte_base + b for b in tok.encode("utf-8"))
+        if add_eos:
+            ids.append(EOS)
+        return ids
+
+    def decode(self, ids) -> str:
+        out = []
+        byte_buf = bytearray()
+        for i in ids:
+            i = int(i)
+            if i >= self.vocab_size:
+                continue  # model vocab may be padded beyond the tokenizer's
+            if i >= self.byte_base:
+                byte_buf.append(i - self.byte_base)
+                continue
+            if byte_buf:
+                out.append(byte_buf.decode("utf-8", errors="replace"))
+                byte_buf = bytearray()
+            if i >= len(_SPECIALS):
+                out.append(self.vocab[i])
+        if byte_buf:
+            out.append(byte_buf.decode("utf-8", errors="replace"))
+        return "".join(out)

@@ -1,0 +1,112 @@
+"""Flash-decode GQA kernel for single-token decode against a ring cache.
+
+Decode attention is memory-bound: the whole KV cache streams HBM -> VMEM
+once per step. The kernel tiles the cache sequence dimension, keeping the
+running (max, denom, acc) flash statistics in VMEM scratch, and applies the
+ring-buffer position mask (kv_pos / current pos / sliding window) inside the
+tile so masked slots cost no extra HBM traffic.
+
+Grid: (B, S/bS) with the sequence dimension sequential ("arbitrary").
+Insert-then-attend convention: the current token's K/V is already in the
+cache; causal masking is by absolute position (kv_pos <= pos).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, kvp_ref, o_ref,
+            m_s, l_s, acc_s, *, window: int, softcap: float, scale: float):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # [KH, G, d]
+    k = k_ref[0].astype(jnp.float32)                # [bS, KH, d]
+    v = v_ref[0].astype(jnp.float32)                # [bS, KH, d]
+    kvp = kvp_ref[0]                                # [bS]
+    pos = pos_ref[0]                                # scalar
+
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)         # [KH, G, bS]
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (kvp >= 0) & (kvp <= pos)
+    if window and window > 0:
+        mask &= kvp > (pos - window)
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, s.max(axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[..., None])               # [KH, G, bS]
+    l_s[...] = l_s[...] * alpha + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)         # [KH, G, d]
+    acc_s[...] = acc_s[...] * alpha[..., None] + pv
+    m_s[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0] = (acc_s[...] / denom[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_s",
+                                             "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_pos: jax.Array, pos: jax.Array, *, window: int = 0,
+                 softcap: float = 0.0, block_s: int = 512,
+                 interpret: bool = True):
+    """Single-token GQA decode. See ref.flash_decode_ref.
+
+    q: [B, KH, G, d]; k, v: [B, S, KH, d]; kv_pos: [B, S]; pos: [B].
+    """
+    B, KH, G, d = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    pad_s = (-S) % bs
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_s)), constant_values=-1)
+    Sp = S + pad_s
+    grid = (B, Sp // bs)
+    kernel = functools.partial(_kernel, window=window, softcap=softcap,
+                               scale=d ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, KH, G, d), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KH, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, KH, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, KH, G, d), lambda i, j: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((KH, G), jnp.float32),
+            pltpu.VMEM((KH, G), jnp.float32),
+            pltpu.VMEM((KH, G, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, q, k, v, kv_pos)
+    return out

@@ -1,0 +1,43 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy: kernels run in interpret mode on CPU (this container) and
+compiled mode on real TPU; set ``REPRO_KERNELS=ref`` to force the pure-jnp
+oracles (useful for debugging) or ``REPRO_KERNELS=kernel`` to force the
+Pallas path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attn import flash_decode as _flash_decode
+from repro.kernels.exit_head import exit_check as _exit_check
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+_MODE = os.environ.get("REPRO_KERNELS", "kernel")
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def exit_check(h, w, softcap: float = 0.0):
+    """Fused LM-head exit statistics: (top1_logit, lse, entropy)."""
+    if _MODE == "ref":
+        return _ref.exit_check_ref(h, w, softcap)
+    return _exit_check(h, w, softcap, interpret=_INTERPRET)
+
+
+def flash_decode(q, k, v, kv_pos, pos, *, window: int = 0,
+                 softcap: float = 0.0):
+    """Single-token GQA decode against a ring cache (insert-then-attend)."""
+    if _MODE == "ref":
+        return _ref.flash_decode_ref(q, k, v, kv_pos, pos, window, softcap)
+    return _flash_decode(q, k, v, kv_pos, pos, window=window,
+                         softcap=softcap, interpret=_INTERPRET)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 256):
+    """Chunked SSD scan -> (y, h_final)."""
+    if _MODE == "ref":
+        return _ref.ssd_scan_ref(x, dt, A, B, C, chunk)
+    return _ssd_scan(x, dt, A, B, C, chunk, interpret=_INTERPRET)

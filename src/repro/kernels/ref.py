@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the semantic ground truth for the matching kernel:
+  exit_check_ref   <-> exit_head.py
+  flash_decode_ref <-> decode_attn.py
+  ssd_scan_ref     <-> ssd_scan.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def exit_check_ref(h: jax.Array, w: jax.Array, softcap: float = 0.0):
+    """Fused LM-head exit statistics.
+
+    h: [B, D] (already final-normed), w: [D, V].
+    Returns (top1_logit [B], logsumexp [B], entropy [B]) in float32.
+    top-1 probability = exp(top1 - lse); entropy is in nats.
+    """
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    m = logits.max(axis=-1)
+    lse = m + jnp.log(jnp.exp(logits - m[:, None]).sum(axis=-1))
+    p = jnp.exp(logits - lse[:, None])
+    ent = lse - (p * logits).sum(axis=-1)
+    return m, lse, ent
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, pos: jax.Array,
+                     window: int = 0, softcap: float = 0.0):
+    """Single-token GQA decode against a ring-buffer cache.
+
+    q: [B, KH, G, d]; k, v: [B, S, KH, d]; kv_pos: [B, S] absolute positions
+    (-1 = empty slot); pos: [B] current position. The current token's K/V is
+    assumed already inserted into the cache (insert-then-attend).
+    Returns out [B, KH, G, d] (q dtype).
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * d ** -0.5,
+                   k.astype(jnp.float32))
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window and window > 0:
+        mask &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return (out / p.sum(axis=-1)[..., None]).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, chunk: int):
+    """Mamba2 SSD chunked scan (defers to the model's reference impl).
+
+    x: [Bt, S, H, P]; dt: [Bt, S, H] (positive); A: [H] (negative);
+    B, C: [Bt, S, N]. Returns (y [Bt, S, H, P], h_final [Bt, H, P, N]).
+    """
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32),
+                       A.astype(jnp.float32), B.astype(jnp.float32),
+                       C.astype(jnp.float32), chunk)

@@ -1,0 +1,116 @@
+"""Mamba2 SSD chunked-scan kernel.
+
+The SSD duality (arXiv:2405.21060) splits the sequence into chunks: within
+a chunk the state-space mixing is a small quadratic form (three MXU matmuls
+per chunk — TPU-friendly), across chunks only the [H, P, N] recurrent state
+is carried. The kernel walks chunks sequentially per batch element, carrying
+the state in VMEM scratch, so HBM sees each input tile exactly once and the
+[S, S] attention-dual matrix never exists outside a [Q, Q] VMEM tile.
+
+Grid: (B, S/Q) with the chunk dimension sequential ("arbitrary").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum(a):
+    """a: [H, Q] -> [H, Q, Q] lower-triangular pairwise decay log-sums."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_s):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, H, P]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q, H]
+    A = a_ref[...].astype(jnp.float32)      # [H]
+    Bm = b_ref[0].astype(jnp.float32)       # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)       # [Q, N]
+
+    @pl.when(j == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    da = dt * A                             # [Q, H]
+    xbar = x * dt[..., None]                # [Q, H, P]
+    cum = jnp.cumsum(da, axis=0)            # [Q, H]
+
+    # intra-chunk quadratic form
+    L = jnp.exp(_segsum(da.T))              # [H, Q, Q]
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    M = scores[None, :, :] * L              # [H, Q, Q]
+    y_intra = jnp.einsum("hij,jhp->ihp", M, xbar)
+
+    # inter-chunk: contribution of the carried state
+    decay_in = jnp.exp(cum)                 # [Q, H]
+    h_in = h_s[...]                         # [H, P, N]
+    y_inter = jnp.einsum("in,hpn,ih->ihp", Cm, h_in, decay_in)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update for the next chunk
+    decay_to_end = jnp.exp(cum[-1][None, :] - cum)      # [Q, H]
+    s_c = jnp.einsum("jn,jh,jhp->hpn", Bm, decay_to_end, xbar)
+    h_s[...] = h_in * jnp.exp(cum[-1])[:, None, None] + s_c
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        hfin_ref[0] = h_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int = 256, *, interpret: bool = True):
+    """Chunked SSD scan. See ref.ssd_scan_ref.
+
+    x: [Bt, S, H, P]; dt: [Bt, S, H]; A: [H]; B, C: [Bt, S, N].
+    Returns (y [Bt, S, H, P] float32, h_final [Bt, H, P, N] float32).
+    S is padded to a multiple of ``chunk`` (dt = 0 on padding, which is a
+    no-op for both output and state).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    grid = (Bt, Sp // Q)
+    y, hfin = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((H,), lambda i, j: (0,)),
+            pl.BlockSpec((1, Q, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda i, j: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, Sp, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y[:, :S], hfin

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST run before any other import — jax locks the device
+count at first init. 512 host-platform placeholder devices back both the
+single-pod (16, 16) and multi-pod (2, 16, 16) production meshes.
+
+Per combination this driver:
+  1. builds the step function (train / prefill / serve) and abstract inputs,
+  2. ``jax.jit(step, in_shardings=...).lower(...).compile()`` under the mesh,
+  3. records memory_analysis / cost_analysis / per-collective byte counts
+     and the three roofline terms into a JSON report.
+
+CLI:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+``--all`` runs each combo in a subprocess (isolation + restartability);
+existing JSON results are skipped unless --force.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+
+def parse_variant(spec: str) -> dict:
+    """"accum=4,lite_stride=4" -> {"accum": "4", "lite_stride": "4"}."""
+    out = {}
+    for kv in (spec or "").split(","):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+            verbose: bool = True, variant: str = "") -> dict:
+    import jax
+
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import analyze, model_flops_global
+    from repro.sharding.api import axis_rules
+
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, "full")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+
+    vdict = parse_variant(variant)
+    step = S.make_step(cfg, shape, variant=vdict)
+    specs = S.input_specs(cfg, shape, variant=vdict)
+    shardings = S.input_shardings(cfg, shape, mesh, specs)
+
+    donate = ()
+    if shape.kind == "train":
+        donate = (0, 1)          # params, opt
+    elif shape.kind == "decode":
+        donate = (3,)            # caches
+    t0 = time.time()
+    with mesh, axis_rules(mesh):
+        lowered = jax.jit(step, in_shardings=shardings,
+                          donate_argnums=donate).lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+        tot = (mem_d.get("argument_size_in_bytes", 0)
+               + mem_d.get("output_size_in_bytes", 0)
+               + mem_d.get("temp_size_in_bytes", 0)
+               - mem_d.get("alias_size_in_bytes", 0))
+        mem_d["total_hbm_bytes_per_device"] = int(tot)
+
+    hlo = compiled.as_text()
+    from repro.launch.roofline import collective_bytes
+    coll = collective_bytes(hlo)
+    cfg_shape = S.arch_for_shape(cfg, shape, vdict)
+    roof = analyze(compiled,
+                   model_flops_global=model_flops_global(cfg_shape, shape),
+                   n_devices=n_dev, hlo_text=hlo)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant,
+        "n_devices": int(n_dev), "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_d,
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "roofline": roof.to_dict(),
+        "ok": True,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        vtag = ("__" + variant.replace("=", "-").replace(",", "_")
+                if variant else "")
+        fn = os.path.join(out_dir,
+                          f"{arch}__{shape_name}__{mesh_kind}{vtag}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    if verbose:
+        r = roof
+        hbm_gb = mem_d.get("total_hbm_bytes_per_device", 0) / 2**30
+        vs = f" [{variant}]" if variant else ""
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}{vs}: OK "
+              f"compile={t_compile:.1f}s hbm/dev={hbm_gb:.2f}GiB "
+              f"compute={r.compute_s:.3e}s memory={r.memory_s:.3e}s "
+              f"collective={r.collective_s:.3e}s -> {r.bottleneck}",
+              flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="",
+                    help="perf knobs, e.g. accum=4,lite_stride=4")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        for mk in meshes:
+            run_one(args.arch, args.shape, mk, args.out,
+                    variant=args.variant)
+        return
+
+    from repro.config import SHAPES
+    from repro.configs import ASSIGNED_ARCH_IDS
+    combos = [(a, s, m) for a in ASSIGNED_ARCH_IDS for s in SHAPES
+              for m in meshes]
+    failures = []
+    for arch, shape, mk in combos:
+        fn = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+        if os.path.exists(fn) and not args.force:
+            print(f"[dryrun] skip {arch} x {shape} x {mk} (cached)")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mk, "--out", args.out]
+        try:
+            rc = subprocess.run(cmd, timeout=args.timeout).returncode
+        except subprocess.TimeoutExpired:
+            rc = -1
+        if rc != 0:
+            failures.append((arch, shape, mk, rc))
+            print(f"[dryrun] FAIL {arch} x {shape} x {mk} rc={rc}",
+                  flush=True)
+    print(f"[dryrun] done, {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except Exception:
+        traceback.print_exc()
+        sys.exit(2)

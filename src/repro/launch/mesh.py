@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 TPU v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is pure
+data parallelism whose gradient all-reduce crosses the inter-pod link.
+
+``make_production_mesh`` is a function (never a module constant) so that
+importing this module touches no jax device state — the dry-run sets
+``xla_force_host_platform_device_count`` *before* first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(launch/dryrun.py sets this)")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / CPU smoke runs)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,113 @@
+"""Roofline analysis from compiled (AOT) artifacts — no hardware needed.
+
+Terms (per chip, seconds):
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis`` of a partitioned executable reports the per-device
+program, so the terms are already per-chip. collective_bytes is parsed from
+the optimized HLO text: the summed *result* sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (a
+consistent, hardware-independent proxy for wire traffic).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+from repro.core.energy import HBM_BW, ICI_BW, PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes summed over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:\S+))\s+([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            # match both sync and async-start forms, once per line
+            if op == kind or op == kind + "-start":
+                out[kind] += _shape_bytes(m.group(1))
+                count[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective result bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6ND / 2ND useful-work estimate (per device)
+    mfu_ratio: float             # model_flops / HLO flops
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(compiled, *, model_flops_global: float, n_devices: int,
+            hlo_text: str | None = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ca = ca or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)["total"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global / n_devices
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=float(coll),
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=coll_s, bottleneck=bottleneck,
+                    model_flops=mf,
+                    mfu_ratio=(mf / flops if flops else 0.0))
+
+
+def model_flops_global(cfg, shape) -> float:
+    """Useful-work FLOPs per step: 6·N·D train, 2·N·D inference
+    (N = active params for MoE)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence

@@ -1,0 +1,259 @@
+"""Step functions + abstract input specs for every (arch x shape) pair.
+
+Three lowered programs, per the shape's kind:
+  train_4k     -> ``train_step``  : LITE fine-tune step (fwd+bwd+AdamW)
+  prefill_32k  -> ``prefill_step``: prompt ingestion, builds decode caches
+  decode_32k / long_500k -> ``serve_step``: ONE token with a seq_len cache,
+      early-exit controller (the paper's RL policy) in the compiled graph.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (no allocation);
+``input_shardings`` the matching NamedSharding pytrees for a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import InputShape, ModelConfig, config_for_shape
+from repro.core import policy_net
+from repro.core.controller import make_policy
+from repro.models import transformer as T
+from repro.sharding.api import (_allocate, _path_str, axis_rules,
+                                param_shardings)
+from repro.training.loop import loss_fn
+from repro.training.optimizer import adamw_update
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def arch_for_shape(cfg: ModelConfig, shape: InputShape,
+                   variant: dict = None) -> ModelConfig:
+    cfg = config_for_shape(cfg, shape)
+    v = variant or {}
+    if int(v.get("kv_int8", 0)):
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if "moe_cap" in v and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, train_capacity_factor=float(v["moe_cap"])))
+    if v.get("attn") in ("seq", "head"):
+        cfg = dataclasses.replace(cfg, attn_shard=v["attn"])
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step_fn(cfg: ModelConfig, *, accum: int = 1,
+                       lite_stride: int = 1):
+    """(params, opt, batch) -> (params, opt, loss). LITE loss, remat.
+
+    ``accum`` > 1 splits the global batch into microbatches accumulated
+    with lax.scan (activation memory / accum); ``lite_stride`` subsamples
+    intermediate-exit CE positions (see core.lite_loss)."""
+
+    def one_grad(params, tokens, labels, mask, prefix):
+        grad_fn = jax.value_and_grad(
+            partial(loss_fn, cfg=cfg, kind="lite", remat=True,
+                    prefix_embed=prefix, lite_stride=lite_stride),
+            has_aux=True)
+        (loss, _), grads = grad_fn(params, tokens=tokens, labels=labels,
+                                   mask=mask)
+        return loss, grads
+
+    def step(params, opt, batch):
+        tokens, labels, mask = batch[:3]
+        prefix = batch[3] if len(batch) > 3 else None
+        if accum == 1:
+            loss, grads = one_grad(params, tokens, labels, mask, prefix)
+        else:
+            mb = lambda x: x.reshape(accum, x.shape[0] // accum,
+                                     *x.shape[1:])  # noqa: E731
+            micro = (mb(tokens), mb(labels), mb(mask)) + (
+                (mb(prefix),) if prefix is not None else ())
+
+            def body(carry, m):
+                g_acc, l_acc = carry
+                pf = m[3] if len(m) > 3 else None
+                l, g = one_grad(params, m[0], m[1], m[2], pf)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros(())),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        params, opt = adamw_update(params, grads, opt, 1e-5)
+        return params, opt, loss
+
+    return step
+
+
+def make_prefill_step_fn(cfg: ModelConfig):
+    """(params, tokens[, prefix]) -> (last_logits, caches)."""
+
+    def step(params, tokens, prefix=None):
+        h, caches, _ = T.prefill(params, cfg, tokens, prefix)
+        logits = T.lm_logits(params, cfg, h[:, -1:, :])[:, 0]
+        return logits, caches
+
+    return step
+
+
+def make_serve_step_fn(cfg: ModelConfig, threshold: float = 0.9):
+    """(params, agent, tokens, caches, pos) -> (next, caches, exit_layer).
+
+    The RL exit policy runs inside the step: this is GREEN-CODE's serving
+    graph, with per-token exit predication + KV propagation."""
+
+    def step(params, agent, tokens, caches, pos):
+        controller = make_policy(agent, threshold)
+        logits, new_caches, info = T.decode_step(params, cfg, tokens, caches,
+                                                 pos, controller)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, new_caches, info["exit_layer"]
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=COMPUTE_DTYPE):
+    return jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def abstract_opt(params_abs):
+    # Adam moments in f32 regardless of (bf16) param dtype — mixed precision
+    zeros = jax.tree.map(lambda x: _sds(x.shape, jnp.float32), params_abs)
+    return {"m": zeros, "v": zeros,
+            "step": _sds((), jnp.int32)}
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=COMPUTE_DTYPE):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, dtype=dtype))
+
+
+def abstract_agent(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: policy_net.init_policy(jax.random.PRNGKey(0), cfg.d_model))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                dtype=COMPUTE_DTYPE, variant: dict = None) -> tuple:
+    """ShapeDtypeStruct stand-ins for the step matching ``shape.kind``."""
+    cfg = arch_for_shape(cfg, shape, variant)
+    B, S = shape.global_batch, shape.seq_len
+    F = cfg.frontend_tokens if cfg.frontend else 0
+    params = abstract_params(cfg, dtype)
+    if shape.kind == "train":
+        batch = [_sds((B, S - F), jnp.int32),        # tokens
+                 _sds((B, S), jnp.int32),            # labels (incl. prefix)
+                 _sds((B, S), jnp.float32)]          # mask
+        if F:
+            batch.append(_sds((B, F, cfg.d_model), dtype))
+        return params, abstract_opt(params), tuple(batch)
+    if shape.kind == "prefill":
+        args = [params, _sds((B, S - F), jnp.int32)]
+        if F:
+            args.append(_sds((B, F, cfg.d_model), dtype))
+        return tuple(args)
+    # decode: one token with a seq_len-deep cache
+    caches = abstract_caches(cfg, B, S, dtype)
+    return (params, abstract_agent(cfg), _sds((B,), jnp.int32), caches,
+            _sds((B,), jnp.int32))
+
+
+def make_step(cfg: ModelConfig, shape: InputShape, *, variant: dict = None):
+    """``variant``: perf-iteration knobs, e.g. {"accum": 4,
+    "lite_stride": 4} for train or {"threshold": 0.9} for serve."""
+    v = dict(variant or {})
+    cfg = arch_for_shape(cfg, shape, v)
+    if shape.kind == "train":
+        return make_train_step_fn(cfg, accum=int(v.pop("accum", 1)),
+                                  lite_stride=int(v.pop("lite_stride", 1)))
+    if shape.kind == "prefill":
+        return make_prefill_step_fn(cfg)
+    return make_serve_step_fn(cfg, threshold=float(v.pop("threshold", 0.9)))
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+_CACHE_AXES = {
+    "k": ("batch", "ctx", "kv_heads", None),
+    "v": ("batch", "ctx", "kv_heads", None),
+    "k_s": ("batch", "ctx", "kv_heads"),
+    "v_s": ("batch", "ctx", "kv_heads"),
+    "latent": ("batch", "ctx", None),
+    "krope": ("batch", "ctx", None),
+    "pos": ("batch", "ctx"),
+    "state": ("batch", "heads", None, None),
+    "conv": ("batch", None, "heads"),
+}
+
+
+def cache_shardings(cache_abs, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    leaves = []
+    for kp, v in flat:
+        key = _path_str(kp).rsplit("/", 1)[-1]
+        axes = _CACHE_AXES.get(key)
+        if axes is None:
+            leaves.append(NamedSharding(mesh, P()))
+            continue
+        lead = [None] * (v.ndim - len(axes))          # stacked-layer dims
+        spec = _allocate(lead + list(axes), v.shape, mesh)
+        leaves.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def batch_sharding(mesh, ndim: int, shape=None):
+    axes = ["batch"] + [None] * (ndim - 1)
+    spec = _allocate(axes, shape or tuple(1 << 30 for _ in range(ndim)),
+                     mesh)
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def input_shardings(cfg: ModelConfig, shape: InputShape, mesh,
+                    specs) -> tuple:
+    """NamedSharding pytree matching ``input_specs`` output."""
+    cfg = arch_for_shape(cfg, shape)  # variant only changes cache dtypes
+    if shape.kind == "train":
+        params_abs, opt_abs, batch_abs = specs
+        p_sh = param_shardings(params_abs, mesh)
+        opt_sh = {"m": param_shardings(
+                      opt_abs["m"], mesh, zero_axes=("pod", "data")),
+                  "v": param_shardings(
+                      opt_abs["v"], mesh, zero_axes=("pod", "data")),
+                  "step": replicated(mesh)}
+        b_sh = tuple(batch_sharding(mesh, b.ndim, b.shape)
+                     for b in batch_abs)
+        return p_sh, opt_sh, b_sh
+    if shape.kind == "prefill":
+        params_abs = specs[0]
+        out = [param_shardings(params_abs, mesh)]
+        for b in specs[1:]:
+            out.append(batch_sharding(mesh, b.ndim, b.shape))
+        return tuple(out)
+    params_abs, agent_abs, tok_abs, cache_abs, pos_abs = specs
+    return (param_shardings(params_abs, mesh),
+            jax.tree.map(lambda _: replicated(mesh), agent_abs),
+            batch_sharding(mesh, 1, tok_abs.shape),
+            cache_shardings(cache_abs, mesh),
+            batch_sharding(mesh, 1, pos_abs.shape))

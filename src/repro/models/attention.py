@@ -1,0 +1,363 @@
+"""Attention mixers: GQA (global / sliding-window) and MLA.
+
+Two execution paths per mixer:
+  * ``*_train``  — full-sequence causal attention, memory-efficient blockwise
+    softmax (lax.scan over KV chunks with running max/denominator) so 32k
+    prefill never materializes an [S, S] score matrix.
+  * ``*_decode`` — single-token query against a KV cache (``kv_pos`` gives
+    the absolute position of every cache slot; -1 marks invalid slots).
+
+MLA decode uses the absorbed-weight formulation (queries projected into the
+latent space; the per-position latent cache is never expanded to full K/V) —
+the TPU-native way to serve MLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (apply_norm, apply_rope, dense_init,
+                                 rope_freqs, softcap, stacked_dense_init)
+from repro.sharding import constrain
+
+Array = jax.Array
+NEG_INF = -2.0 ** 30
+
+
+def _mk(key, n, a, b, scale=None):
+    if n is None:
+        return dense_init(key, a, b, scale)
+    return stacked_dense_init(key, n, a, b, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg: ModelConfig, n: int | None = None):
+    ks = jax.random.split(key, 4)
+    p = {"wq": _mk(ks[0], n, cfg.d_model, cfg.q_dim),
+         "wk": _mk(ks[1], n, cfg.d_model, cfg.kv_dim),
+         "wv": _mk(ks[2], n, cfg.d_model, cfg.kv_dim),
+         "wo": _mk(ks[3], n, cfg.q_dim, cfg.d_model)}
+    if cfg.use_bias:
+        sh = (lambda d: (d,)) if n is None else (lambda d: (n, d))
+        p["bq"], p["bk"], p["bv"] = (jnp.zeros(sh(cfg.q_dim)),
+                                     jnp.zeros(sh(cfg.kv_dim)),
+                                     jnp.zeros(sh(cfg.kv_dim)))
+        p["bo"] = jnp.zeros(sh(cfg.d_model))
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x: Array):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+import functools
+
+
+def blockwise_causal_attention(q: Array, k: Array, v: Array, *,
+                               window: int = 0, logit_cap: float = 0.0,
+                               chunk: int = 1024, q_offset: int = 0,
+                               shard: str = "seq") -> Array:
+    """Causal (optionally windowed) attention without [S,S] materialization.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KH, D] with H a multiple of KH.
+    ``window > 0`` restricts attention to the last ``window`` positions.
+    ``q_offset`` is the absolute position of q[0] relative to k[0].
+    Scans over KV chunks keeping running (max, denom, acc) per query.
+
+    The whole function is rematerialized (flash-style backward): the chunk
+    softmax probabilities are recomputed in the backward pass instead of
+    being stored as scan residuals — peak residual memory drops from
+    O(layers·Sq·Sk) to O(Sq·D) per layer.
+    """
+    fn = functools.partial(_blockwise_impl, window=window,
+                           logit_cap=logit_cap, chunk=chunk,
+                           q_offset=q_offset, shard=shard)
+    return jax.checkpoint(fn)(q, k, v)
+
+
+def _blockwise_impl(q: Array, k: Array, v: Array, *, window: int,
+                    logit_cap: float, chunk: int, q_offset: int,
+                    shard: str) -> Array:
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = D ** -0.5
+    qr = q.reshape(B, Sq, KH, G, D) * scale
+    if shard == "head":
+        # head-parallel: flat heads over `model` (caller pre-broadcast KV
+        # to full heads so KH == H, G == 1); queries stay seq-replicated —
+        # no per-layer sequence gathers (§Perf C3)
+        qr = constrain(qr, "batch", None, "heads", None, None)
+    else:
+        # sequence-parallel attention: shard the query positions over
+        # `model` (each position's flash stats are independent — no comm
+        # in the scan); KV chunks are replicated across the model axis.
+        # Works for any (H, KH), including kv_heads < mesh model size.
+        qr = constrain(qr, "batch", "seq_attn", None, None, None)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    chunk = min(chunk, Sk)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    kv_ax = "heads" if shard == "head" else None
+    kc = constrain(kc, None, "batch", None, kv_ax, None)
+    vc = constrain(vc, None, "batch", None, kv_ax, None)
+
+    def body(carry, inp):
+        m, l, acc, c_idx = carry
+        k_i, v_i = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgd,btkd->bkgst", qr, k_i,
+                       preferred_element_type=jnp.float32)
+        s = softcap(s, logit_cap)
+        mask = k_pos[None, :] <= q_pos[:, None]           # causal
+        if window and window > 0:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        mask &= (k_pos < Sk)[None, :]                     # padding
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + pr.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", pr, v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new, c_idx + 1), None
+
+    if shard == "head":
+        m0 = constrain(jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32),
+                       "batch", "heads", None, None)
+        l0 = constrain(jnp.zeros((B, KH, G, Sq), jnp.float32),
+                       "batch", "heads", None, None)
+        acc0 = constrain(jnp.zeros((B, KH, G, Sq, D), jnp.float32),
+                         "batch", "heads", None, None, None)
+    else:
+        m0 = constrain(jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32),
+                       "batch", None, None, "seq_attn")
+        l0 = constrain(jnp.zeros((B, KH, G, Sq), jnp.float32),
+                       "batch", None, None, "seq_attn")
+        acc0 = constrain(jnp.zeros((B, KH, G, Sq, D), jnp.float32),
+                         "batch", None, None, "seq_attn", None)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, 0), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    if shard == "head":
+        out = constrain(out, "batch", None, "heads", None)
+    else:
+        out = constrain(out, "batch", "seq_attn", None, None)
+    return out.astype(q.dtype)
+
+
+def apply_gqa_train(p, cfg: ModelConfig, x: Array, *, window: int = 0,
+                    pos_offset: int = 0):
+    """Full-sequence causal GQA. Returns (out, (k, v)) — k/v are the
+    rope-applied cache entries so prefill can store them directly."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.positional == "rope":
+        cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta,
+                              pos_offset + jnp.arange(S))
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    ka, va = k, v
+    if cfg.attn_shard == "head":
+        G = cfg.num_heads // cfg.num_kv_heads
+        if G > 1:  # broadcast KV to flat heads (cache keeps KH heads)
+            ka = jnp.repeat(k, G, axis=2)
+            va = jnp.repeat(v, G, axis=2)
+    out = blockwise_causal_attention(q, ka, va, window=window,
+                                     logit_cap=cfg.attn_logit_softcap,
+                                     q_offset=0, shard=cfg.attn_shard)
+    out = out.reshape(B, S, cfg.q_dim) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out, (k, v)
+
+
+def apply_gqa_decode(p, cfg: ModelConfig, x: Array, k_cache: Array,
+                     v_cache: Array, kv_pos: Array, pos: Array, *,
+                     window: int = 0):
+    """One-token decode.
+
+    x: [B, 1, D]; k_cache/v_cache: [B, Skv, KH, hd]; kv_pos: [B, Skv]
+    absolute positions (-1 invalid); pos: [B] current absolute position.
+    Returns (out [B,1,D], k_new [B,1,KH,hd], v_new [B,1,KH,hd]) — cache
+    insertion is the caller's job (ring-buffer for sliding window).
+    """
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.positional == "rope":
+        # per-example positions: vmap rope over batch
+        def rot(qkv, pb):
+            cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, pb[None])
+            return apply_rope(qkv, cos, sin)
+        q = jax.vmap(rot)(q, pos)
+        k = jax.vmap(rot)(k, pos)
+    KH = cfg.num_kv_heads
+    G = cfg.num_heads // KH
+    scale = cfg.head_dim ** -0.5
+    qr = q.reshape(B, KH, G, cfg.head_dim) * scale
+    s = jnp.einsum("bkgd,btkd->bkgt", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    # new token attends to itself too
+    s_self = jnp.einsum("bkgd,bkd->bkg", qr,
+                        k[:, 0].astype(qr.dtype),
+                        preferred_element_type=jnp.float32)
+    s = softcap(s, cfg.attn_logit_softcap)
+    s_self = softcap(s_self, cfg.attn_logit_softcap)
+    mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window and window > 0:
+        mask &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.maximum(s.max(axis=-1), s_self)
+    pr = jnp.exp(s - m[..., None])
+    pr_self = jnp.exp(s_self - m)
+    denom = pr.sum(axis=-1) + pr_self
+    out = jnp.einsum("bkgt,btkd->bkgd", pr, v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out + pr_self[..., None] * v[:, 0, :, None, :]
+    out = (out / denom[..., None]).astype(x.dtype)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig, n: int | None = None):
+    m = cfg.mla
+    ks = jax.random.split(key, 8)
+    H = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    sh = (lambda d: (d, cfg.d_model)) if n is None else (lambda d: (n, d, cfg.d_model))
+    p = {
+        "wdq": _mk(ks[0], n, cfg.d_model, m.q_lora_rank),
+        "wuq": _mk(ks[1], n, m.q_lora_rank, H * qk_head),
+        "wdkv": _mk(ks[2], n, cfg.d_model, m.kv_lora_rank),
+        "wkr": _mk(ks[3], n, cfg.d_model, m.qk_rope_head_dim),
+        "wuk": _mk(ks[4], n, m.kv_lora_rank, H * m.qk_nope_head_dim),
+        "wuv": _mk(ks[5], n, m.kv_lora_rank, H * m.v_head_dim),
+        "wo": _mk(ks[6], n, H * m.v_head_dim, cfg.d_model),
+        "q_norm": jnp.ones((m.q_lora_rank,) if n is None else (n, m.q_lora_rank)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,) if n is None else (n, m.kv_lora_rank)),
+    }
+    del sh
+    return p
+
+
+def _mla_qkv_latent(p, cfg: ModelConfig, x: Array, positions: Array):
+    """Returns per-head q (nope/rope parts), latent, shared rope key."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = apply_norm({"scale": p["q_norm"]}, x @ p["wdq"])
+    q = (q_lat @ p["wuq"]).reshape(B, S, H, qk_head)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    latent = apply_norm({"scale": p["kv_norm"]}, x @ p["wdkv"])  # [B,S,kvr]
+    k_rope = (x @ p["wkr"])[:, :, None, :]                        # [B,S,1,rope]
+    cos, sin = rope_freqs(m.qk_rope_head_dim, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, latent, k_rope[:, :, 0, :]
+
+
+def apply_mla_train(p, cfg: ModelConfig, x: Array, *, window: int = 0,
+                    pos_offset: int = 0):
+    """Full-sequence MLA. Returns (out, (latent, k_rope)) for prefill."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    positions = pos_offset + jnp.arange(S)
+    q_nope, q_rope, latent, k_rope = _mla_qkv_latent(p, cfg, x, positions)
+    k_nope = (latent @ p["wuk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (latent @ p["wuv"]).reshape(B, S, H, m.v_head_dim)
+    # pad v to qk_head so it shares the blockwise kernel, then slice
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    if m.v_head_dim < qk_head:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head - m.v_head_dim)))
+    out = blockwise_causal_attention(q, k, v, window=window,
+                                     logit_cap=cfg.attn_logit_softcap)
+    out = out[..., : m.v_head_dim].reshape(B, S, H * m.v_head_dim)
+    return out @ p["wo"], (latent, k_rope)
+
+
+def apply_mla_decode(p, cfg: ModelConfig, x: Array, latent_cache: Array,
+                     krope_cache: Array, kv_pos: Array, pos: Array, *,
+                     window: int = 0):
+    """Absorbed-weight MLA decode.
+
+    latent_cache: [B, Skv, kvr]; krope_cache: [B, Skv, rope].
+    Scores = (q_nope @ Wuk^T) · latent + q_rope · k_rope; values stay in
+    latent space and are expanded only for the single output token.
+    Returns (out [B,1,D], latent_new [B,1,kvr], k_rope_new [B,1,rope]).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = apply_norm({"scale": p["q_norm"]}, x @ p["wdq"])
+    q = (q_lat @ p["wuq"]).reshape(B, 1, H, qk_head)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    latent_new = apply_norm({"scale": p["kv_norm"]}, x @ p["wdkv"])
+    krope_raw = x @ p["wkr"]
+
+    def rot(qr, kr, pb):
+        cos, sin = rope_freqs(m.qk_rope_head_dim, cfg.rope_theta, pb[None])
+        return apply_rope(qr, cos, sin), apply_rope(kr[:, None, :], cos, sin)[:, 0]
+    q_rope, krope_new = jax.vmap(rot)(q_rope, krope_raw, pos)
+
+    # absorb Wuk into the query: q' = q_nope @ Wuk^T -> latent-space scores
+    wuk_h = jnp.transpose(p["wuk"].reshape(m.kv_lora_rank, H,
+                                           m.qk_nope_head_dim), (1, 0, 2))
+    q_abs = jnp.einsum("bhd,hrd->bhr", q_nope[:, 0], wuk_h)     # [B,H,kvr]
+    scale = qk_head ** -0.5
+    s = (jnp.einsum("bhr,btr->bht", q_abs, latent_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,btd->bht", q_rope[:, 0], krope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    s_self = (jnp.einsum("bhr,br->bh", q_abs, latent_new[:, 0],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bd->bh", q_rope[:, 0], krope_new[:, 0],
+                           preferred_element_type=jnp.float32)) * scale
+    mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window and window > 0:
+        mask &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    mx = jnp.maximum(s.max(axis=-1), s_self)
+    pr = jnp.exp(s - mx[..., None])
+    pr_self = jnp.exp(s_self - mx)
+    denom = pr.sum(axis=-1) + pr_self
+    # output stays latent: [B,H,kvr]
+    o_lat = jnp.einsum("bht,btr->bhr", pr, latent_cache,
+                       preferred_element_type=jnp.float32)
+    o_lat = o_lat + pr_self[..., None] * latent_new[:, 0][:, None, :]
+    o_lat = (o_lat / denom[..., None]).astype(x.dtype)
+    wuv_h = jnp.transpose(p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim),
+                          (1, 0, 2))                            # [H,kvr,vd]
+    o = jnp.einsum("bhr,hrd->bhd", o_lat, wuv_h)                # [B,H,vd]
+    out = o.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+    return out, latent_new, krope_new

@@ -1,0 +1,144 @@
+"""Shared primitive layers: norms, embeddings, RoPE, MLP.
+
+All modules are functional: ``init_*`` builds a param pytree, ``apply_*``
+consumes it. Params are plain dicts of jnp arrays so they stack cleanly for
+scan-over-layers and shard by path-based rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (n, d_in, d_out), jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, n: int | None = None):
+    shape = (cfg.d_model,) if n is None else (n, cfg.d_model)
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones(shape), "bias": jnp.zeros(shape)}
+    return {"scale": jnp.ones(shape)}
+
+
+def apply_norm(p, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def padded_vocab(cfg: ModelConfig, multiple: int = 256) -> int:
+    """Vocab rounded up so the embedding/head shard over the model axis
+    (e.g. 49155 -> 49408). Padded logit columns are masked to -inf in
+    lm_logits; ids never reach the padding."""
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def init_embed(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(
+        k1, (padded_vocab(cfg), cfg.d_model)) * 0.02}
+    if cfg.positional == "learned":
+        p["pos"] = jax.random.normal(k2, (cfg.max_position, cfg.d_model)) * 0.02
+    return p
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens: Array, pos_offset=0) -> Array:
+    h = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.positional == "learned":
+        positions = pos_offset + jnp.arange(tokens.shape[-1])
+        positions = jnp.clip(positions, 0, cfg.max_position - 1)
+        h = h + jnp.take(p["pos"], positions, axis=0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float, positions: Array) -> tuple[Array, Array]:
+    """Return (cos, sin) of shape [len(positions), dim//2], float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: [..., S, H, D]; cos/sin: [S, D//2] (broadcast over batch/heads)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    # broadcast cos/sin over batch and head dims: [S, 1, D//2]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (gated SwiGLU-style or plain)
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, n: int | None = None, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    mk = (lambda k, a, b: stacked_dense_init(k, n, a, b)) if n is not None \
+        else (lambda k, a, b: dense_init(k, a, b))
+    p = {"up": mk(ks[0], cfg.d_model, d_ff),
+         "down": mk(ks[1], d_ff, cfg.d_model)}
+    if cfg.mlp_gated:
+        p["gate"] = mk(ks[2], cfg.d_model, d_ff)
+    if cfg.use_bias:
+        bshape = lambda d: (d,) if n is None else (n, d)  # noqa: E731
+        p["up_b"] = jnp.zeros(bshape(d_ff))
+        p["down_b"] = jnp.zeros(bshape(cfg.d_model))
+    return p
+
+
+def _act(cfg: ModelConfig, x: Array) -> Array:
+    if cfg.activation == "silu":
+        return jax.nn.silu(x)
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.relu(x)
+
+
+def apply_mlp(p, cfg: ModelConfig, x: Array) -> Array:
+    up = x @ p["up"]
+    if "up_b" in p:
+        up = up + p["up_b"]
+    if "gate" in p:
+        up = _act(cfg, x @ p["gate"]) * up
+    else:
+        up = _act(cfg, up)
+    out = up @ p["down"]
+    if "down_b" in p:
+        out = out + p["down_b"]
+    return out
+
+
+def softcap(x: Array, cap: float) -> Array:
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Expert-parallel design (MaxText-style): top-k routing builds one-hot
+dispatch/combine tensors of shape [T, E, C]; expert FFNs run as batched
+matmuls over [E, C, d]. With experts sharded on the ``model`` mesh axis the
+dispatch einsums lower to the expert all-to-all pattern. Compute scales with
+top-k (active experts), not total experts — so roofline numbers reflect the
+true active FLOPs, unlike a dense "run every expert" emulation.
+
+Shared experts (qwen2-moe) run densely for every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _act, stacked_dense_init
+from repro.sharding import constrain
+
+Array = jax.Array
+
+
+def padded_experts(cfg: ModelConfig, multiple: int = 16) -> int:
+    """Experts rounded up to a multiple of the model-axis size (40 -> 48,
+    60 -> 64) so expert weights and dispatch buffers shard expert-parallel;
+    padded experts get -inf router logits and are never selected."""
+    return -(-cfg.moe.num_experts // multiple) * multiple
+
+
+def init_moe(key, cfg: ModelConfig, n: int | None = None):
+    m = cfg.moe
+    ks = jax.random.split(key, 7)
+    E, dff, d = padded_experts(cfg), m.d_ff_expert, cfg.d_model
+
+    def mk(k, *shape):
+        scale = shape[-2] ** -0.5
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    pre = (n,) if n is not None else ()
+    p = {
+        "router": mk(ks[0], *pre, d, E),
+        "gate": mk(ks[1], *pre, E, d, dff),
+        "up": mk(ks[2], *pre, E, d, dff),
+        "down": mk(ks[3], *pre, E, dff, d),
+    }
+    if m.num_shared_experts:
+        S = m.num_shared_experts
+        p["shared_gate"] = mk(ks[4], *pre, d, S * dff)
+        p["shared_up"] = mk(ks[5], *pre, d, S * dff)
+        p["shared_down"] = mk(ks[6], *pre, S * dff, d)
+    return p
+
+
+def _capacity(num_tokens: int, num_experts: int, k: int,
+              factor: float = 1.25) -> int:
+    c = int(num_tokens * k * factor / num_experts) + 1
+    return max(c, k, 4)
+
+
+def apply_moe(p, cfg: ModelConfig, x: Array, *, capacity_factor: float = 1.25):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    Scatter/gather dispatch (MegaBlocks-style, linear in tokens): token
+    vectors are scattered into per-expert capacity buffers [E, C, D] and
+    gathered back with their gate weights. Memory is O(T·K + E·C·D) — the
+    classic one-hot [T, E, C] dispatch is O(T²·K) since C grows with T.
+    With experts (or their d_ff) sharded on the ``model`` axis the scatter
+    lowers to the expert all-to-all pattern.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.num_experts_per_tok
+    xt = x.reshape(T, D)
+
+    Ep = p["router"].shape[-1]                               # padded experts
+    logits = (xt @ p["router"]).astype(jnp.float32)          # [T, Ep]
+    if Ep != E:
+        logits = jnp.where(jnp.arange(Ep) < E, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                 # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)         # renormalize
+
+    C = _capacity(T, E, K, capacity_factor)
+    onehot = jax.nn.one_hot(idx, Ep, dtype=jnp.int32)        # [T, K, Ep]
+    # position of each (token, k) within its expert queue
+    pos_in_e = (jnp.cumsum(onehot.reshape(T * K, Ep), axis=0)
+                .reshape(T, K, Ep) - 1)                      # [T, K, Ep]
+    slot = (pos_in_e * onehot).sum(-1)                       # [T, K]
+    within = (slot < C) & (slot >= 0)
+    # scatter tokens into expert buffers; overflow slots -> index C (drop)
+    flat_e = idx.reshape(-1)
+    flat_s = jnp.where(within, slot, C).reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    xe = jnp.zeros((Ep, C, D), x.dtype)
+    xe = xe.at[flat_e, flat_s].set(xt[flat_t], mode="drop")  # [E, C, D]
+    xe = constrain(xe, "experts", None, "embed")   # expert-parallel dispatch
+    hg = _act(cfg, jnp.einsum("ecd,edf->ecf", xe, p["gate"]))
+    hu = jnp.einsum("ecd,edf->ecf", xe, p["up"])
+    hg = constrain(hg, "experts", None, "ff")
+    ye = jnp.einsum("ecf,efd->ecd", hg * hu, p["down"])      # [E, C, D]
+    # gather back with gate weights
+    yk = ye[idx, jnp.where(within, slot, 0)]                 # [T, K, D]
+    yk = yk * (gate_vals * within).astype(x.dtype)[..., None]
+    y = yk.sum(axis=1)                                       # [T, D]
+
+    # load-balance auxiliary loss (Switch-style, real experts only)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_prob = jnp.mean(probs[:, :E], axis=0)
+    aux = m.router_aux_coef * E * jnp.sum(frac_tokens * frac_prob)
+
+    if m.num_shared_experts:
+        hg = _act(cfg, xt @ p["shared_gate"]) * (xt @ p["shared_up"])
+        y = y + hg @ p["shared_down"]
+
+    return y.reshape(B, S, D), aux

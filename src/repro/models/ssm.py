@@ -1,0 +1,226 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: within a chunk the
+sequence mixing is a small quadratic attention-like matmul (MXU-friendly);
+across chunks a cheap ``lax.scan`` carries the [H, P, N] recurrent state.
+This pure-jnp implementation doubles as the oracle for the Pallas
+``ssd_scan`` kernel (kernels/ssd_scan.py).
+
+Decode is the exact SSD recurrence: constant-size state
+``h_t = h_{t-1}·exp(dt·A) + dt·(B ⊗ x)``, ``y = C·h + D·x`` — no KV cache,
+which is what makes mamba2/zamba2 runnable at 500k context.
+
+Layout: d_inner = expand·d_model, H = d_inner/head_dim heads of dim P,
+B/C projections of state dim N shared across heads (multi-value attention
+analogue in the SSD duality).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, stacked_dense_init
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim  # conv runs over (x, B, C)
+    return d_in, nheads, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig, n: int | None = None):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj order: [z(d_in), x(d_in), B(N), C(N), dt(H)]
+    d_proj = 2 * d_in + 2 * s.state_dim + H
+    mk = (lambda k, a, b: stacked_dense_init(k, n, a, b)) if n is not None \
+        else (lambda k, a, b: dense_init(k, a, b))
+    pre = (n,) if n is not None else ()
+    p = {
+        "in_proj": mk(ks[0], d, d_proj),
+        "out_proj": mk(ks[1], d_in, d),
+        "conv_w": jax.random.normal(ks[2], (*pre, s.conv_dim, conv_ch)) * 0.2,
+        "conv_b": jnp.zeros((*pre, conv_ch)),
+        # A in (-1, 0): A = -exp(A_log); init A in [-1, -0.5]
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.linspace(0.5, 1.0, H), (*pre, H)).copy()),
+        "D": jnp.ones((*pre, H)),
+        "dt_bias": jnp.broadcast_to(
+            jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, H))), (*pre, H)).copy(),
+        "gate_norm": jnp.ones((*pre, d_in)),
+    }
+    return p
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    s = cfg.ssm
+    d_in, H, _ = _dims(cfg)
+    N = s.state_dim
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, xbc, dt
+
+
+def _gated_norm(p, y: Array, z: Array, eps: float = 1e-6) -> Array:
+    """Mamba2 RMSNormGated: rmsnorm(y * silu(z)) * scale."""
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(ms + eps) * p["gate_norm"]).astype(y.dtype)
+
+
+def _causal_conv(cfg: ModelConfig, p, xbc: Array) -> Array:
+    """Depthwise causal conv over the sequence. xbc: [B, S, C]."""
+    s = cfg.ssm
+    w = p["conv_w"]                                     # [K, C]
+    pad = s.conv_dim - 1
+    xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    # depthwise: sum_k w[k, c] * x[t - (K-1) + k, c]
+    out = sum(xp[:, k: k + xbc.shape[1], :] * w[k] for k in range(s.conv_dim))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def segsum(a: Array) -> Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k], -inf j>i.
+
+    a: [..., Q]; returns [..., Q, Q] lower-triangular log-decay matrix.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, h0: Array | None = None):
+    """Chunked SSD scan.
+
+    x: [Bt, S, H, P]  (already multiplied by nothing; dt applied inside)
+    dt: [Bt, S, H] (positive), A: [H] (negative), B, C: [Bt, S, N].
+    Returns (y [Bt, S, H, P], h_final [Bt, H, P, N]).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    n_chunks = (S + Q - 1) // Q
+    pad = n_chunks * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_c(t):
+        return t.reshape(Bt, n_chunks, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc = map(reshape_c, (x, dt, B, C))       # [nc, Bt, Q, ...]
+    da = dtc * A                                           # [nc, Bt, Q, H]
+    xbar = xc * dtc[..., None]                             # dt-weighted input
+
+    # intra-chunk (dual quadratic form), computed for all chunks at once
+    L = jnp.exp(segsum(da.swapaxes(-1, -2)))               # [nc,Bt,H,Q,Q]
+    scores = jnp.einsum("cbin,cbjn->cbij", Cc, Bc)         # [nc,Bt,Q,Q]
+    M = scores[:, :, None] * L                             # [nc,Bt,H,Q,Q]
+    y_intra = jnp.einsum("cbhij,cbjhp->cbihp", M, xbar)
+
+    # chunk-final states: S_c = sum_j exp(sum_{k>j} da) B_j x̄_j
+    cum = jnp.cumsum(da, axis=2)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [nc,Bt,Q,H]
+    states = jnp.einsum("cbjn,cbjh,cbjhp->cbhpn",
+                        Bc, decay_to_end, xbar)            # [nc,Bt,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [nc,Bt,H]
+
+    def carry_fn(h, inp):
+        s_c, dec = inp                                     # dec: [Bt, H]
+        h_out = h                                          # state entering chunk
+        h = h * dec[..., None, None] + s_c
+        return h, h_out
+
+    h_init = (jnp.zeros((Bt, H, P, N), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    h_last, h_in = jax.lax.scan(carry_fn, h_init, (states, chunk_decay))
+    # inter-chunk contribution: y_i += C_i · (decay_in_i · h_in)
+    decay_in = jnp.exp(cum)                                # [nc,Bt,Q,H]
+    y_inter = jnp.einsum("cbin,cbhpn,cbih->cbihp", Cc, h_in, decay_in)
+
+    y = (y_intra + y_inter).swapaxes(0, 1).reshape(Bt, n_chunks * Q, H, P)
+    if pad:
+        y = y[:, :S]
+    return y, h_last
+
+
+def apply_mamba_train(p, cfg: ModelConfig, x: Array, *, return_cache=False):
+    """Full-sequence SSD. x: [B, S, D] -> (y [B, S, D], cache|None)."""
+    s = cfg.ssm
+    d_in, H, _ = _dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(cfg, p, xbc_raw)
+    xs = xbc[..., :d_in]
+    Bs = xbc[..., d_in: d_in + s.state_dim]
+    Cs = xbc[..., d_in + s.state_dim:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bt, S, _ = x.shape
+    xh = xs.reshape(Bt, S, H, s.head_dim)
+    y, h_last = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                            Bs.astype(jnp.float32), Cs.astype(jnp.float32),
+                            s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(Bt, S, d_in).astype(x.dtype)
+    y = _gated_norm(p, y, z)
+    out = y @ p["out_proj"]
+    if not return_cache:
+        return out, None
+    # decode cache: final recurrent state + conv tail (pre-activation inputs)
+    K = s.conv_dim - 1
+    tail = xbc_raw[:, -K:, :]
+    if S < K:
+        tail = jnp.pad(xbc_raw, ((0, 0), (K - S, 0), (0, 0)))
+    return out, {"state": h_last, "conv": tail}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Decode cache: recurrent state + conv ring buffer."""
+    s = cfg.ssm
+    d_in, H, conv_ch = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_dim - 1, conv_ch), dtype),
+    }
+
+
+def apply_mamba_decode(p, cfg: ModelConfig, x: Array, cache):
+    """One-token SSD recurrence. x: [B, 1, D] -> (y [B, 1, D], new cache)."""
+    s = cfg.ssm
+    d_in, H, _ = _dims(cfg)
+    proj = x[:, 0] @ p["in_proj"]                       # [B, d_proj]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # causal conv via ring buffer: window = [cache, current]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    w = p["conv_w"]                                     # [K, C]
+    conv_out = jnp.einsum("bkc,kc->bc", win, w) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[..., :d_in]
+    Bs = xbc[..., d_in: d_in + s.state_dim].astype(jnp.float32)
+    Cs = xbc[..., d_in + s.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # [H]
+    xh = xs.reshape(-1, H, s.head_dim).astype(jnp.float32)        # [B, H, P]
+    decay = jnp.exp(dt * A)                                       # [B, H]
+    h = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bs)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cs) + xh * p["D"][:, None]
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = _gated_norm(p, y[:, None, :], z[:, None, :])[:, 0]
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"state": h, "conv": win[:, 1:]}
+    return out, new_cache

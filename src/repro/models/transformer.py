@@ -1,0 +1,577 @@
+"""Decoder composition: segments, exit-aligned layer scan, prefill, decode.
+
+The layer stack is partitioned into *segments* whose boundaries are exactly
+the paper's exit points (core/exit_points.py). Each uniform segment is a
+``lax.scan`` over stacked per-layer params, so
+
+  * the lowered HLO is O(#segments) not O(depth), and
+  * the hidden state after every segment — i.e. at every exit point — falls
+    out of the forward pass for free (used by the LITE loss and the RL
+    rollout cache).
+
+Heterogeneous segments (e.g. gemma2 local/global pairs, zamba2 mamba+shared
+blocks) are unrolled; they are at most ``second_half_stride`` layers long.
+
+Decode (`decode_step`) implements the paper's dynamic early exit under SPMD:
+per-token exits are *predicated* — once a token's controller says exit, its
+hidden state freezes, but every remaining layer still projects K/V from the
+frozen hidden state into the cache (CALM-style propagation, paper §VI-G), so
+subsequent tokens attend to a complete cache. The energy model
+(core/energy.py) accounts saved FLOPs from the recorded per-token exit
+layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_GQA,
+                          MIXER_GQA_LOCAL, MIXER_MAMBA, MIXER_MLA,
+                          MIXER_SHARED_GQA, LayerSpec, ModelConfig)
+from repro.core.exit_points import segment_boundaries
+from repro.models import ssm
+from repro.models.attention import (apply_gqa_decode, apply_gqa_train,
+                                    apply_mla_decode, apply_mla_train,
+                                    init_gqa, init_mla)
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embed, init_mlp, init_norm,
+                                 padded_vocab, softcap)
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Segmentation
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Segment:
+    start: int               # first layer (0-indexed, inclusive)
+    end: int                 # last layer (exclusive) == an exit boundary
+    specs: tuple[LayerSpec, ...]
+    scanned: bool            # True -> params stacked, lax.scan over layers
+
+    @property
+    def length(self) -> int:
+        return self.end - self.start
+
+
+def plan_segments(cfg: ModelConfig) -> tuple[Segment, ...]:
+    bounds = segment_boundaries(cfg)
+    segs = []
+    prev = 0
+    for b in bounds:
+        specs = cfg.block_pattern[prev:b]
+        uniform = all(s == specs[0] for s in specs)
+        shared = any(s.mixer == MIXER_SHARED_GQA for s in specs)
+        segs.append(Segment(prev, b, tuple(specs),
+                            scanned=uniform and not shared and len(specs) > 1))
+        prev = b
+    return tuple(segs)
+
+
+def _window_for(cfg: ModelConfig, spec: LayerSpec) -> int:
+    if spec.mixer == MIXER_GQA_LOCAL:
+        return cfg.sliding_window
+    if (spec.mixer in (MIXER_SHARED_GQA, MIXER_MLA)
+            and cfg.name.endswith("+win")):
+        return cfg.sliding_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (beyond-paper; cfg.kv_cache_dtype == "int8")
+# ---------------------------------------------------------------------------
+def _quant_kv(x):
+    """[..., KH, hd] -> (int8 values, per-(slot, head) f32 scale)."""
+    sc = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(x.astype(jnp.float32)
+                  / jnp.maximum(sc[..., None], 1e-8)).astype(jnp.int8)
+    return q, sc
+
+
+def _dequant_kv(q, sc, dtype):
+    # multiply in the target dtype — an f32 intermediate would materialize
+    # cache-sized f32 buffers per layer (measured in §Perf iteration B2);
+    # on real TPU the int8 cache should instead be dequantized in-VMEM by
+    # the flash_decode Pallas kernel.
+    return q.astype(dtype) * sc[..., None].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, n: int | None):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(cfg, n)}
+    if spec.mixer == MIXER_MAMBA:
+        p["mixer"] = ssm.init_mamba(ks[0], cfg, n)
+    elif spec.mixer == MIXER_MLA:
+        p["mixer"] = init_mla(ks[0], cfg, n)
+    elif spec.mixer == MIXER_SHARED_GQA:
+        pass  # weights live at the top level (params["shared_attn"])
+    else:
+        p["mixer"] = init_gqa(ks[0], cfg, n)
+    if spec.ffn != FFN_NONE:
+        p["norm2"] = init_norm(cfg, n)
+        if spec.ffn == FFN_MOE:
+            # nested under "moe" so sharding PARAM_RULES can distinguish
+            # expert tensors [E, d, f] from dense MLP tensors [d, f]
+            p["ffn"] = {"moe": init_moe(ks[1], cfg, n)}
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg, n)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    segs = plan_segments(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: dict[str, Any] = {"embed": init_embed(keys[0], cfg)}
+    if any(s.mixer == MIXER_SHARED_GQA for s in cfg.block_pattern):
+        params["shared_attn"] = init_gqa(keys[1], cfg, None)
+    seg_params = []
+    for i, seg in enumerate(segs):
+        k = keys[2 + i]
+        if seg.scanned:
+            seg_params.append(_init_layer(k, cfg, seg.specs[0], seg.length))
+        else:
+            lks = jax.random.split(k, seg.length)
+            seg_params.append([_init_layer(lks[j], cfg, seg.specs[j], None)
+                               for j in range(seg.length)])
+    params["segments"] = seg_params
+    params["final_norm"] = init_norm(cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            keys[-1], (cfg.d_model, padded_vocab(cfg)))
+            * cfg.d_model ** -0.5)
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype), params)
+    return params
+
+
+def head_matrix(params, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["head"]
+
+
+def lm_logits(params, cfg: ModelConfig, h: Array) -> Array:
+    """Final-norm + (single, shared) LM head; gemma2 final softcap.
+
+    Returns logits over the *padded* vocab (multiple of 256) with padding
+    columns at -inf — downstream argmax/softmax/CE are unaffected and the
+    vocab dim shards cleanly over the model axis."""
+    h = apply_norm(params["final_norm"], h)
+    logits = h @ head_matrix(params, cfg)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    pv = logits.shape[-1]
+    if pv != cfg.vocab_size:
+        col = jnp.arange(pv)
+        logits = jnp.where(col < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    if logits.ndim == 3:
+        return constrain(logits, "batch", "seq_mp", "vocab")
+    return constrain(logits, "batch", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Single-layer application
+# ---------------------------------------------------------------------------
+def _moe_capacity_factor(cfg: ModelConfig, inference: bool) -> float:
+    """Training uses the standard 1.25 capacity factor (tokens may drop).
+
+    Inference uses 2.0: effectively dropless at decode/small-batch scales
+    (prefill/decode parity holds while T*K*2/E >= max expert load, always
+    true in our test regimes) while keeping the [T, E, C] dispatch bounded
+    at prefill scale — a fully dropless E/K factor makes C = T, i.e. an
+    O(T^2*E) dispatch tensor (31 TiB/device at 1M prefill tokens)."""
+    if inference:
+        return min(2.0,
+                   float(cfg.moe.num_experts) / cfg.moe.num_experts_per_tok)
+    return cfg.moe.train_capacity_factor
+
+
+def _apply_layer_full(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
+                      h: Array, *, want_cache: bool, inference: bool = False,
+                      pos_offset: int = 0):
+    """Full-sequence layer. Returns (h, cache_or_None, aux)."""
+    window = _window_for(cfg, spec)
+    aux = jnp.zeros((), jnp.float32)
+    x = apply_norm(lp["norm1"], h)
+    cache = None
+    if spec.mixer == MIXER_MAMBA:
+        out, cache = ssm.apply_mamba_train(lp["mixer"], cfg, x,
+                                           return_cache=want_cache)
+    elif spec.mixer == MIXER_MLA:
+        out, (latent, krope) = apply_mla_train(lp["mixer"], cfg, x,
+                                               window=window,
+                                               pos_offset=pos_offset)
+        if want_cache:
+            cache = {"latent": latent, "krope": krope}
+    else:
+        mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
+        out, (k, v) = apply_gqa_train(mp, cfg, x, window=window,
+                                      pos_offset=pos_offset)
+        if want_cache:
+            cache = {"k": k, "v": v}
+    h = h + out
+    if spec.ffn != FFN_NONE:
+        x = apply_norm(lp["norm2"], h)
+        if spec.ffn == FFN_MOE:
+            y, aux = apply_moe(lp["ffn"]["moe"], cfg, x,
+                               capacity_factor=_moe_capacity_factor(
+                                   cfg, inference=inference or want_cache))
+        else:
+            y = apply_mlp(lp["ffn"], cfg, x)
+        h = h + y
+    h = constrain(h, "batch", "seq", "embed")
+    return h, cache, aux
+
+
+def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
+                        h: Array, cache, pos: Array, active: Array):
+    """One-token decode layer with cache update.
+
+    ``active``: [B] bool — tokens that have NOT exited. For exited tokens the
+    layer still computes and stores K/V (propagation) but the hidden-state
+    update is discarded.
+    Returns (h, new_cache, aux).
+    """
+    window = _window_for(cfg, spec)
+    aux = jnp.zeros((), jnp.float32)
+    x = apply_norm(lp["norm1"], h)
+    B = h.shape[0]
+    if spec.mixer == MIXER_MAMBA:
+        out, new_cache = ssm.apply_mamba_decode(lp["mixer"], cfg, x, cache)
+    elif spec.mixer == MIXER_MLA:
+        W = cache["latent"].shape[1]
+        out, lat_new, kr_new = apply_mla_decode(
+            lp["mixer"], cfg, x, cache["latent"], cache["krope"],
+            cache["pos"], pos, window=window)
+        slot = pos % W
+        bidx = jnp.arange(B)
+        new_cache = {
+            "latent": cache["latent"].at[bidx, slot].set(lat_new[:, 0]),
+            "krope": cache["krope"].at[bidx, slot].set(kr_new[:, 0]),
+            "pos": cache["pos"].at[bidx, slot].set(pos),
+        }
+    else:
+        mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
+        W = cache["k"].shape[1]
+        int8 = "k_s" in cache
+        if int8:
+            k_read = _dequant_kv(cache["k"], cache["k_s"], x.dtype)
+            v_read = _dequant_kv(cache["v"], cache["v_s"], x.dtype)
+        else:
+            k_read, v_read = cache["k"], cache["v"]
+        out, k_new, v_new = apply_gqa_decode(
+            mp, cfg, x, k_read, v_read, cache["pos"], pos,
+            window=window)
+        slot = pos % W
+        bidx = jnp.arange(B)
+        if int8:
+            kq, ks = _quant_kv(k_new[:, 0])
+            vq, vs = _quant_kv(v_new[:, 0])
+            new_cache = {
+                "k": cache["k"].at[bidx, slot].set(kq),
+                "v": cache["v"].at[bidx, slot].set(vq),
+                "k_s": cache["k_s"].at[bidx, slot].set(ks),
+                "v_s": cache["v_s"].at[bidx, slot].set(vs),
+                "pos": cache["pos"].at[bidx, slot].set(pos),
+            }
+        else:
+            new_cache = {
+                "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
+                "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
+                "pos": cache["pos"].at[bidx, slot].set(pos),
+            }
+    h_new = h + out
+    if spec.ffn != FFN_NONE:
+        x2 = apply_norm(lp["norm2"], h_new)
+        if spec.ffn == FFN_MOE:
+            y, aux = apply_moe(lp["ffn"]["moe"], cfg, x2,
+                               capacity_factor=_moe_capacity_factor(
+                                   cfg, inference=True))
+        else:
+            y = apply_mlp(lp["ffn"], cfg, x2)
+        h_new = h_new + y
+    # predication: exited tokens keep their frozen hidden state
+    h = jnp.where(active[:, None, None], h_new, h)
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Segment application
+# ---------------------------------------------------------------------------
+def _apply_segment_full(sp, shared_p, h, *, cfg, seg: Segment,
+                        want_cache: bool, inference: bool = False,
+                        pos_offset: int = 0):
+    if seg.scanned:
+        spec = seg.specs[0]
+
+        def body(carry, lp):
+            h, aux = carry
+            h, cache, a = _apply_layer_full(lp, shared_p, cfg, spec, h,
+                                            want_cache=want_cache,
+                                            inference=inference,
+                                            pos_offset=pos_offset)
+            return (h, aux + a), cache
+
+        (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                        sp)
+        return h, caches, aux
+    caches = []
+    aux = jnp.zeros((), jnp.float32)
+    for j, spec in enumerate(seg.specs):
+        h, cache, a = _apply_layer_full(sp[j], shared_p, cfg, spec, h,
+                                        want_cache=want_cache,
+                                        inference=inference,
+                                        pos_offset=pos_offset)
+        caches.append(cache)
+        aux = aux + a
+    return h, caches, aux
+
+
+def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
+                          pos, active):
+    if seg.scanned:
+        spec = seg.specs[0]
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, cache = xs
+            h, new_cache, a = _apply_layer_decode(lp, shared_p, cfg, spec, h,
+                                                  cache, pos, active)
+            return (h, aux + a), new_cache
+
+        (h, aux), new_caches = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), (sp, caches))
+        return h, new_caches, aux
+    new_caches = []
+    aux = jnp.zeros((), jnp.float32)
+    for j, spec in enumerate(seg.specs):
+        h, nc, a = _apply_layer_decode(sp[j], shared_p, cfg, spec, h,
+                                       caches[j], pos, active)
+        new_caches.append(nc)
+        aux = aux + a
+    return h, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Public forward passes
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg: ModelConfig, tokens: Array,
+                 prefix_embed: Optional[Array] = None,
+                 pos: Optional[Array] = None) -> Array:
+    """Embed tokens; ``pos`` [B] gives per-example absolute positions for
+    single-token decode (learned positional embeddings)."""
+    if pos is not None and cfg.positional == "learned":
+        h = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        pidx = jnp.clip(pos, 0, cfg.max_position - 1)
+        h = h + jnp.take(params["embed"]["pos"], pidx, axis=0)[:, None, :]
+    else:
+        h = embed_tokens(params["embed"], cfg, tokens)
+    if prefix_embed is not None:
+        h = jnp.concatenate([prefix_embed.astype(h.dtype), h], axis=1)
+    return constrain(h, "batch", "seq", "embed")
+
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            prefix_embed: Optional[Array] = None, *, remat: bool = False,
+            inference: bool = False):
+    """Full-sequence forward.
+
+    Returns (exit_hiddens, aux): ``exit_hiddens`` is a list of [B, S, D]
+    hidden states, one per segment boundary — entries 0..n-2 are the paper's
+    exit points, the last entry is the final layer.
+    """
+    segs = plan_segments(cfg)
+    h = embed_inputs(params, cfg, tokens, prefix_embed)
+    shared_p = params.get("shared_attn")
+    aux = jnp.zeros((), jnp.float32)
+    outs = []
+    for i, seg in enumerate(segs):
+        fn = partial(_apply_segment_full, cfg=cfg, seg=seg, want_cache=False,
+                     inference=inference)
+        if remat:
+            h, a = jax.checkpoint(
+                lambda sp, shp, h, fn=fn: fn(sp, shp, h)[::2])(
+                    params["segments"][i], shared_p, h)
+        else:
+            h, _, a = fn(params["segments"][i], shared_p, h)
+        aux = aux + a
+        outs.append(h)
+    return outs, aux
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array,
+            prefix_embed: Optional[Array] = None,
+            max_len: Optional[int] = None):
+    """Run the prompt, build decode caches.
+
+    Returns (h_final [B,S,D], caches, aux). Caches are ring buffers of
+    length min(max_len, window or max_len) per attention layer, where
+    ``max_len`` (default S) must cover prompt + all generated tokens for
+    full-attention layers.
+    """
+    segs = plan_segments(cfg)
+    h = embed_inputs(params, cfg, tokens, prefix_embed)
+    S = h.shape[1]
+    max_len = max(max_len or S, S)
+    shared_p = params.get("shared_attn")
+    aux = jnp.zeros((), jnp.float32)
+    raw_caches = []
+    for i, seg in enumerate(segs):
+        h, caches, a = _apply_segment_full(params["segments"][i], shared_p,
+                                           h, cfg=cfg, seg=seg,
+                                           want_cache=True)
+        raw_caches.append(caches)
+        aux = aux + a
+    caches = _ring_from_prefill(cfg, segs, raw_caches, S, max_len)
+    return h, caches, aux
+
+
+def _ring_one(cfg: ModelConfig, spec: LayerSpec, cache, S: int,
+              max_len: int, stacked: bool):
+    """Convert full-sequence cache entries into a ring buffer.
+
+    Ring invariant (shared with decode insertion at ``slot = pos % W``):
+    slot ``s`` holds the most recent position ``p < S`` with ``p % W == s``;
+    empty slots carry pos = -1.
+    """
+    if cache is None:
+        return None
+    if spec.mixer == MIXER_MAMBA:
+        return cache                                  # already constant-size
+    window = _window_for(cfg, spec)
+    W = min(max_len, window) if window else max_len
+    seq_ax = 2 if stacked else 1                      # [L?, B, S, ...]
+
+    def ring(x):
+        if S <= W:
+            pad = [(0, 0)] * x.ndim
+            pad[seq_ax] = (0, W - S)
+            return jnp.pad(x, pad)
+        last = jax.lax.slice_in_dim(x, S - W, S, axis=seq_ax)
+        slot = jnp.arange(S - W, S) % W
+        # scatter last[j] -> ring[slot[j]]: slot is a permutation of 0..W-1
+        return jnp.take(last, jnp.argsort(slot), axis=seq_ax)
+
+    if S <= W:
+        kv_pos = jnp.where(jnp.arange(W) < S, jnp.arange(W), -1)
+    else:
+        s = jnp.arange(W)
+        base = S - W
+        kv_pos = base + (s - base) % W
+    out = {k: ring(v) for k, v in cache.items()}
+    if cfg.kv_cache_dtype == "int8" and "k" in out:
+        out["k"], out["k_s"] = _quant_kv(out["k"])
+        out["v"], out["v_s"] = _quant_kv(out["v"])
+    anchor = next(iter(cache.values()))
+    B = anchor.shape[1] if stacked else anchor.shape[0]
+    shape = (anchor.shape[0], B, W) if stacked else (B, W)
+    out["pos"] = jnp.broadcast_to(kv_pos, shape)
+    return out
+
+
+def _ring_from_prefill(cfg, segs, raw_caches, S, max_len):
+    caches = []
+    for seg, c in zip(segs, raw_caches):
+        if seg.scanned:
+            caches.append(_ring_one(cfg, seg.specs[0], c, S, max_len,
+                                    stacked=True))
+        else:
+            caches.append([_ring_one(cfg, spec, cj, S, max_len,
+                                     stacked=False)
+                           for spec, cj in zip(seg.specs, c)])
+    return caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32):
+    """Empty decode caches (pos = -1 everywhere)."""
+    segs = plan_segments(cfg)
+
+    def one(spec: LayerSpec, n: int | None):
+        pre = (n,) if n is not None else ()
+        window = _window_for(cfg, spec)
+        W = min(max_len, window) if window else max_len
+        if spec.mixer == MIXER_MAMBA:
+            c = ssm.init_mamba_cache(cfg, batch, dtype)
+            if n is not None:
+                c = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n, *x.shape)).copy(), c)
+            return c
+        if spec.mixer == MIXER_MLA:
+            m = cfg.mla
+            return {
+                "latent": jnp.zeros((*pre, batch, W, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((*pre, batch, W, m.qk_rope_head_dim),
+                                   dtype),
+                "pos": jnp.full((*pre, batch, W), -1, jnp.int32),
+            }
+        kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        c = {
+            "k": jnp.zeros((*pre, batch, W, cfg.num_kv_heads, cfg.head_dim),
+                           kv_dtype),
+            "v": jnp.zeros((*pre, batch, W, cfg.num_kv_heads, cfg.head_dim),
+                           kv_dtype),
+            "pos": jnp.full((*pre, batch, W), -1, jnp.int32),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            c["k_s"] = jnp.zeros((*pre, batch, W, cfg.num_kv_heads),
+                                 jnp.float32)
+            c["v_s"] = jnp.zeros((*pre, batch, W, cfg.num_kv_heads),
+                                 jnp.float32)
+        return c
+
+    caches = []
+    for seg in segs:
+        if seg.scanned:
+            caches.append(one(seg.specs[0], seg.length))
+        else:
+            caches.append([one(spec, None) for spec in seg.specs])
+    return caches
+
+
+ControllerFn = Callable[[Array, int], Optional[Array]]
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, caches, pos: Array,
+                controller: Optional[ControllerFn] = None):
+    """One decode step with dynamic early exit.
+
+    tokens: [B] current input token ids; pos: [B] absolute positions.
+    ``controller(h2d, exit_idx) -> exit_prob [B] | None`` is consulted at
+    every exit boundary. Returns (logits [B, V], new_caches, info) where
+    info = {exit_layer: [B] layers *used* per token, aux}.
+    """
+    segs = plan_segments(cfg)
+    B = tokens.shape[0]
+    h = embed_inputs(params, cfg, tokens[:, None], pos=pos)
+    shared_p = params.get("shared_attn")
+    active = jnp.ones((B,), bool)
+    exit_layer = jnp.full((B,), cfg.num_layers, jnp.int32)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, seg in enumerate(segs):
+        h, nc, a = _apply_segment_decode(params["segments"][i], shared_p, cfg,
+                                         seg, h, caches[i], pos, active)
+        new_caches.append(nc)
+        aux = aux + a
+        is_last = i == len(segs) - 1
+        if controller is not None and not is_last:
+            p_exit = controller(h[:, 0, :], i)
+            if p_exit is not None:
+                newly = active & (p_exit > 0.5)
+                exit_layer = jnp.where(newly, seg.end, exit_layer)
+                active = active & ~newly
+    logits = lm_logits(params, cfg, h)[:, 0, :]
+    info = {"exit_layer": exit_layer, "aux": aux}
+    return logits, new_caches, info

@@ -1,0 +1,115 @@
+"""Vectorized early-exit MDP over a rollout cache (paper §IV A-E).
+
+State   — the current boundary's hidden state (nothing else, §IV-B).
+Actions — 0 = CONTINUE (advance one exit boundary), 1 = EXIT (§IV-C).
+Rewards — Eqs. (2)/(3), with penalties normalized to [-1, 0] by the model
+depth as the paper prescribes. ℓ_opt is the shallowest boundary whose head
+prediction matches the final layer's.
+
+Episode = one cached generation (T tokens). EXIT (or CONTINUE past the last
+boundary, which the paper treats as a forced exit) advances to the next
+token; finishing the last token ends the episode and a new cached episode
+is sampled. Fully jax: state is a pytree of arrays over N parallel lanes,
+``step`` is jit/scan-compatible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.rollout import RolloutCache
+
+CONTINUE, EXIT = 0, 1
+
+
+@dataclass(frozen=True)
+class RewardCoefs:
+    """Paper Eq. 2/3 trade-off coefficients (0 <= a,b,g <= 1, alpha <= beta)."""
+    alpha: float = 0.2       # late-exit penalty (correct but past ℓ_opt)
+    beta: float = 1.0        # early-exit penalty (wrong, before ℓ_opt)
+    gamma: float = 1.0       # late-continue penalty
+    epsilon: float = 0.1     # edge case: wrong and past ℓ_opt
+
+
+@dataclass
+class EnvArrays:
+    """Device-resident cache tensors."""
+    hidden: jax.Array        # [E, T, n_b, D]
+    preds: jax.Array         # [E, T, n_b]
+    l_opt: jax.Array         # [E, T]
+    boundaries: jax.Array    # [n_b]
+
+
+class EarlyExitEnv:
+    def __init__(self, cache: RolloutCache, coefs: RewardCoefs = RewardCoefs(),
+                 n_lanes: int = 16):
+        self.arrays = EnvArrays(
+            hidden=jnp.asarray(cache.hidden),
+            preds=jnp.asarray(cache.preds),
+            l_opt=jnp.asarray(cache.l_opt),
+            boundaries=jnp.asarray(cache.boundaries))
+        self.coefs = coefs
+        self.n_lanes = n_lanes
+        self.num_layers = cache.num_layers
+        self.n_b = len(cache.boundaries)
+        self.T = cache.tokens_per_episode
+        self.E = cache.n_episodes
+        self.d_model = cache.hidden.shape[-1]
+
+    # state pytree: dict(ep, tok, b) each [N] int32
+    def reset(self, key) -> tuple[dict, jax.Array]:
+        ep = jax.random.randint(key, (self.n_lanes,), 0, self.E)
+        state = {"ep": ep,
+                 "tok": jnp.zeros((self.n_lanes,), jnp.int32),
+                 "b": jnp.zeros((self.n_lanes,), jnp.int32)}
+        return state, self._obs(state)
+
+    def _obs(self, state) -> jax.Array:
+        return self.arrays.hidden[state["ep"], state["tok"], state["b"]]
+
+    @partial(jax.jit, static_argnums=(0,))
+    def step(self, state, action, key):
+        """action: [N] in {0,1}. Returns (state, obs, reward, done)."""
+        a = self.arrays
+        c = self.coefs
+        N = self.num_layers
+        ep, tok, b = state["ep"], state["tok"], state["b"]
+        l_curr = a.boundaries[b]                          # [N_lanes]
+        l_opt = a.l_opt[ep, tok]
+        y_pred = a.preds[ep, tok, b]
+        y = a.preds[ep, tok, -1]
+        correct = y_pred == y
+        at_last = b >= self.n_b - 1
+        # paper: CONTINUE past the final layer == forced exit
+        act = jnp.where(at_last, EXIT, action)
+
+        # ---- Eq. 2: exit reward -----------------------------------------
+        dist = jnp.abs(l_curr - l_opt).astype(jnp.float32) / N
+        r_exit = jnp.where(
+            correct & (l_curr == l_opt), 1.0,
+            jnp.where(correct, -dist * c.alpha,                # late exit
+                      jnp.where(l_curr < l_opt, -dist * c.beta,  # too early
+                                -c.epsilon)))                  # edge case
+
+        # ---- Eq. 3: continue reward -------------------------------------
+        l_next = a.boundaries[jnp.minimum(b + 1, self.n_b - 1)]
+        d_next = jnp.abs(l_next - l_opt).astype(jnp.float32) / N
+        r_cont = jnp.where(l_curr < l_opt, 1.0, -d_next * c.gamma)
+
+        reward = jnp.where(act == EXIT, r_exit, r_cont)
+
+        # ---- transition ---------------------------------------------------
+        exit_taken = act == EXIT
+        tok_next = jnp.where(exit_taken, tok + 1, tok)
+        b_next = jnp.where(exit_taken, 0, b + 1)
+        done = tok_next >= self.T
+        # resample episode on done
+        new_ep = jax.random.randint(key, (self.n_lanes,), 0, self.E)
+        ep = jnp.where(done, new_ep, ep)
+        tok_next = jnp.where(done, 0, tok_next)
+        b_next = jnp.where(done, 0, b_next)
+        new_state = {"ep": ep, "tok": tok_next, "b": b_next}
+        return new_state, self._obs(new_state), reward, done

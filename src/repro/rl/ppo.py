@@ -1,0 +1,159 @@
+"""PPO (clipped surrogate) from scratch in JAX (paper §V, Table III).
+
+Actor-critic = core/policy_net (shared torso, pi/v heads). Rollout
+collection is a ``lax.scan`` over the vectorized cache env; GAE advantages;
+minibatched clipped-surrogate updates with Adam. The whole update is one
+jit region, so 500k-step trainings run in seconds on CPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy_net
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    total_steps: int = 200_000       # env steps (paper: 200k-500k)
+    horizon: int = 256               # steps per lane per iteration
+    n_lanes: int = 16
+    epochs: int = 4                  # paper: 6, 2
+    minibatches: int = 8
+    lr: float = 5e-5                 # paper: 5e-5 / 1e-4
+    gamma: float = 0.99              # paper Table III
+    gae_lambda: float = 0.95
+    clip: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    max_grad_norm: float = 0.5
+    hidden: tuple = (64, 64)         # paper: 1-2 layers, 32/64 units
+
+
+def collect_rollout(agent, env, state, key, horizon: int):
+    """lax.scan rollout. Returns (new_state, batch dict, new_key)."""
+
+    def body(carry, _):
+        st, k = carry
+        k, k_act, k_step = jax.random.split(k, 3)
+        obs = env._obs(st)
+        logits, v = policy_net.policy_value(agent, obs)
+        a = jax.random.categorical(k_act, logits)
+        logp = jax.nn.log_softmax(logits)[jnp.arange(a.shape[0]), a]
+        st2, obs2, r, done = env.step(st, a, k_step)
+        out = {"obs": obs, "action": a, "logp": logp, "value": v,
+               "reward": r, "done": done}
+        return (st2, k), out
+
+    (state, key), traj = jax.lax.scan(body, (state, key), None,
+                                      length=horizon)
+    return state, traj, key
+
+
+def compute_gae(traj, last_value, gamma: float, lam: float):
+    """traj arrays are [T, N]."""
+
+    def body(carry, inp):
+        adv_next, v_next = carry
+        r, v, done = inp
+        nonterm = 1.0 - done.astype(jnp.float32)
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        body, (jnp.zeros_like(last_value), last_value),
+        (traj["reward"], traj["value"], traj["done"]), reverse=True)
+    returns = advs + traj["value"]
+    return advs, returns
+
+
+def ppo_loss(agent, batch, clip: float, vf_coef: float, ent_coef: float):
+    logits, v = policy_net.policy_value(agent, batch["obs"])
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, batch["action"][:, None], 1)[:, 0]
+    ratio = jnp.exp(logp - batch["logp"])
+    adv = batch["adv"]
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    pg = -jnp.minimum(ratio * adv,
+                      jnp.clip(ratio, 1 - clip, 1 + clip) * adv).mean()
+    vf = jnp.square(v - batch["ret"]).mean()
+    ent = -(jnp.exp(logp_all) * logp_all).sum(-1).mean()
+    return pg + vf_coef * vf - ent_coef * ent, {
+        "pg": pg, "vf": vf, "entropy": ent}
+
+
+def ppo_train(env, *, config: PPOConfig = PPOConfig(), seed: int = 0,
+              log_every: int = 10, callback=None):
+    """Train the exit agent on a cache env. Returns (agent, history)."""
+    cfg = config
+    key = jax.random.PRNGKey(seed)
+    key, k_init, k_reset = jax.random.split(key, 3)
+    agent = policy_net.init_policy(k_init, env.d_model, cfg.hidden)
+    opt = adamw_init(agent)
+    state, _ = env.reset(k_reset)
+
+    n_lanes = env.n_lanes                 # env is authoritative
+    n_iters = max(1, cfg.total_steps // (cfg.horizon * n_lanes))
+    batch_size = cfg.horizon * n_lanes
+    mb_size = batch_size // cfg.minibatches
+
+    @jax.jit
+    def update(agent, opt, traj, last_obs, key):
+        _, last_v = policy_net.policy_value(agent, last_obs)
+        advs, rets = compute_gae(traj, last_v, cfg.gamma, cfg.gae_lambda)
+        flat = {
+            "obs": traj["obs"].reshape(batch_size, -1),
+            "action": traj["action"].reshape(batch_size),
+            "logp": traj["logp"].reshape(batch_size),
+            "adv": advs.reshape(batch_size),
+            "ret": rets.reshape(batch_size),
+        }
+
+        def epoch_body(carry, k_ep):
+            agent, opt = carry
+            perm = jax.random.permutation(k_ep, batch_size)
+
+            def mb_body(carry, i):
+                agent, opt = carry
+                idx = jax.lax.dynamic_slice_in_dim(perm, i * mb_size,
+                                                   mb_size)
+                mb = {k: v[idx] for k, v in flat.items()}
+                (loss, aux), g = jax.value_and_grad(
+                    ppo_loss, has_aux=True)(agent, mb, cfg.clip,
+                                            cfg.vf_coef, cfg.ent_coef)
+                agent, opt = adamw_update(
+                    agent, g, opt, cfg.lr, weight_decay=0.0,
+                    max_grad_norm=cfg.max_grad_norm)
+                return (agent, opt), loss
+
+            (agent, opt), losses = jax.lax.scan(
+                mb_body, (agent, opt), jnp.arange(cfg.minibatches))
+            return (agent, opt), losses.mean()
+
+        keys = jax.random.split(key, cfg.epochs)
+        (agent, opt), losses = jax.lax.scan(epoch_body, (agent, opt), keys)
+        return agent, opt, losses.mean()
+
+    history = []
+    for it in range(n_iters):
+        key, k_roll, k_upd = jax.random.split(key, 3)
+        state, traj, _ = collect_rollout(agent, env, state, k_roll,
+                                         cfg.horizon)
+        last_obs = env._obs(state)
+        agent, opt, loss = update(agent, opt, traj, last_obs, k_upd)
+        mean_r = float(traj["reward"].mean())
+        ep_done = float(traj["done"].sum())
+        history.append({"iter": it, "mean_step_reward": mean_r,
+                        "loss": float(loss), "episodes": ep_done})
+        if callback:
+            callback(it, history[-1])
+        if log_every and it % log_every == 0:
+            print(f"  ppo iter {it:4d}/{n_iters}  mean step reward "
+                  f"{mean_r:+.4f}", flush=True)
+    return agent, history

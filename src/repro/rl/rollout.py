@@ -1,0 +1,90 @@
+"""Rollout cache: pre-computed LLM traces for fast RL training.
+
+The paper's Gym env re-runs the LLM inside every RL step. Identical MDP,
+different engineering (DESIGN.md §2): we pre-run the fine-tuned LLM over
+sampled code-completion episodes and store, per generated token, the hidden
+state / head prediction at every exit boundary plus ℓ_opt (the shallowest
+boundary whose prediction matches the final layer's — the paper's optimal
+exit). Episode dynamics then become pure array indexing; the agent still
+observes only the current hidden state + reward.
+
+Decode-vs-forward parity of the model guarantees these teacher-forced
+hiddens equal the decode-time hiddens the controller will see at inference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.early_exit import generate
+from repro.core.exit_points import segment_boundaries
+from repro.models import transformer as T
+
+
+@dataclass
+class RolloutCache:
+    hidden: np.ndarray      # [E, T, n_b, D] float32 — state at each boundary
+    preds: np.ndarray       # [E, T, n_b] int32 — head argmax per boundary
+    l_opt: np.ndarray       # [E, T] int32 — optimal exit layer (layer units)
+    boundaries: np.ndarray  # [n_b] int32 — layer number of each boundary
+    num_layers: int
+
+    @property
+    def n_episodes(self):
+        return self.hidden.shape[0]
+
+    @property
+    def tokens_per_episode(self):
+        return self.hidden.shape[1]
+
+
+def build_rollout_cache(params, cfg: ModelConfig, dataset, *,
+                        n_episodes: int = 64, gen_tokens: int = 15,
+                        batch: int = 8, split: str = "train",
+                        seed: int = 0, max_context: int = 256
+                        ) -> RolloutCache:
+    """Sample episodes (context-fraction protocol), generate ``gen_tokens``
+    greedily with the full model, then collect per-boundary hiddens/preds
+    over the generated positions with one forward pass."""
+    bounds = np.asarray(segment_boundaries(cfg), np.int32)
+    n_b = len(bounds)
+    tasks = dataset.completion_tasks(split, n_episodes, seed=seed,
+                                     max_context=max_context)
+    # left-pad contexts to a common length per mini-batch
+    H, P, L = [], [], []
+    for i in range(0, n_episodes, batch):
+        chunk = tasks[i: i + batch]
+        ctx_len = max(len(c) for c, _ in chunk)
+        ctxs = np.zeros((len(chunk), ctx_len), np.int32)
+        for j, (c, _) in enumerate(chunk):
+            ctxs[j, ctx_len - len(c):] = c          # left-pad with PAD=0
+        ctxs = jnp.asarray(ctxs)
+        out = generate(params, cfg, ctxs, gen_tokens)
+        toks = out["tokens"]                         # [b, T]
+        full = jnp.concatenate([ctxs, toks], axis=1)
+        outs, _ = T.forward(params, cfg, full, inference=True)
+        # hidden predicting generated token t sits at position ctx_len-1+t
+        pos = ctx_len - 1 + np.arange(gen_tokens)
+        hb, pb = [], []
+        for h in outs:                               # per boundary
+            hsel = h[:, pos, :]                      # [b, T, D]
+            logits = T.lm_logits(params, cfg, hsel)
+            hb.append(np.asarray(hsel, np.float32))
+            pb.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+        hb = np.stack(hb, axis=2)                    # [b, T, n_b, D]
+        pb = np.stack(pb, axis=2)                    # [b, T, n_b]
+        H.append(hb)
+        P.append(pb)
+    hidden = np.concatenate(H, axis=0)
+    preds = np.concatenate(P, axis=0)
+    # ℓ_opt: shallowest boundary matching the final boundary's prediction
+    final = preds[..., -1:]
+    match = preds == final                           # [E, T, n_b]
+    first_idx = np.argmax(match, axis=-1)            # first True
+    l_opt = bounds[first_idx].astype(np.int32)
+    return RolloutCache(hidden=hidden, preds=preds, l_opt=l_opt,
+                        boundaries=bounds, num_layers=cfg.num_layers)

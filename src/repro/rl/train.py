@@ -1,0 +1,28 @@
+"""End-to-end RL agent training: fine-tuned LLM -> rollout cache -> PPO.
+
+Reproduces the paper's offline phase (Fig. 2): the fine-tuned early-exit
+model is rolled out over the code corpus; the PPO agent learns the
+exit policy from the cached traces; the extracted policy network is then
+used by ``core.controller.make_policy`` at inference.
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.rl.env import EarlyExitEnv, RewardCoefs
+from repro.rl.ppo import PPOConfig, ppo_train
+from repro.rl.rollout import build_rollout_cache
+
+
+def train_agent(params, cfg: ModelConfig, dataset, *,
+                n_episodes: int = 64, gen_tokens: int = 15,
+                coefs: RewardCoefs | None = None,
+                ppo: PPOConfig | None = None, n_lanes: int = 16,
+                seed: int = 0, log_every: int = 10):
+    """Returns (agent_params, history, cache)."""
+    cache = build_rollout_cache(params, cfg, dataset,
+                                n_episodes=n_episodes,
+                                gen_tokens=gen_tokens, seed=seed)
+    env = EarlyExitEnv(cache, coefs or RewardCoefs(), n_lanes=n_lanes)
+    agent, history = ppo_train(env, config=ppo or PPOConfig(), seed=seed,
+                               log_every=log_every)
+    return agent, history, cache

@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, ServeResult  # noqa: F401
+from repro.serving.metrics import RequestMetrics, aggregate_metrics  # noqa

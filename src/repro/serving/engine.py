@@ -1,0 +1,83 @@
+"""Batched serving engine with early-exit decode (paper §V deployment).
+
+The engine mirrors the paper's endpoint: requests (token lists) are batched,
+left-padded, prefetched through full-depth prefill, then decoded with the
+exit controller. EOS stops a sequence (its later tokens are masked out of
+the response and of the energy accounting).
+
+``make_serve_step`` exposes the jit-able one-token step used by the
+multi-pod dry-run (launch/dryrun.py) — batch sharded over ``data``,
+heads/experts over ``model``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.early_exit import generate
+from repro.data.tokenizer import EOS, PAD
+from repro.serving.metrics import RequestMetrics, request_metrics
+
+Array = jax.Array
+
+
+@dataclass
+class ServeResult:
+    tokens: list[list[int]]          # per request, truncated at EOS
+    exit_layers: list[list[int]]
+    metrics: list[RequestMetrics]
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, controller=None, *,
+                 max_new: int = 15, max_context: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.controller = controller
+        self.max_new = max_new
+        self.max_context = max_context
+
+    def serve(self, requests: Sequence[Sequence[int]],
+              max_new: Optional[int] = None) -> ServeResult:
+        max_new = max_new or self.max_new
+        B = len(requests)
+        ctx_len = min(self.max_context, max(len(r) for r in requests))
+        ctx = np.full((B, ctx_len), PAD, np.int32)
+        for i, r in enumerate(requests):
+            r = list(r)[-ctx_len:]
+            ctx[i, ctx_len - len(r):] = r
+        out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
+                       self.controller, max_len=ctx_len + max_new)
+        toks = np.asarray(out["tokens"])
+        exits = np.asarray(out["exit_layers"])
+        tokens, exit_layers, metrics = [], [], []
+        for i in range(B):
+            row = toks[i].tolist()
+            n = row.index(EOS) if EOS in row else len(row)
+            tokens.append(row[:n])
+            el = exits[i, :max(n, 1)]
+            exit_layers.append(el.tolist())
+            metrics.append(request_metrics(self.cfg, el, ctx_len))
+        return ServeResult(tokens, exit_layers, metrics)
+
+
+def make_serve_step(cfg: ModelConfig, controller=None):
+    """One-token decode step closure for jit/pjit lowering.
+
+    signature: step(params, tokens [B], caches, pos [B]) ->
+               (next_tokens [B], new_caches, exit_layer [B])
+    """
+    from repro.models.transformer import decode_step
+
+    def step(params, tokens, caches, pos):
+        logits, new_caches, info = decode_step(params, cfg, tokens, caches,
+                                               pos, controller)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, new_caches, info["exit_layer"]
+
+    return step

@@ -1,0 +1,121 @@
+"""HTTP inference endpoint (paper §V: HF-Inference-API-compatible-ish).
+
+Minimal stdlib server exposing the early-exit engine:
+
+  POST /generate {"inputs": "<code>", "parameters": {"max_new_tokens": 15,
+                  "threshold": 0.9}}
+  -> {"generated_text": ..., "exit_layers": [...], "energy_j": ...,
+      "energy_saving_frac": ...}
+
+The paper wires this into the HuggingFace VS Code extension; the JSON
+contract here mirrors that usage (runtime-adjustable threshold = the
+paper's resource/accuracy knob).
+
+  PYTHONPATH=src python -m repro.serving.server --port 8799   # mini demo
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from http.server import BaseHTTPRequestHandler, HTTPServer
+
+from repro.core.controller import make_controller
+from repro.serving.engine import Engine
+from repro.serving.metrics import aggregate_metrics
+
+
+class _State:
+    engine: Engine = None
+    tokenizer = None
+    params = None
+    cfg = None
+    agent = None
+
+
+def _handle_generate(payload: dict) -> dict:
+    text = payload.get("inputs", "")
+    par = payload.get("parameters", {})
+    max_new = int(par.get("max_new_tokens", 15))
+    thr = float(par.get("threshold", 0.9))
+    kind = par.get("controller", "policy" if _State.agent else "none")
+    ctrl = make_controller(kind, params=_State.params, cfg=_State.cfg,
+                           agent_params=_State.agent, threshold=thr)
+    _State.engine.controller = ctrl
+    ids = _State.tokenizer.encode(text)
+    res = _State.engine.serve([ids], max_new=max_new)
+    agg = aggregate_metrics(res.metrics)
+    return {
+        "generated_text": _State.tokenizer.decode(res.tokens[0]),
+        "exit_layers": res.exit_layers[0],
+        "mean_layers": agg["mean_layers"],
+        "energy_j": agg["energy_j"],
+        "energy_saving_frac": agg["energy_saving_frac"],
+    }
+
+
+class Handler(BaseHTTPRequestHandler):
+    def log_message(self, *a):  # quiet
+        pass
+
+    def _send(self, code: int, obj: dict):
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_POST(self):
+        if self.path.rstrip("/") not in ("/generate", ""):
+            self._send(404, {"error": "unknown path"})
+            return
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(n) or b"{}")
+            self._send(200, _handle_generate(payload))
+        except Exception as e:  # noqa: BLE001
+            self._send(500, {"error": repr(e)})
+
+    def do_GET(self):
+        self._send(200, {"status": "ok", "model": _State.cfg.name,
+                         "num_layers": _State.cfg.num_layers})
+
+
+def setup_mini(train_steps: int = 60, rl: bool = True):
+    """Build a mini model + agent for the demo server (CPU)."""
+    from repro.configs.llama32_3b import paper_mini
+    from repro.data import CodeCompletionDataset
+    from repro.training import train_model
+    cfg = paper_mini(num_layers=12, d_model=192, vocab_size=2048)
+    ds = CodeCompletionDataset(language="java", n_files=120, seq_len=256,
+                               vocab_size=2048)
+    params, _ = train_model(cfg, ds, kind="lite", steps=train_steps,
+                            batch_size=4, lr=1e-3, log_every=0)
+    agent = None
+    if rl:
+        from repro.rl import PPOConfig, train_agent
+        agent, _, _ = train_agent(params, cfg, ds, n_episodes=16,
+                                  gen_tokens=8,
+                                  ppo=PPOConfig(total_steps=20_000),
+                                  log_every=0)
+    _State.cfg, _State.params, _State.agent = cfg, params, agent
+    _State.tokenizer = ds.tokenizer
+    _State.engine = Engine(params, cfg, None)
+    return cfg, ds
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, default=8799)
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--no-rl", action="store_true")
+    args = ap.parse_args()
+    print("[server] preparing mini model ...")
+    setup_mini(args.train_steps, rl=not args.no_rl)
+    srv = HTTPServer(("127.0.0.1", args.port), Handler)
+    print(f"[server] listening on :{args.port} — POST /generate")
+    srv.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

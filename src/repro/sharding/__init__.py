@@ -1,0 +1,4 @@
+from repro.sharding.api import (  # noqa: F401
+    axis_rules, constrain, current_rules, logical_to_pspec, param_shardings,
+    PARAM_RULES, ACT_RULES,
+)

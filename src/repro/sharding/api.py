@@ -1,0 +1,206 @@
+"""Logical-axis sharding (MaxText/flax-linen style, dependency-free).
+
+Model code annotates activations with *logical* axis names via
+:func:`constrain`; the launcher activates a rule set mapping logical names to
+mesh axes with :func:`axis_rules`. Outside a rule context every annotation is
+a no-op, so models run unchanged on a single CPU device.
+
+Mesh-axis allocation is shape-aware: for each array, logical axes are
+resolved right-to-left; a mesh axis is assigned at most once and only if the
+dimension size is divisible by it. Indivisible or conflicting axes fall back
+to replication — e.g. 8 KV heads on a model=16 mesh replicate (the Megatron
+GQA convention), and a 49155-row vocab falls back to sequence sharding where
+the annotation provides one ("seq_mp").
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import re
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# activation logical axis -> mesh axes (tuple = try to use all that fit)
+ACT_RULES = {
+    "batch": ("pod", "data"),   # batch shards over pod x data
+    "seq": None,                # sequence replicated by default
+    "seq_mp": "model",          # fallback sequence sharding (logits, LITE CE)
+    "seq_attn": "model",        # query-seq sharding inside blockwise attention
+    "ctx": "model",             # KV-cache sequence dim (context parallelism)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "state": None,
+}
+
+# parameter path regex -> logical spec applied to the *trailing* dims;
+# leading (stacked-layer) dims are replicated.
+PARAM_RULES = [
+    (r"embed/tok$", ("vocab", "embed")),
+    (r"embed/pos$", (None, "embed")),
+    (r"head$", ("embed", "vocab")),
+    (r"/w[qkv]$", ("embed", "heads")),
+    (r"/wo$", ("heads", "embed")),
+    (r"/(wdq|wdkv|wkr)$", ("embed", "heads")),
+    (r"/(wuq|wuk|wuv)$", (None, "heads")),
+    # expert weights: expert-parallel (experts padded to a multiple of the
+    # model-axis size); the right-to-left allocator would otherwise give
+    # the mesh axis to d_ff, so ff is deliberately unmapped here.
+    (r"moe/(up|gate)$", ("experts", "embed", None)),
+    (r"moe/down$", ("experts", None, "embed")),
+    (r"/shared_(up|gate)$", ("embed", "ff")),
+    (r"/shared_down$", ("ff", "embed")),
+    (r"/router$", ("embed", None)),
+    (r"/(up|gate)$", ("embed", "ff")),
+    (r"/down$", ("ff", "embed")),
+    (r"/in_proj$", ("embed", "heads")),
+    (r"/out_proj$", ("heads", "embed")),
+    (r"/conv_w$", (None, "heads")),
+    (r"/conv_b$", ("heads",)),
+    (r"/gate_norm$", ("heads",)),
+]
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh):
+    """Activate activation-sharding constraints for ``mesh``."""
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def current_rules() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _allocate(logical_axes, shape, mesh: Mesh) -> P:
+    """Assign mesh axes to dims right-to-left, shape- and conflict-aware."""
+    used: set[str] = set()
+    out: list = [None] * len(logical_axes)
+    for i in range(len(logical_axes) - 1, -1, -1):
+        logical = logical_axes[i]
+        if logical is None:
+            continue
+        ax = ACT_RULES.get(logical, logical) if isinstance(logical, str) \
+            else logical
+        if ax is None:
+            continue
+        cand = (ax,) if isinstance(ax, str) else tuple(ax)
+        cand = tuple(a for a in cand
+                     if a in mesh.axis_names and a not in used)
+        # drop leading axes until the product divides the dim
+        while cand and shape[i] % _mesh_size(mesh, cand) != 0:
+            cand = cand[1:]
+        if not cand:
+            continue
+        used.update(cand)
+        out[i] = cand if len(cand) > 1 else cand[0]
+    return P(*out)
+
+
+def logical_to_pspec(logical_axes, mesh: Mesh, shape=None) -> P:
+    if shape is None:
+        shape = tuple(0 for _ in logical_axes)  # unknown: no divisibility
+
+        # unknown shapes: accept everything (legacy callers)
+        used: set = set()
+        out = []
+        for a in logical_axes:
+            ax = ACT_RULES.get(a, a) if isinstance(a, str) else a
+            if ax is None:
+                out.append(None)
+                continue
+            cand = (ax,) if isinstance(ax, str) else tuple(ax)
+            cand = tuple(x for x in cand
+                         if x in mesh.axis_names and x not in used)
+            used.update(cand)
+            out.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+        return P(*out)
+    return _allocate(logical_axes, shape, mesh)
+
+
+def constrain(x, *logical_axes):
+    """Attach a sharding constraint if a rule context is active."""
+    mesh = current_rules()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"constrain: {len(logical_axes)} axes for rank "
+                         f"{x.ndim} array")
+    spec = _allocate(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _spec_for_path(path: str, shape, mesh: Mesh) -> P:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            ndim = len(shape)
+            trail = list(logical)
+            if len(trail) > ndim:
+                trail = trail[-ndim:]
+            lead = [None] * (ndim - len(trail))
+            return _allocate(lead + trail, shape, mesh)
+    return P()  # replicated
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params, mesh: Mesh, *, zero_axes: tuple = ()):
+    """NamedSharding pytree for a param pytree by path-based rules.
+
+    ``zero_axes``: mesh axes (e.g. ("pod", "data")) over which to
+    additionally shard the largest replicated dim of every leaf — ZeRO-style
+    optimizer-state partitioning.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for kp, v in flat:
+        spec = _spec_for_path(_path_str(kp), v.shape, mesh)
+        if zero_axes:
+            spec = _apply_zero(spec, v.shape, mesh, zero_axes)
+        leaves.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _apply_zero(spec: P, shape, mesh: Mesh, zero_axes) -> P:
+    zero_axes = tuple(a for a in zero_axes if a in mesh.axis_names)
+    if not zero_axes:
+        return spec
+    z = _mesh_size(mesh, zero_axes)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # shard the largest currently-replicated dim divisible by z
+    best, best_size = -1, 0
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % z == 0 and s > best_size:
+            best, best_size = i, s
+    if best >= 0:
+        entries[best] = zero_axes if len(zero_axes) > 1 else zero_axes[0]
+    return P(*entries)

@@ -1,0 +1,5 @@
+from repro.training.optimizer import (adamw_init, adamw_update,  # noqa
+                                      make_schedule)
+from repro.training.loop import (TrainState, make_train_step,  # noqa
+                                 train_model)
+from repro.training.checkpoint import load_pytree, save_pytree  # noqa

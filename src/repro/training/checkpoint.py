@@ -1,0 +1,67 @@
+"""Checkpointing: params/optimizer pytrees -> .npz + structure JSON.
+
+No orbax offline; arrays are saved flat with path-derived keys. Works for
+any pytree of jnp/np arrays (params, optimizer state, RL agents).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, v in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = np.asarray(v)
+    return out, treedef
+
+
+def save_pytree(tree, path: str):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, _ = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    # structure spec for exact reconstruction
+    spec = jax.tree.map(lambda x: None, tree)
+    with open(_spec_path(path), "w") as f:
+        json.dump(_spec_of(tree), f)
+
+
+def _spec_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".spec.json"
+
+
+def _spec_of(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _spec_of(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": type(tree).__name__,
+                "items": [_spec_of(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _build(spec, arrays, prefix):
+    kind = spec["__kind__"]
+    if kind == "leaf":
+        return arrays[prefix]
+    if kind == "dict":
+        return {k: _build(v, arrays, f"{prefix}/{k}" if prefix else k)
+                for k, v in spec["items"].items()}
+    items = [_build(v, arrays, f"{prefix}/{i}" if prefix else str(i))
+             for i, v in enumerate(spec["items"])]
+    return items if kind == "list" else tuple(items)
+
+
+def load_pytree(path: str):
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    arrays = dict(np.load(npz_path, allow_pickle=False))
+    with open(_spec_path(path)) as f:
+        spec = json.load(f)
+    return _build(spec, arrays, "")

@@ -1,0 +1,141 @@
+"""Training loop: LITE fine-tuning (the paper's §III-D) and plain CE.
+
+``make_train_step`` builds a jit-able step with optional gradient
+accumulation (lax.scan over microbatches) and remat on segment boundaries.
+The same step lowers under pjit for the production mesh (launch/train.py
+supplies shardings); on CPU it runs the reduced paper models directly.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.lite_loss import lite_loss, token_ce
+from repro.models import transformer as T
+from repro.training.optimizer import adamw_init, adamw_update, make_schedule
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: int = 0
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, mask, *,
+            kind: str = "lite", remat: bool = False,
+            prefix_embed=None, lite_stride: int = 1):
+    """kind: 'lite' (paper Eq. 1) or 'ce' (final layer only, baseline)."""
+    outs, aux = T.forward(params, cfg, tokens, prefix_embed, remat=remat)
+    if kind == "lite":
+        loss, per_layer = lite_loss(params, cfg, outs, labels, mask,
+                                    intermediate_stride=lite_stride)
+    else:
+        logits = T.lm_logits(params, cfg, outs[-1])
+        loss = token_ce(logits, labels, mask)
+        per_layer = loss[None]
+    return loss + 0.01 * aux, (loss, per_layer)
+
+
+def make_train_step(cfg: ModelConfig, *, kind: str = "lite",
+                    lr: float = 1e-5, total_steps: int = 1000,
+                    warmup: int = 50, accum: int = 1, remat: bool = False,
+                    weight_decay: float = 0.01,
+                    donate: bool = True) -> Callable:
+    """Returns step(state_tuple, batch) -> (state_tuple, metrics).
+
+    ``batch``: (tokens, labels, mask) each [accum * B, S] — reshaped into
+    microbatches internally when accum > 1.
+    state_tuple = (params, opt_state, step_idx)
+    """
+    sched = make_schedule("linear", lr, total_steps, warmup)
+
+    def step(state, batch):
+        params, opt, istep = state
+        tokens, labels, mask = batch
+
+        grad_fn = jax.value_and_grad(
+            partial(loss_fn, cfg=cfg, kind=kind, remat=remat), has_aux=True)
+
+        if accum > 1:
+            mb = lambda x: x.reshape(accum, -1, *x.shape[1:])  # noqa: E731
+            micro = (mb(tokens), mb(labels), mb(mask))
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                (l, (ce, _)), g = grad_fn(params, tokens=mb_batch[0],
+                                          labels=mb_batch[1],
+                                          mask=mb_batch[2])
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+        else:
+            (loss, (ce, _)), grads = grad_fn(params, tokens=tokens,
+                                             labels=labels, mask=mask)
+
+        new_params, new_opt = adamw_update(params, grads, opt, sched(istep),
+                                           weight_decay=weight_decay)
+        return (new_params, new_opt, istep + 1), {"loss": loss}
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def train_model(cfg: ModelConfig, dataset, *, kind: str = "lite",
+                steps: int = 200, batch_size: int = 8, lr: float = 1e-4,
+                accum: int = 1, seed: int = 0, log_every: int = 20,
+                params=None, remat: bool = False,
+                callback: Optional[Callable] = None):
+    """CPU-scale training driver (reduced paper models / smoke configs).
+
+    Returns (params, history). ``dataset`` is a CodeCompletionDataset.
+    """
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = T.init_params(key, cfg)
+    opt = adamw_init(params)
+    step_fn = make_train_step(cfg, kind=kind, lr=lr, total_steps=steps,
+                              accum=accum, remat=remat)
+    state = (params, opt, jnp.zeros((), jnp.int32))
+    history = []
+    it = dataset.batches("train", batch_size * accum, epochs=10_000,
+                         seed=seed)
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(it)
+        state, metrics = step_fn(state, tuple(map(jnp.asarray, batch)))
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if callback:
+            callback(i, loss)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"  step {i:5d}  loss {loss:.4f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return state[0], history
+
+
+def evaluate_ce(params, cfg: ModelConfig, dataset, *, split: str = "valid",
+                batch_size: int = 8, max_batches: int = 10,
+                kind: str = "lite"):
+    """Mean CE (final layer) and per-exit-layer CE on a held-out split."""
+    losses = []
+    per_layer = []
+    for i, batch in enumerate(dataset.batches(split, batch_size)):
+        if i >= max_batches:
+            break
+        tokens, labels, mask = map(jnp.asarray, batch)
+        outs, _ = T.forward(params, cfg, tokens)
+        _, pl_losses = lite_loss(params, cfg, outs, labels, mask)
+        per_layer.append(np.asarray(pl_losses))
+        losses.append(float(pl_losses[-1]))
+    return float(np.mean(losses)), np.mean(per_layer, axis=0)

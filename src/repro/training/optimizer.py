@@ -1,0 +1,75 @@
+"""AdamW + LR schedules, dependency-free (no optax offline).
+
+State is a pytree mirroring params: {m, v} plus a scalar step. Weight decay
+is decoupled (AdamW). ``adamw_update`` is shard-agnostic — with params
+sharded by pjit the optimizer state inherits the same sharding (ZeRO-style
+when the caller shards params over data axes too).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup_steps: int = 0) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        frac = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        if kind == "linear":
+            decay = 1.0 - frac
+        elif kind == "cosine":
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:  # constant
+            decay = 1.0
+        return base_lr * warm * decay
+
+    return sched
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01,
+                 max_grad_norm: float = 1.0):
+    """One AdamW step with global-norm clipping. Returns (params, state)."""
+    if max_grad_norm and max_grad_norm > 0:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state["step"] + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        # optimizer math in the state dtype (f32); params keep their dtype
+        g32 = g.astype(m.dtype)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + eps)
+                      + weight_decay * p.astype(m.dtype))
+        new_p = (p.astype(m.dtype) - step_).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tree.unflatten([o[0] for o in out])
+    new_m = tree.unflatten([o[1] for o in out])
+    new_v = tree.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

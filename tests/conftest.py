@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no xla_force_host_platform_device_count here —
+tests run single-device; only launch/dryrun.py forces 512 devices."""
+import jax
+import pytest
+
+from repro.configs.llama32_3b import paper_mini
+from repro.data import CodeCompletionDataset
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="session")
+def mini_cfg():
+    return paper_mini(num_layers=8, d_model=96, vocab_size=512)
+
+
+@pytest.fixture(scope="session")
+def mini_params(mini_cfg):
+    return T.init_params(jax.random.PRNGKey(0), mini_cfg)
+
+
+@pytest.fixture(scope="session")
+def mini_dataset():
+    return CodeCompletionDataset(language="java", n_files=60, seq_len=128,
+                                 vocab_size=512)
+
+
+@pytest.fixture(scope="session")
+def trained_mini(mini_cfg, mini_dataset):
+    """A briefly LITE-fine-tuned mini model (shared across tests)."""
+    from repro.training import train_model
+    params, hist = train_model(mini_cfg, mini_dataset, kind="lite",
+                               steps=25, batch_size=4, lr=3e-3, log_every=0)
+    return params, hist

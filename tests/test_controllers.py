@@ -1,0 +1,86 @@
+"""Exit controllers + early-exit generation semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy_net
+from repro.core.controller import make_controller
+from repro.core.early_exit import generate
+from repro.models import transformer as T
+
+
+def test_none_controller_uses_all_layers(mini_cfg, mini_params):
+    toks = jnp.zeros((2, 6), jnp.int32)
+    out = generate(mini_params, mini_cfg, toks, 4,
+                   make_controller("none"))
+    assert (np.asarray(out["exit_layers"]) == mini_cfg.num_layers).all()
+
+
+def test_fixed_controller_exits_at_boundary(mini_cfg, mini_params):
+    segs = T.plan_segments(mini_cfg)
+    toks = jnp.zeros((2, 6), jnp.int32)
+    out = generate(mini_params, mini_cfg, toks, 4,
+                   make_controller("fixed", exit_idx=0))
+    el = np.asarray(out["exit_layers"])
+    # first generated token comes from prefill (full depth); rest exit early
+    assert (el[:, 0] == mini_cfg.num_layers).all()
+    assert (el[:, 1:] == segs[0].end).all()
+
+
+@pytest.mark.parametrize("kind", ["confidence", "entropy"])
+def test_score_controllers_threshold_extremes(kind, mini_cfg, mini_params):
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 6), 0,
+                              mini_cfg.vocab_size)
+    # impossible threshold -> never exit
+    tau = 1.01 if kind == "confidence" else -0.01
+    ctrl = make_controller(kind, params=mini_params, cfg=mini_cfg,
+                           threshold=tau)
+    out = generate(mini_params, mini_cfg, toks, 3, ctrl)
+    assert (np.asarray(out["exit_layers"]) == mini_cfg.num_layers).all()
+    # trivial threshold -> always exit at the first boundary
+    tau = -0.01 if kind == "confidence" else 1.01
+    ctrl = make_controller(kind, params=mini_params, cfg=mini_cfg,
+                           threshold=tau)
+    out = generate(mini_params, mini_cfg, toks, 3, ctrl)
+    segs = T.plan_segments(mini_cfg)
+    assert (np.asarray(out["exit_layers"])[:, 1:] == segs[0].end).all()
+
+
+def test_policy_controller_threshold_monotone(mini_cfg, mini_params):
+    """Higher threshold T must never exit EARLIER (paper §VI-B)."""
+    agent = policy_net.init_policy(jax.random.PRNGKey(3), mini_cfg.d_model)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                              mini_cfg.vocab_size)
+    means = []
+    for thr in (0.1, 0.5, 0.9, 0.999):
+        ctrl = make_controller("policy", agent_params=agent, threshold=thr)
+        out = generate(mini_params, mini_cfg, toks, 5, ctrl)
+        means.append(float(np.asarray(out["exit_layers"]).mean()))
+    assert all(b >= a - 1e-9 for a, b in zip(means, means[1:])), means
+
+
+def test_confidence_kernel_path_matches_ref(mini_cfg, mini_params):
+    """Controller via the fused Pallas exit_check == plain lm_logits path."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (4, mini_cfg.d_model))
+    c_ref = make_controller("confidence", params=mini_params, cfg=mini_cfg,
+                            threshold=0.5, use_kernel=False)
+    c_ker = make_controller("confidence", params=mini_params, cfg=mini_cfg,
+                            threshold=0.5, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(c_ref(h, 0)),
+                               np.asarray(c_ker(h, 0)), atol=1e-5)
+
+
+def test_generate_exit_layers_affect_energy(mini_cfg, trained_mini):
+    from repro.core import energy
+    params, _ = trained_mini
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              mini_cfg.vocab_size)
+    out_full = generate(params, mini_cfg, toks, 5, make_controller("none"))
+    out_fast = generate(params, mini_cfg, toks, 5,
+                        make_controller("fixed", exit_idx=0))
+    e_full = energy.summarize_exit_energy(
+        mini_cfg, 16, np.asarray(out_full["exit_layers"]))
+    e_fast = energy.summarize_exit_energy(
+        mini_cfg, 16, np.asarray(out_fast["exit_layers"]))
+    assert e_fast["mean_energy_j"] < e_full["mean_energy_j"]

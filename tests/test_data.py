@@ -1,0 +1,67 @@
+"""Data pipeline: tokenizer round-trip, packing invariants (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import CodeCompletionDataset, CodeGenerator
+from repro.data.pipeline import pack_sequences, sample_context_split
+from repro.data.tokenizer import EOS, PAD, CodeTokenizer
+
+
+def test_generator_deterministic():
+    a = CodeGenerator("java", 3).generate_file()
+    b = CodeGenerator("java", 3).generate_file()
+    assert a == b
+    c = CodeGenerator("java", 4).generate_file()
+    assert a != c
+
+
+def test_tokenizer_roundtrip_corpus():
+    for lang in ("java", "python"):
+        files = [CodeGenerator(lang, i).generate_file() for i in range(5)]
+        tok = CodeTokenizer.train(files, 1024)
+        for f in files:
+            assert tok.decode(tok.encode(f)) == f
+
+
+@given(st.text(min_size=0, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_tokenizer_roundtrip_any_text(s):
+    tok = CodeTokenizer.train(["def f(): return 1"], 512)
+    assert tok.decode(tok.encode(s)) == s
+
+
+@given(st.lists(st.lists(st.integers(min_value=4, max_value=99),
+                         min_size=1, max_size=50),
+                min_size=1, max_size=20),
+       st.integers(min_value=8, max_value=64))
+@settings(max_examples=30, deadline=None)
+def test_packing_preserves_tokens(token_lists, seq_len):
+    packed = pack_sequences(token_lists, seq_len)
+    assert packed.shape[1] == seq_len
+    flat = packed.reshape(-1).tolist()
+    # remove trailing padding
+    while flat and flat[-1] == PAD:
+        flat.pop()
+    expect = []
+    for t in token_lists:
+        expect.extend(t)
+        expect.append(EOS)
+    assert flat == expect
+
+
+@given(st.integers(min_value=16, max_value=10_000))
+@settings(max_examples=30, deadline=None)
+def test_context_split_bounds(n):
+    rng = np.random.default_rng(0)
+    cut = sample_context_split(rng, n)
+    assert 1 <= cut < n
+    assert cut <= 0.6 * n + 1
+
+
+def test_dataset_splits_disjoint_and_batches(mini_dataset):
+    ds = mini_dataset
+    n = sum(len(ds.tokens(s)) for s in ("train", "valid", "test"))
+    assert n == len(ds.files)
+    toks, labels, mask = next(ds.batches("train", 2))
+    assert toks.shape == labels.shape == mask.shape
+    np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])

@@ -1,0 +1,70 @@
+"""Energy model invariants (hardware adaptation of the paper's §VI-A1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import energy
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama32-3b", "full")
+
+
+def test_energy_monotone_in_layers(cfg):
+    e = [float(energy.decode_token_energy(cfg, 1024, l))
+         for l in range(1, cfg.num_layers + 1)]
+    assert all(b > a for a, b in zip(e, e[1:]))
+
+
+def test_full_equals_last_layer(cfg):
+    assert energy.full_token_energy(cfg, 1024) == pytest.approx(
+        float(energy.decode_token_energy(cfg, 1024, cfg.num_layers)))
+
+
+def test_skipped_layers_still_pay_kv(cfg):
+    """Exit at layer 4 must cost MORE than 4/28 of the full model (KV
+    propagation through the remaining 24 layers is still paid)."""
+    e4 = float(energy.decode_token_energy(cfg, 1024, 4))
+    e_full = energy.full_token_energy(cfg, 1024)
+    assert e4 > e_full * 4 / 28 * 0.9
+    assert e4 < e_full
+
+
+def test_energy_grows_with_context(cfg):
+    e1 = energy.full_token_energy(cfg, 512)
+    e2 = energy.full_token_energy(cfg, 8192)
+    assert e2 > e1
+
+
+def test_moe_uses_active_params():
+    moe = get_config("qwen2-moe-a2.7b", "full")
+    assert moe.active_param_count() < moe.param_count() * 0.5
+
+
+@given(st.integers(min_value=1, max_value=28),
+       st.integers(min_value=16, max_value=4096))
+@settings(max_examples=20, deadline=None)
+def test_energy_positive_and_bounded(l, ctx):
+    cfg = get_config("llama32-3b", "full")
+    e = float(energy.decode_token_energy(cfg, ctx, l))
+    assert 0 < e < energy.full_token_energy(cfg, ctx) + 1e-9
+
+
+def test_summary_saving_fraction(cfg):
+    exits = np.full(100, 4)
+    s = energy.summarize_exit_energy(cfg, 1024, exits)
+    assert 0.0 < s["energy_saving_frac"] < 1.0
+    assert s["mean_layers_used"] == 4.0
+    full = energy.summarize_exit_energy(cfg, 1024,
+                                        np.full(10, cfg.num_layers))
+    assert full["energy_saving_frac"] == pytest.approx(0.0)
+
+
+def test_controller_overhead_below_paper_bound(cfg):
+    """Paper §VI-H: agent overhead stays under ~1/5 of total runtime."""
+    n_checks = 9
+    over = float(energy.controller_overhead_energy(cfg, n_checks))
+    full = energy.full_token_energy(cfg, 1024)
+    assert over / full < 0.2

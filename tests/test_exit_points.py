@@ -1,0 +1,64 @@
+"""Exit schedule (§III-D) + LITE weights (Eq. 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ExitConfig
+from repro.configs import get_config
+from repro.core.exit_points import (exit_points, exit_points_for,
+                                    segment_boundaries)
+from repro.core.lite_loss import lite_weights
+
+
+def test_paper_counts():
+    """Paper: 9 exit points for Llama (28L), 10 for OPT (32L)."""
+    ec = ExitConfig()
+    assert len(exit_points_for(28, ec)) == 9
+    assert len(exit_points_for(32, ec)) == 10
+
+
+def test_schedule_rules():
+    ec = ExitConfig()
+    pts = exit_points_for(28, ec)
+    assert pts[0] == 4                      # earliest exit at layer 4
+    half = [p for p in pts if p <= 14]
+    second = [p for p in pts if p > 14]
+    assert all(b - a == 2 for a, b in zip(half, half[1:]))
+    assert all(b - a == 4 for a, b in zip(second, second[1:]))
+    assert all(p < 28 for p in pts)
+
+
+def test_boundaries_end_with_final_layer():
+    for arch in ["llama32-3b", "opt-2.7b"]:
+        cfg = get_config(arch, "full")
+        b = segment_boundaries(cfg)
+        assert b[-1] == cfg.num_layers
+        assert b[:-1] == exit_points(cfg)
+        assert list(b) == sorted(set(b))
+
+
+def test_lite_weights_sum_and_budgets():
+    cfg = get_config("llama32-3b", "full")
+    layers, w = lite_weights(cfg)
+    w = np.asarray(w)
+    assert abs(w.sum() - 1.0) < 1e-6
+    assert len(layers) == len(w) == 10       # 9 exits + final
+    # final layer budget = 0.1
+    assert abs(w[-1] - 0.1) < 1e-6
+    half = cfg.num_layers // 2
+    first = w[: sum(1 for p in layers[:-1] if p <= half)]
+    second = w[len(first):-1]
+    assert abs(first.sum() - 0.7) < 1e-6
+    assert abs(second.sum() - 0.2) < 1e-6
+    # geometric decay: earliest exit has the highest weight in its group
+    assert np.all(np.diff(first) < 0)
+    assert np.all(np.diff(second) < 0)
+    ratios = first[1:] / first[:-1]
+    assert np.allclose(ratios, 0.9, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_layers", [8, 12, 24, 28, 32, 38, 40, 42, 48, 62])
+def test_schedule_valid_all_depths(n_layers):
+    pts = exit_points_for(n_layers, ExitConfig())
+    assert all(4 <= p < n_layers for p in pts)
+    assert list(pts) == sorted(set(pts))

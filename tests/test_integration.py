@@ -1,0 +1,68 @@
+"""End-to-end integration: LITE fine-tune -> rollout -> PPO -> serve.
+
+This is the paper's full offline+online pipeline (Fig. 2) at mini scale.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import make_controller
+from repro.rl import PPOConfig, train_agent
+from repro.serving import Engine
+from repro.serving.metrics import aggregate_metrics
+
+
+def test_lite_finetune_improves_all_exits(mini_cfg, mini_dataset,
+                                          trained_mini):
+    from repro.training.loop import evaluate_ce
+    params, hist = trained_mini
+    assert hist[-1] < hist[0] * 0.9
+    ce, per_layer = evaluate_ce(params, mini_cfg, mini_dataset,
+                                max_batches=2)
+    assert np.isfinite(per_layer).all()
+    # every exit layer decodes sanely (within 2x of the final layer CE)
+    assert per_layer.max() < per_layer[-1] * 2 + 1.0
+
+
+@pytest.mark.slow
+def test_full_pipeline(mini_cfg, mini_dataset, trained_mini):
+    params, _ = trained_mini
+    agent, history, cache = train_agent(
+        params, mini_cfg, mini_dataset, n_episodes=12, gen_tokens=6,
+        ppo=PPOConfig(total_steps=16_000, horizon=64, n_lanes=8),
+        log_every=0)
+    # reward improved during training
+    assert (history[-1]["mean_step_reward"]
+            > history[0]["mean_step_reward"] - 0.05)
+    # rollout cache invariants: l_opt within boundaries, shapes consistent
+    assert cache.l_opt.min() >= cache.boundaries[0]
+    assert cache.l_opt.max() <= mini_cfg.num_layers
+    assert cache.hidden.shape[:3] == cache.preds.shape
+
+    # serve with the trained agent
+    ctrl = make_controller("policy", agent_params=agent, threshold=0.5)
+    eng = Engine(params, mini_cfg, ctrl, max_new=5)
+    tasks = mini_dataset.completion_tasks("test", 4, max_context=64)
+    res = eng.serve([c for c, _ in tasks])
+    agg = aggregate_metrics(res.metrics)
+    assert agg["tokens"] > 0
+    assert 0.0 <= agg["energy_saving_frac"] < 1.0
+
+
+def test_serve_step_lowering_host_mesh(mini_cfg, mini_params):
+    """serve_step lowers + compiles under a (1,1) host mesh — the same code
+    path the 512-device dry-run uses."""
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+    from repro.config import InputShape
+    from repro.sharding.api import axis_rules
+
+    shape = InputShape("t", 64, 2, "decode")
+    mesh = make_host_mesh()
+    step = S.make_step(mini_cfg, shape)
+    specs = S.input_specs(mini_cfg, shape, dtype=jnp.float32)
+    sh = S.input_shardings(mini_cfg, shape, mesh, specs)
+    with mesh, axis_rules(mesh):
+        compiled = jax.jit(step, in_shardings=sh).lower(*specs).compile()
+    assert compiled.cost_analysis() is not None

@@ -1,0 +1,97 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import flash_decode
+from repro.kernels.exit_head import exit_check
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@pytest.mark.parametrize("B,D,V,cap", [
+    (4, 64, 512, 0.0), (3, 128, 1000, 0.0), (8, 256, 2048, 30.0),
+    (1, 32, 96, 0.0), (5, 64, 777, 0.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exit_head(B, D, V, cap, dtype):
+    key = jax.random.PRNGKey(B * V)
+    h = jax.random.normal(key, (B, D), dtype)
+    w = (jax.random.normal(key, (D, V)) * 0.05).astype(dtype)
+    t1, l1, e1 = exit_check(h, w, cap, block_b=2, block_v=128)
+    t2, l2, e2 = ref.exit_check_ref(h, w, cap)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    for a, b in [(t1, t2), (l1, l2), (e1, e2)]:
+        assert float(jnp.abs(a - b).max()) < tol
+
+
+def test_exit_head_probability_semantics():
+    """exp(top1 - lse) must equal the top-1 softmax probability."""
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(key, (64, 300)) * 0.1
+    t, l, _ = exit_check(h, w)
+    p_kernel = jnp.exp(t - l)
+    logits = h @ w
+    p_true = jax.nn.softmax(logits, -1).max(-1)
+    assert float(jnp.abs(p_kernel - p_true).max()) < 1e-5
+
+
+@pytest.mark.parametrize("B,KH,G,d,S,win,cap", [
+    (2, 2, 4, 32, 64, 0, 0.0), (3, 4, 1, 64, 100, 0, 0.0),
+    (2, 1, 8, 16, 48, 16, 50.0), (1, 8, 2, 128, 256, 0, 0.0),
+    (2, 2, 2, 32, 33, 8, 0.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(B, KH, G, d, S, win, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S), 5)
+    q = jax.random.normal(ks[0], (B, KH, G, d), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, d), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, d), dtype)
+    pos = jnp.arange(B) * 3 + S // 2
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kv_pos = jnp.where(kv_pos < S - 5, kv_pos, -1)
+    o1 = flash_decode(q, k, v, kv_pos, pos, window=win, softcap=cap,
+                      block_s=32)
+    o2 = ref.flash_decode_ref(q, k, v, kv_pos, pos, win, cap)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.abs(o1.astype(jnp.float32)
+                         - o2.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("Bt,S,H,P,N,Q", [
+    (2, 64, 4, 16, 8, 16), (1, 100, 2, 32, 16, 32), (3, 33, 8, 8, 4, 8),
+    (2, 256, 4, 64, 32, 64), (1, 17, 2, 8, 4, 32),
+])
+def test_ssd_scan(Bt, S, H, P, N, Q):
+    ks = jax.random.split(jax.random.PRNGKey(S * H), 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bt, S, N))
+    C = jax.random.normal(ks[4], (Bt, S, N))
+    y1, h1 = ssd_scan(x, dt, A, B, C, Q)
+    y2, h2 = ref.ssd_scan_ref(x, dt, A, B, C, Q)
+    rel = float(jnp.abs(y1 - y2).max()) / max(float(jnp.abs(y2).max()), 1e-6)
+    assert rel < 1e-4
+    assert float(jnp.abs(h1 - h2).max()) < 1e-2
+
+
+def test_ssd_scan_matches_token_recurrence():
+    """Chunked scan == naive per-token SSM recurrence."""
+    Bt, S, H, P, N = 1, 24, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (Bt, S, N))
+    C = jax.random.normal(ks[4], (Bt, S, N))
+    y, hfin = ssd_scan(x, dt, A, B, C, 8)
+    h = jnp.zeros((Bt, H, P, N))
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t])
+        yt = jnp.einsum("bhpn,bn->bhp", h, C[:, t])
+        assert float(jnp.abs(yt - y[:, t]).max()) < 1e-3, t
+    assert float(jnp.abs(h - hfin).max()) < 1e-3

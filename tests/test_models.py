@@ -1,0 +1,111 @@
+"""Model correctness: decode/forward parity, exit predication, caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+
+
+def _deepen(cfg, n):
+    pat = tuple(cfg.block_pattern[i % len(cfg.block_pattern)]
+                for i in range(n))
+    return dataclasses.replace(cfg, num_layers=n, block_pattern=pat)
+
+
+PARITY_ARCHS = ["granite-3-8b", "gemma2-9b", "minicpm3-4b", "mamba2-1.3b",
+                "zamba2-1.2b", "qwen2-moe-a2.7b", "opt-2.7b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = _deepen(get_config(arch, "smoke"), 8)
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(key, cfg)
+    B, S, S0 = 2, 18, 9
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    outs, _ = T.forward(params, cfg, toks, inference=True)
+    ref = T.lm_logits(params, cfg, outs[-1])
+    _, caches, _ = T.prefill(params, cfg, toks[:, :S0], max_len=S)
+    worst = 0.0
+    for t in range(S0, S):
+        lg, caches, _ = T.decode_step(params, cfg, toks[:, t], caches,
+                                      jnp.full((B,), t))
+        worst = max(worst, float(jnp.abs(lg - ref[:, t]).max()))
+    assert worst < 5e-3, worst
+
+
+def test_forward_returns_boundary_hiddens(mini_cfg, mini_params):
+    toks = jnp.zeros((2, 12), jnp.int32)
+    outs, aux = T.forward(mini_params, mini_cfg, toks)
+    segs = T.plan_segments(mini_cfg)
+    assert len(outs) == len(segs)
+    for h in outs:
+        assert h.shape == (2, 12, mini_cfg.d_model)
+        assert not jnp.isnan(h).any()
+
+
+def test_exit_predication_freezes_hidden(mini_cfg, mini_params):
+    """Tokens that exit early must produce logits from the frozen hidden."""
+    B, S0 = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, S0), 0,
+                              mini_cfg.vocab_size)
+    _, caches, _ = T.prefill(mini_params, mini_cfg, toks, max_len=S0 + 2)
+    nxt = jnp.zeros((B,), jnp.int32)
+    pos = jnp.full((B,), S0)
+
+    # exit everyone at the first boundary
+    ctrl_all = lambda h, i: jnp.ones((h.shape[0],))  # noqa: E731
+    lg_e, _, info_e = T.decode_step(mini_params, mini_cfg, nxt, caches, pos,
+                                    ctrl_all)
+    # no exits
+    lg_f, _, info_f = T.decode_step(mini_params, mini_cfg, nxt, caches, pos,
+                                    None)
+    segs = T.plan_segments(mini_cfg)
+    assert (np.asarray(info_e["exit_layer"]) == segs[0].end).all()
+    assert (np.asarray(info_f["exit_layer"]) == mini_cfg.num_layers).all()
+    assert float(jnp.abs(lg_e - lg_f).max()) > 1e-6  # genuinely different
+
+
+def test_exit_kv_propagation_cache_complete(mini_cfg, mini_params):
+    """Even with exits, every layer's cache must advance (pos written)."""
+    B, S0 = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S0), 0,
+                              mini_cfg.vocab_size)
+    _, caches, _ = T.prefill(mini_params, mini_cfg, toks, max_len=S0 + 2)
+    ctrl = lambda h, i: jnp.ones((h.shape[0],))  # noqa: E731
+    _, new_caches, _ = T.decode_step(mini_params, mini_cfg,
+                                     jnp.zeros((B,), jnp.int32), caches,
+                                     jnp.full((B,), S0), ctrl)
+    for seg_cache in jax.tree.leaves(
+            jax.tree.map(lambda a, b: (np.asarray(a) != np.asarray(b)).any(),
+                         caches, new_caches)):
+        assert seg_cache  # every cache leaf was updated
+
+
+def test_sliding_window_limits_attention():
+    cfg = _deepen(get_config("gemma2-9b", "smoke"), 4)
+    cfg = dataclasses.replace(cfg, sliding_window=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                              cfg.vocab_size)
+    outs, _ = T.forward(params, cfg, toks)
+    assert not jnp.isnan(outs[-1]).any()
+
+
+def test_long_context_config_rewrite():
+    from repro.config import SHAPES, config_for_shape
+    cfg = get_config("granite-3-8b", "full")
+    c2 = config_for_shape(cfg, SHAPES["long_500k"])
+    assert c2.name.endswith("+win")
+    assert all(s.mixer == "gqa_local" for s in c2.block_pattern)
+    # mamba/MLA keep their mixers
+    cfg = get_config("minicpm3-4b", "full")
+    c3 = config_for_shape(cfg, SHAPES["long_500k"])
+    assert all(s.mixer == "mla" for s in c3.block_pattern)
+    cfg = get_config("mamba2-1.3b", "full")
+    c4 = config_for_shape(cfg, SHAPES["long_500k"])
+    assert all(s.mixer == "mamba" for s in c4.block_pattern)

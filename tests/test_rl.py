@@ -1,0 +1,103 @@
+"""RL: reward function (Eqs. 2/3), env dynamics, PPO convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rl.env import CONTINUE, EXIT, EarlyExitEnv, RewardCoefs
+from repro.rl.rollout import RolloutCache
+
+
+def _toy_cache(E=4, T=3, n_b=4, D=8, num_layers=12, l_opt_layer=6):
+    """Cache where boundary preds match final from boundary index 1 on."""
+    rng = np.random.default_rng(0)
+    hidden = rng.normal(size=(E, T, n_b, D)).astype(np.float32)
+    preds = np.zeros((E, T, n_b), np.int32)
+    preds[:, :, 0] = 7          # wrong at first boundary
+    preds[:, :, 1:] = 42        # correct from boundary 1 (layer 6)
+    bounds = np.asarray([4, 6, 10, 12], np.int32)
+    l_opt = np.full((E, T), l_opt_layer, np.int32)
+    return RolloutCache(hidden=hidden, preds=preds, l_opt=l_opt,
+                        boundaries=bounds, num_layers=num_layers)
+
+
+@pytest.fixture
+def env():
+    return EarlyExitEnv(_toy_cache(), RewardCoefs(alpha=0.2, beta=1.0,
+                                                  gamma=1.0, epsilon=0.1),
+                        n_lanes=4)
+
+
+def test_reward_optimal_exit(env):
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    # continue to boundary 1 (layer 6 == l_opt), then exit
+    state, _, r, _ = env.step(state, jnp.zeros(4, jnp.int32),
+                              jax.random.PRNGKey(1))
+    assert np.allclose(np.asarray(r), 1.0)       # continue before l_opt: +1
+    state, _, r, _ = env.step(state, jnp.ones(4, jnp.int32),
+                              jax.random.PRNGKey(2))
+    assert np.allclose(np.asarray(r), 1.0)       # optimal exit: +1
+
+
+def test_reward_too_early_exit(env):
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    _, _, r, _ = env.step(state, jnp.ones(4, jnp.int32),
+                          jax.random.PRNGKey(1))
+    # exit at layer 4, wrong pred, l_opt=6: -(6-4)/12 * beta
+    assert np.allclose(np.asarray(r), -(6 - 4) / 12 * 1.0, atol=1e-6)
+
+
+def test_reward_late_exit(env):
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(1)
+    for _ in range(2):                            # continue to boundary 2
+        state, _, _, _ = env.step(state, jnp.zeros(4, jnp.int32), k)
+    _, _, r, _ = env.step(state, jnp.ones(4, jnp.int32), k)
+    # exit at layer 10, correct, l_opt=6: -(10-6)/12 * alpha
+    assert np.allclose(np.asarray(r), -(10 - 6) / 12 * 0.2, atol=1e-6)
+
+
+def test_reward_late_continue(env):
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(1)
+    state, _, _, _ = env.step(state, jnp.zeros(4, jnp.int32), k)
+    # now at boundary 1 == l_opt; continuing is wrong:
+    # penalty -(l_next - l_opt)/N * gamma = -(10-6)/12
+    _, _, r, _ = env.step(state, jnp.zeros(4, jnp.int32), k)
+    assert np.allclose(np.asarray(r), -(10 - 6) / 12 * 1.0, atol=1e-6)
+
+
+def test_forced_exit_at_last_boundary(env):
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(1)
+    for _ in range(3):
+        state, _, _, _ = env.step(state, jnp.zeros(4, jnp.int32), k)
+    # at last boundary: CONTINUE is treated as forced EXIT -> token advances
+    new_state, _, _, _ = env.step(state, jnp.zeros(4, jnp.int32), k)
+    assert (np.asarray(new_state["tok"]) == 1).all()
+    assert (np.asarray(new_state["b"]) == 0).all()
+
+
+def test_episode_reset_on_last_token(env):
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(3)
+    done_seen = False
+    for i in range(40):
+        k, k2 = jax.random.split(k)
+        state, _, _, done = env.step(state, jnp.ones(4, jnp.int32), k2)
+        done_seen |= bool(np.asarray(done).any())
+    assert done_seen
+    assert (np.asarray(state["tok"]) < env.T).all()
+
+
+def test_ppo_learns_toy_env():
+    """On the toy cache the optimal policy is deterministic — PPO should
+    reach near-optimal mean step reward (continue@0 -> exit@1 = +1/step)."""
+    from repro.rl.ppo import PPOConfig, ppo_train
+    env = EarlyExitEnv(_toy_cache(E=8, T=4), n_lanes=8)
+    agent, hist = ppo_train(
+        env, config=PPOConfig(total_steps=60_000, horizon=128, n_lanes=8,
+                              lr=3e-4),
+        seed=0, log_every=0)
+    assert hist[-1]["mean_step_reward"] > 0.5, hist[-1]
+    assert hist[-1]["mean_step_reward"] > hist[0]["mean_step_reward"]

@@ -1,0 +1,93 @@
+"""Sharding rule allocator: divisibility, conflicts, ZeRO."""
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import jax
+
+from repro.sharding.api import (_allocate, _apply_zero, axis_rules,
+                                constrain, param_shardings)
+
+
+def _mesh2x2():
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    # single-device meshes still exercise the allocator logic via shape math
+    return Mesh(np.asarray(devs[:1]).reshape(1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in (allocator never touches devices)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def test_allocate_divisibility():
+    mesh = FakeMesh(data=16, model=16)
+    spec = _allocate(["batch", None, "heads", None], (256, 1, 32, 128), mesh)
+    assert spec == P("data", None, "model", None)
+    # 8 kv heads can't shard over model=16 -> replicated
+    spec = _allocate(["batch", None, "kv_heads", None], (256, 1, 8, 128),
+                     mesh)
+    assert spec == P("data", None, None, None)
+
+
+def test_allocate_no_axis_reuse():
+    mesh = FakeMesh(data=16, model=16)
+    # vocab indivisible -> falls back; seq_mp picks up model
+    spec = _allocate(["batch", "seq_mp", "vocab"], (256, 4096, 49155), mesh)
+    assert spec == P("data", "model", None)
+    # vocab divisible -> takes model; seq_mp must NOT reuse it
+    spec = _allocate(["batch", "seq_mp", "vocab"], (256, 4096, 256000), mesh)
+    assert spec == P("data", None, "model")
+
+
+def test_allocate_multi_axis_batch():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    spec = _allocate(["batch", None], (256, 4), mesh)
+    assert spec == P(("pod", "data"), None)
+    # batch=8: pod*data=32 doesn't divide -> drop pod, keep data? 8%32!=0,
+    # then try ("data",): 8%16 != 0 -> fully replicated
+    spec = _allocate(["batch", None], (8, 4), mesh)
+    assert spec == P(None, None)
+
+
+def test_zero_shards_largest_replicated_dim():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    spec = _apply_zero(P(None, "model"), (8192, 1024), mesh,
+                       ("pod", "data"))
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_param_rules_moe_expert_parallel():
+    """MoE expert weights are expert-parallel: experts are padded to a
+    multiple of 16 at init (40 -> 48) and the expert dim takes the model
+    axis; d_ff is deliberately unmapped (see PARAM_RULES comment)."""
+    mesh = FakeMesh(data=16, model=16)
+    from repro.sharding.api import _spec_for_path
+    spec = _spec_for_path("segments/0/ffn/moe/up", (48, 1536, 512), mesh)
+    assert spec == P("model", None, None)
+    spec = _spec_for_path("segments/0/ffn/moe/down", (48, 512, 1536), mesh)
+    assert spec == P("model", None, None)
+    # un-padded (indivisible) expert count would replicate — the padding
+    # in models.moe.padded_experts is what makes EP possible
+    spec = _spec_for_path("segments/0/ffn/moe/up", (40, 1536, 512), mesh)
+    assert spec == P(None, None, None) or spec == P()
+
+
+def test_constrain_noop_without_rules(mini_cfg, mini_params):
+    import jax.numpy as jnp
+    x = jnp.zeros((4, 8))
+    y = constrain(x, "batch", "embed")
+    assert y.shape == x.shape
+
+
+def test_constrain_rank_mismatch():
+    import jax.numpy as jnp
+    mesh = _mesh2x2()
+    with axis_rules(mesh):
+        with pytest.raises(ValueError):
+            constrain(jnp.zeros((2, 2)), "batch")

@@ -1,0 +1,81 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+reduced config runs one forward + one LITE train step + one early-exit
+decode step on CPU, asserting shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ASSIGNED_ARCH_IDS, get_config
+from repro.core.lite_loss import lite_loss
+from repro.models import transformer as T
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_constraints(arch):
+    cfg = get_config(arch, "smoke")
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    full = get_config(arch, "full")
+    assert full.arch_type == cfg.arch_type
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, "smoke")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    prefix = None
+    if cfg.frontend:
+        prefix = jax.random.normal(key, (B, 4, cfg.d_model))
+    outs, aux = T.forward(params, cfg, toks, prefix)
+    S_tot = S + (4 if prefix is not None else 0)
+    logits = T.lm_logits(params, cfg, outs[-1])
+    assert logits.shape == (B, S_tot, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    # one LITE train step
+    labels = jax.random.randint(key, (B, S_tot), 0, cfg.vocab_size)
+
+    def loss_fn(p):
+        outs, aux = T.forward(p, cfg, toks, prefix)
+        loss, _ = lite_loss(p, cfg, outs, labels)
+        return loss + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    opt = adamw_init(params)
+    new_params, _ = adamw_update(params, grads, opt, 1e-3)
+    # params actually changed
+    changed = any(
+        bool((np.asarray(a) != np.asarray(b)).any())
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, "smoke")
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    B, S0 = 2, 8
+    toks = jax.random.randint(key, (B, S0), 0, cfg.vocab_size)
+    prefix = None
+    if cfg.frontend:
+        prefix = jax.random.normal(key, (B, 4, cfg.d_model))
+    h, caches, _ = T.prefill(params, cfg, toks, prefix, max_len=S0 + 8)
+    total = h.shape[1]
+    lg, caches, info = T.decode_step(
+        params, cfg, jnp.zeros((B,), jnp.int32), caches,
+        jnp.full((B,), total))
+    assert lg.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all())
+    assert info["exit_layer"].shape == (B,)
