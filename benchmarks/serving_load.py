@@ -1,0 +1,252 @@
+"""Serving load benchmark: Poisson arrivals vs throughput / latency / energy.
+
+Drives the same workload through two serving stacks at several arrival
+rates:
+
+  * ``scheduler`` — the continuous-batching scheduler (serving/scheduler.py):
+    requests join/leave the fixed-shape decode batch at token granularity.
+  * ``engine``    — the seed one-shot batcher (serving/engine.py) behind a
+    naive dynamic batch former: whatever is queued when the engine goes idle
+    is padded to a fixed batch and decoded for the batch-max ``max_new``
+    (head-of-line blocking, wasted slots — the thing continuous batching
+    removes).
+
+The workload mixes prompt lengths and per-request ``max_new`` (the mix is
+what the seed Engine cannot exploit: every sequence in its batch decodes for
+the batch max). Reported per rate and per system:
+
+  throughput   useful tokens / wall-clock second
+  p50/p95      request latency (arrival -> all tokens done), seconds
+  J/token      modeled energy per useful token (core.energy, TPU-v5e model)
+
+Both systems are shape-warmed before the timed run so XLA compile time is
+excluded — the comparison isolates steady-state scheduling behavior.
+
+  PYTHONPATH=src python -m benchmarks.serving_load            # mini, CPU
+  PYTHONPATH=src python -m benchmarks.serving_load --rates 4 10 25 --n 24
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.configs.llama32_3b import paper_mini
+from repro.core.controller import make_controller
+from repro.models import transformer as T
+from repro.serving import Engine, Scheduler
+from repro.serving.metrics import latency_percentiles
+
+RES_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "results")
+
+PROMPT_LENS = (24, 40, 56)       # few distinct buckets -> few prefill shapes
+MAX_NEWS = (4, 12)               # mixed decode lengths: the engine pays the
+                                 # batch max for everyone, the scheduler
+                                 # retires each slot at its own max_new
+
+
+@dataclass
+class Job:
+    arrival_s: float             # offset from run start
+    prompt: list
+    max_new: int
+    # results
+    tokens: int = 0
+    energy_j: float = 0.0
+    latency_s: float = 0.0
+
+
+def make_workload(n: int, rate_hz: float, vocab: int,
+                  seed: int = 0) -> list[Job]:
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    jobs = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        plen = int(rng.choice(PROMPT_LENS))
+        jobs.append(Job(arrival_s=t,
+                        prompt=rng.integers(4, vocab, plen).tolist(),
+                        max_new=int(rng.choice(MAX_NEWS))))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# scheduler path
+# ---------------------------------------------------------------------------
+def run_scheduler(sched: Scheduler, jobs: list[Job]) -> dict:
+    handles = [None] * len(jobs)
+    t0 = time.monotonic()
+    for i, job in enumerate(jobs):
+        delay = t0 + job.arrival_s - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        handles[i] = sched.submit(job.prompt, max_new=job.max_new)
+    for job, h in zip(jobs, handles):
+        h.result(timeout=300.0)
+        job.tokens = len(h.tokens)
+        job.energy_j = h.metrics.energy_j
+        job.latency_s = h.latency_s
+    wall = time.monotonic() - t0
+    return _summarize(jobs, wall)
+
+
+# ---------------------------------------------------------------------------
+# seed-engine baseline: naive dynamic batcher over Engine.serve
+# ---------------------------------------------------------------------------
+def run_engine(engine: Engine, ctrl, jobs: list[Job], batch: int) -> dict:
+    """Form a fixed-size batch from whatever has arrived whenever the engine
+    is idle (short rows padded by repeating the first prompt), decode the
+    batch-max max_new for everyone, count only each request's own tokens."""
+    pending: list[Job] = []
+    lock = threading.Lock()
+    t0 = time.monotonic()
+
+    def feeder():
+        for job in jobs:
+            delay = t0 + job.arrival_s - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            with lock:
+                pending.append(job)
+
+    th = threading.Thread(target=feeder, daemon=True)
+    th.start()
+    served = 0
+    while served < len(jobs):
+        with lock:
+            take = pending[:batch]
+            del pending[:len(take)]
+        if not take:
+            time.sleep(0.001)
+            continue
+        # pad the batch to its fixed shape — the seed batcher's whole-batch
+        # shape is what it is regardless of how many requests showed up
+        rows = [j.prompt for j in take]
+        while len(rows) < batch:
+            rows.append(take[0].prompt)
+        step_max = max(j.max_new for j in take)
+        res = engine.serve(rows, max_new=step_max, controller=ctrl)
+        done = time.monotonic()
+        for job, toks, el, m in zip(take, res.tokens, res.exit_layers,
+                                    res.metrics):
+            # the engine decoded step_max tokens for this row; only the
+            # request's own max_new are useful, but the energy of the whole
+            # row was spent (the waste is the point of this baseline)
+            job.tokens = min(len(toks), job.max_new)
+            job.energy_j = m.energy_j
+            job.latency_s = done - (t0 + job.arrival_s)
+        served += len(take)
+    wall = time.monotonic() - t0
+    return _summarize(jobs, wall)
+
+
+def warmup(sched: Scheduler, engine: Engine, ctrl, batch: int) -> None:
+    """Trigger every XLA compile both systems will hit in the timed runs."""
+    rng = np.random.default_rng(123)
+    for plen in PROMPT_LENS:
+        prompt = rng.integers(4, sched.cfg.vocab_size, plen).tolist()
+        sched.serve_batch([prompt], max_new=max(MAX_NEWS))
+        for mn in MAX_NEWS:
+            engine.serve([prompt] * batch, max_new=mn, controller=ctrl)
+
+
+def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
+        d_model: int = 96, vocab: int = 512, slots: int = 4,
+        exit_idx: int = 0, seed: int = 0, save: bool = True) -> list[dict]:
+    cfg = paper_mini(num_layers=num_layers, d_model=d_model,
+                     vocab_size=vocab)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = max(PROMPT_LENS) + max(MAX_NEWS)
+    sched = Scheduler(params, cfg, controller_kind="fixed",
+                      fixed_exit_idx=exit_idx,
+                      allowed_kinds=("none", "fixed"),
+                      max_slots=slots, max_len=max_len,
+                      queue_depth=max(64, n)).start()
+    engine = Engine(params, cfg, max_context=max(PROMPT_LENS))
+    ctrl = make_controller("fixed", exit_idx=exit_idx)
+    print(f"[load] warming shapes (model {num_layers}L/{d_model}d, "
+          f"{slots} slots) ...", flush=True)
+    warmup(sched, engine, ctrl, slots)
+
+    results = []
+    for rate in rates:
+        for system in ("scheduler", "engine"):
+            jobs = make_workload(n, rate, vocab, seed=seed)
+            if system == "scheduler":
+                r = run_scheduler(sched, jobs)
+            else:
+                r = run_engine(engine, ctrl, jobs, slots)
+            r.update(system=system, rate_hz=rate)
+            results.append(r)
+            print(f"[load] rate={rate:6.1f}/s {system:9s} "
+                  f"tput={r['throughput_tok_s']:7.1f} tok/s "
+                  f"p50={r['latency_p50_s']:.3f}s "
+                  f"p95={r['latency_p95_s']:.3f}s "
+                  f"J/tok={r['j_per_token']:.3e}", flush=True)
+    sched.stop()
+
+    top = max(rates)
+    tput = {r["system"]: r["throughput_tok_s"] for r in results
+            if r["rate_hz"] == top}
+    speedup = tput["scheduler"] / max(tput["engine"], 1e-9)
+    print(f"[load] @ {top}/s: continuous batching {speedup:.2f}x the "
+          f"seed engine baseline "
+          f"({'BEATS' if speedup > 1.0 else 'DOES NOT BEAT'} it)")
+    if save:
+        os.makedirs(RES_DIR, exist_ok=True)
+        out = os.path.join(RES_DIR, "serving_load.json")
+        with open(out, "w") as f:
+            json.dump({"config": {"num_layers": num_layers,
+                                  "d_model": d_model, "vocab": vocab,
+                                  "slots": slots, "n": n,
+                                  "rates": list(rates)},
+                       "results": results,
+                       "speedup_at_top_rate": speedup}, f, indent=2)
+        print(f"[load] wrote {out}")
+    return results
+
+
+def _summarize(jobs: list[Job], wall: float) -> dict:
+    toks = sum(j.tokens for j in jobs)
+    e = sum(j.energy_j for j in jobs)
+    pct = latency_percentiles([j.latency_s for j in jobs])
+    return {
+        "requests": len(jobs),
+        "useful_tokens": toks,
+        "wall_s": wall,
+        "throughput_tok_s": toks / max(wall, 1e-9),
+        "latency_p50_s": pct["p50_s"],
+        "latency_p95_s": pct["p95_s"],
+        "j_per_token": e / max(toks, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", type=float, nargs="+",
+                    default=[4.0, 10.0, 25.0],
+                    help="Poisson arrival rates (requests/s)")
+    ap.add_argument("--n", type=int, default=24, help="requests per rate")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=96)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--exit-idx", type=int, default=0,
+                    help="fixed-controller exit point index")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+    run(tuple(args.rates), args.n, num_layers=args.layers,
+        d_model=args.d_model, vocab=args.vocab, slots=args.slots,
+        exit_idx=args.exit_idx, seed=args.seed, save=not args.no_save)
+
+
+if __name__ == "__main__":
+    main()

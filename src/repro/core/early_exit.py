@@ -17,6 +17,44 @@ from repro.models.transformer import decode_step, lm_logits, prefill
 Array = jax.Array
 
 
+def token_picker(temperature: float = 0.0):
+    """Returns pick(logits [B, V], key) -> (token [B], logprob [B]).
+
+    Greedy when ``temperature <= 0`` (key ignored); the logprob is always the
+    full-precision log-softmax of the chosen token.
+    """
+
+    def pick(logits, key):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        if temperature <= 0.0:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            tok = jax.random.categorical(key, logits / temperature, axis=-1)
+        return tok, jnp.take_along_axis(logp, tok[:, None], 1)[:, 0]
+
+    return pick
+
+
+def make_decode_fn(cfg: ModelConfig, controller=None, *,
+                   temperature: float = 0.0):
+    """One-token early-exit decode closure, shared by ``generate``, the
+    serving engine and the continuous-batching scheduler.
+
+    signature: fn(params, tokens [B], caches, pos [B], key) ->
+               (next_tokens [B], new_caches, exit_layer [B], logprob [B])
+    """
+
+    pick = token_picker(temperature)
+
+    def fn(params, tokens, caches, pos, key):
+        logits, new_caches, info = decode_step(params, cfg, tokens, caches,
+                                               pos, controller)
+        nxt, lp = pick(logits, key)
+        return (nxt.astype(jnp.int32), new_caches, info["exit_layer"], lp)
+
+    return fn
+
+
 def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
              controller=None, *, max_len: Optional[int] = None,
              temperature: float = 0.0, key: Optional[Array] = None,
@@ -39,23 +77,16 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
                            max_len=max_len)
     logits0 = lm_logits(params, cfg, h[:, -1:, :])[:, 0]
 
-    def pick(logits, k):
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        if temperature <= 0.0:
-            tok = jnp.argmax(logits, axis=-1)
-        else:
-            tok = jax.random.categorical(k, logits / temperature, axis=-1)
-        return tok, jnp.take_along_axis(logp, tok[:, None], 1)[:, 0]
+    pick = token_picker(temperature)
+    decode_fn = make_decode_fn(cfg, controller, temperature=temperature)
 
     key, k0 = jax.random.split(key)
     tok0, lp0 = pick(logits0, k0)
 
     def step(carry, k):
         tok, caches, pos = carry
-        logits, caches, info = decode_step(params, cfg, tok, caches, pos,
-                                           controller)
-        nxt, lp = pick(logits, k)
-        return (nxt, caches, pos + 1), (tok, info["exit_layer"], lp)
+        nxt, caches, exit_layer, lp = decode_fn(params, tok, caches, pos, k)
+        return (nxt, caches, pos + 1), (tok, exit_layer, lp)
 
     if steps > 1:
         keys = jax.random.split(key, steps - 1)

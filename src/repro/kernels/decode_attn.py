@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -2.0 ** 30
 
 
@@ -105,7 +109,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((KH, G), jnp.float32),
             pltpu.VMEM((KH, G, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(pos, q, k, v, kv_pos)

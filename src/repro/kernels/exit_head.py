@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -1e30
 
 
@@ -112,7 +116,7 @@ def exit_check(h: jax.Array, w: jax.Array, softcap: float = 0.0,
         ],
         out_shape=[jax.ShapeDtypeStruct((Bp,), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((bb,), jnp.float32)] * 3,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(hp, wp)

@@ -6,6 +6,11 @@
 Loads (or trains on the fly at --mini scale) the LITE model + RL agent, then
 serves a batch of code-completion requests and prints quality + energy
 metrics — the CPU-scale analogue of the paper's VS-Code endpoint (§V).
+
+``--scheduler`` routes the batch through the continuous-batching scheduler
+(serving/scheduler.py) instead of the one-shot Engine: requests are admitted
+into a persistent KV-slot pool and retire independently; queue/fleet stats
+are printed alongside the quality metrics.
 """
 from __future__ import annotations
 
@@ -36,6 +41,10 @@ def main():
     ap.add_argument("--agent", default="", help="RL agent checkpoint path")
     ap.add_argument("--train-steps", type=int, default=60,
                     help="on-the-fly mini fine-tune when no checkpoint")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve via the continuous-batching scheduler")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV slot pool size (with --scheduler)")
     args = ap.parse_args()
 
     mod = __import__(f"repro.configs."
@@ -65,12 +74,29 @@ def main():
                 params, cfg, ds, n_episodes=24, gen_tokens=8,
                 ppo=PPOConfig(total_steps=30_000), log_every=5)
 
-    ctrl = make_controller(args.controller, params=params, cfg=cfg,
-                           agent_params=agent, threshold=args.threshold)
-    engine = Engine(params, cfg, ctrl, max_new=args.max_new)
-
     tasks = ds.completion_tasks("test", args.requests, max_context=192)
-    res = engine.serve([c for c, _ in tasks], max_new=args.max_new)
+    requests = [c for c, _ in tasks]
+
+    sched = None
+    if args.scheduler:
+        from repro.serving import Scheduler
+        sched = Scheduler(params, cfg, controller_kind=args.controller,
+                          agent_params=agent, threshold=args.threshold,
+                          allowed_kinds=("none", args.controller),
+                          max_slots=args.slots,
+                          max_len=192 + args.max_new,
+                          max_new=args.max_new,
+                          queue_depth=max(64, args.requests)).start()
+        try:
+            res = sched.serve_batch(requests, max_new=args.max_new)
+        except BaseException:
+            sched.stop()
+            raise
+    else:
+        ctrl = make_controller(args.controller, params=params, cfg=cfg,
+                               agent_params=agent, threshold=args.threshold)
+        engine = Engine(params, cfg, max_new=args.max_new)
+        res = engine.serve(requests, max_new=args.max_new, controller=ctrl)
 
     scores = []
     for (ctx, ref), toks in zip(tasks, res.tokens):
@@ -90,6 +116,13 @@ def main():
     for i, (toks, el) in enumerate(zip(res.tokens[:3], res.exit_layers[:3])):
         txt = ds.tokenizer.decode(toks).replace("\n", "\\n")
         print(f"  [{i}] exits={el} -> {txt!r}")
+    if sched is not None:
+        st = sched.stats()
+        print(f"  [scheduler] slots={st['max_slots']} "
+              f"throughput={st['throughput_tok_s']:.1f} tok/s "
+              f"fleet J/tok={st['fleet_j_per_token']:.3e} "
+              f"p95 latency={st['latency_p95_s']:.3f}s")
+        sched.stop()
 
 
 if __name__ == "__main__":

@@ -540,6 +540,35 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def write_cache_slots(cfg: ModelConfig, pool_caches, req_caches, slots):
+    """Copy per-request decode caches into rows of a persistent slot pool.
+
+    ``pool_caches``: caches built by ``init_cache(cfg, max_slots, max_len)``.
+    ``req_caches``: caches for ``b`` requests (e.g. from ``prefill`` with the
+    same ``max_len``) whose batch dim is ``b``. ``slots``: [b] int array of
+    destination rows. Scanned segments carry the batch on axis 1 ([L, B, ...]),
+    unrolled ones on axis 0 — the segment plan disambiguates. Traceable (slots
+    may be dynamic), so the pool write can be jitted with donation.
+    """
+    slots = jnp.asarray(slots)
+    segs = plan_segments(cfg)
+
+    def put(pool_leaf, req_leaf, stacked):
+        if stacked:
+            return pool_leaf.at[:, slots].set(
+                req_leaf.astype(pool_leaf.dtype))
+        return pool_leaf.at[slots].set(req_leaf.astype(pool_leaf.dtype))
+
+    out = []
+    for seg, pc, rc in zip(segs, pool_caches, req_caches):
+        if seg.scanned:
+            out.append(jax.tree.map(lambda p, r: put(p, r, True), pc, rc))
+        else:
+            out.append([jax.tree.map(lambda p, r: put(p, r, False), pcj, rcj)
+                        for pcj, rcj in zip(pc, rc)])
+    return out
+
+
 ControllerFn = Callable[[Array, int], Optional[Array]]
 
 

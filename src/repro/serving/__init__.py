@@ -1,2 +1,5 @@
 from repro.serving.engine import Engine, ServeResult  # noqa: F401
-from repro.serving.metrics import RequestMetrics, aggregate_metrics  # noqa
+from repro.serving.metrics import (RequestMetrics, aggregate_metrics,  # noqa
+                                   latency_percentiles)
+from repro.serving.scheduler import (KVSlotPool, Request,  # noqa: F401
+                                     Scheduler, SchedulerQueueFull)

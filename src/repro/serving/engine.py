@@ -43,8 +43,13 @@ class Engine:
         self.max_context = max_context
 
     def serve(self, requests: Sequence[Sequence[int]],
-              max_new: Optional[int] = None) -> ServeResult:
+              max_new: Optional[int] = None,
+              controller=None) -> ServeResult:
+        """Serve one batch. ``controller`` overrides the engine default for
+        this call only — concurrent callers must use this instead of mutating
+        ``self.controller`` (shared state)."""
         max_new = max_new or self.max_new
+        ctrl = controller if controller is not None else self.controller
         B = len(requests)
         ctx_len = min(self.max_context, max(len(r) for r in requests))
         ctx = np.full((B, ctx_len), PAD, np.int32)
@@ -52,7 +57,7 @@ class Engine:
             r = list(r)[-ctx_len:]
             ctx[i, ctx_len - len(r):] = r
         out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
-                       self.controller, max_len=ctx_len + max_new)
+                       ctrl, max_len=ctx_len + max_new)
         toks = np.asarray(out["tokens"])
         exits = np.asarray(out["exit_layers"])
         tokens, exit_layers, metrics = [], [], []
@@ -72,12 +77,14 @@ def make_serve_step(cfg: ModelConfig, controller=None):
     signature: step(params, tokens [B], caches, pos [B]) ->
                (next_tokens [B], new_caches, exit_layer [B])
     """
-    from repro.models.transformer import decode_step
+    from repro.core.early_exit import make_decode_fn
+
+    fn = make_decode_fn(cfg, controller)
+    dummy = jax.random.PRNGKey(0)
 
     def step(params, tokens, caches, pos):
-        logits, new_caches, info = decode_step(params, cfg, tokens, caches,
-                                               pos, controller)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return nxt, new_caches, info["exit_layer"]
+        nxt, new_caches, exit_layer, _ = fn(params, tokens, caches, pos,
+                                            dummy)
+        return nxt, new_caches, exit_layer
 
     return step

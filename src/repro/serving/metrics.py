@@ -61,6 +61,15 @@ def aggregate_metrics(metrics: list[RequestMetrics]) -> dict:
     }
 
 
+def latency_percentiles(latencies_s, pcts=(50, 95)) -> dict:
+    """{"p50_s": ..., "p95_s": ...} over a list of request latencies
+    (None entries — unfinished requests — are dropped)."""
+    lats = np.asarray([x for x in latencies_s if x is not None], np.float64)
+    if lats.size == 0:
+        return {f"p{p}_s": None for p in pcts}
+    return {f"p{p}_s": float(np.percentile(lats, p)) for p in pcts}
+
+
 # ---------------------------------------------------------------------------
 # quality metrics (paper §VI-A2: ROUGE-L-style, CodeBLEU-style)
 # ---------------------------------------------------------------------------

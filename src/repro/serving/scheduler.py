@@ -1,0 +1,624 @@
+"""Continuous-batching serving scheduler (paper §V at load).
+
+The seed ``Engine`` re-prefills a fixed batch per call and decodes a fixed
+number of steps for everyone — request N+1 waits for the whole batch even if
+half the slots finished at token 3. This module is the serving layer the
+ROADMAP's "heavy traffic" target needs: requests join and leave the running
+batch at *token* granularity.
+
+Pieces
+------
+``KVSlotPool``
+    Owns persistent per-layer decode caches of shape ``[max_slots, W, ...]``
+    (built once by ``models.transformer.init_cache``) plus slot alloc/free
+    bookkeeping. Slot writes go through ``write_cache_slots`` under one jit
+    with donation, so admission never reallocates the pool.
+
+``Scheduler``
+    An admission queue + a single decode-loop thread. Each tick it (1)
+    admits queued requests into free slots — prefill runs at the request's
+    exact prompt length, then its ring cache is spliced into the pool row —
+    and (2) runs ONE jitted fixed-shape decode step over all ``max_slots``
+    rows. Free rows decode garbage that is masked out of accounting and
+    overwritten at the next admission; per-row attention masks (``kv_pos``)
+    make every row's math independent of its neighbours, which is what makes
+    a mid-flight join byte-identical to a solo run (tests/test_scheduler.py).
+
+Early-exit awareness
+    Exit controllers are compiled *into* the step once, but selected per
+    slot at runtime: each resident request carries ``(kind, threshold)``
+    arrays, so per-request thresholds need no re-jit and no shared-state
+    mutation (the seed server's ``engine.controller = ...`` race is gone).
+    Per-slot exit-layer traces feed ``core.energy`` so the scheduler reports
+    fleet J/token, enforces optional per-request energy budgets, and gates
+    admission on a fleet power target (fewer layers used -> lower modeled
+    power -> more admission).
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import energy, policy_net
+from repro.core.controller import _head_stats
+from repro.core.early_exit import make_decode_fn
+from repro.data.tokenizer import EOS, PAD
+from repro.models.transformer import (init_cache, lm_logits, prefill,
+                                      write_cache_slots)
+from repro.serving.engine import ServeResult
+from repro.serving.metrics import (RequestMetrics, latency_percentiles,
+                                   request_metrics)
+
+CTRL_KINDS = {"none": 0, "policy": 1, "confidence": 2, "entropy": 3,
+              "fixed": 4}
+
+
+class SchedulerQueueFull(RuntimeError):
+    """Raised by ``submit`` when the admission queue is at capacity."""
+
+
+# ---------------------------------------------------------------------------
+# KV slot pool
+# ---------------------------------------------------------------------------
+class KVSlotPool:
+    """Persistent per-layer decode caches [max_slots, W, ...] + slot accounting.
+
+    ``alloc``/``release`` manage rows; ``write`` splices a prefilled
+    single-request cache (same ``max_len``) into a row. The buffers live for
+    the lifetime of the pool — decode runs under one jitted closure with a
+    fixed shape regardless of which requests occupy slots.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.caches = init_cache(cfg, max_slots, max_len, dtype)
+        self._free = list(range(max_slots - 1, -1, -1))   # LIFO: reuse warm rows
+        self._write = jax.jit(partial(write_cache_slots, cfg),
+                              donate_argnums=0)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free.append(slot)
+
+    def write(self, req_caches, slot: int) -> None:
+        self.caches = self._write(self.caches, req_caches,
+                                  jnp.asarray([slot], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    """One in-flight generation request (also the caller's handle)."""
+    req_id: int
+    prompt: list[int]
+    max_new: int
+    threshold: float
+    kind: str
+    request_class: str = "default"
+    energy_budget_j: Optional[float] = None
+    submitted_at: float = field(default_factory=time.monotonic)
+
+    status: str = "queued"               # queued | running | done
+    finish_reason: Optional[str] = None  # eos | length | energy_budget
+    tokens: list[int] = field(default_factory=list)
+    exit_layers: list[int] = field(default_factory=list)
+    energy_j: float = 0.0
+    metrics: Optional[RequestMetrics] = None
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    _exits_all: list[int] = field(default_factory=list, repr=False)
+    _done: threading.Event = field(default_factory=threading.Event,
+                                   repr=False)
+    _stream: _queue.Queue = field(default_factory=_queue.Queue, repr=False)
+
+    @property
+    def ctx_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    def result(self, timeout: Optional[float] = None) -> "Request":
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.req_id} still {self.status}")
+        if self.metrics is None:
+            # dropped from the queue before admission (scheduler shutdown)
+            raise RuntimeError(
+                f"request {self.req_id} aborted: {self.finish_reason}")
+        return self
+
+    def stream(self, timeout: Optional[float] = None):
+        """Yield tokens as they are generated; returns at end-of-sequence."""
+        while True:
+            tok = self._stream.get(timeout=timeout)
+            if tok is None:
+                return
+            yield tok
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+class Scheduler:
+    """Async request queue + continuous-batching early-exit decode loop."""
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 controller_kind: str = "none", agent_params=None,
+                 threshold: float = 0.9, temperature: float = 1.0,
+                 fixed_exit_idx: int = 0,
+                 allowed_kinds: Optional[Sequence[str]] = None,
+                 max_slots: int = 8, max_len: int = 512, max_new: int = 15,
+                 queue_depth: int = 64, max_wait_s: float = 2.0,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 power_budget_w: Optional[float] = None,
+                 class_energy_budgets_j: Optional[dict] = None,
+                 eos_id: int = EOS, pad_id: int = PAD,
+                 dtype=jnp.float32):
+        if controller_kind not in CTRL_KINDS:
+            raise ValueError(f"unknown controller kind {controller_kind!r}")
+        self.params = params
+        self.cfg = cfg
+        self.agent_params = agent_params
+        self.default_kind = controller_kind
+        self.default_threshold = threshold
+        self.default_max_new = max_new
+        self.temperature = temperature
+        self.fixed_exit_idx = fixed_exit_idx
+        self.queue_depth = queue_depth
+        self.max_wait_s = max_wait_s
+        self.prefill_buckets = (tuple(sorted(prefill_buckets))
+                                if prefill_buckets is not None else None)
+        self.power_budget_w = power_budget_w
+        self.class_energy_budgets_j = dict(class_energy_budgets_j or {})
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.allowed_kinds = frozenset(allowed_kinds
+                                       if allowed_kinds is not None
+                                       else {"none", controller_kind})
+        bad = self.allowed_kinds - set(CTRL_KINDS)
+        if bad:
+            raise ValueError(f"unknown controller kinds {sorted(bad)}")
+
+        self.pool = KVSlotPool(cfg, max_slots, max_len, dtype)
+        S = max_slots
+        self._slot_req: list[Optional[Request]] = [None] * S
+        self._cur_tok = np.full(S, pad_id, np.int32)
+        self._pos = np.zeros(S, np.int32)
+        self._thr = np.full(S, threshold, np.float32)
+        self._kind = np.zeros(S, np.int32)
+
+        self._step = jax.jit(self._make_step(), donate_argnums=2)
+        self._prefill = jax.jit(self._prefill_fn)
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._queue: list[Request] = []
+        self._admitting: Optional[Request] = None
+        self._seq = 0
+        self._running = False
+        self._stopped = False     # set once, by stop() or a loop crash
+        self._thread: Optional[threading.Thread] = None
+
+        # fleet accounting
+        self._t0 = time.monotonic()
+        self._completed = 0
+        self._fleet_tokens = 0
+        self._fleet_energy_j = 0.0
+        self._deferred_admissions = 0
+        self._power_w_ema = 0.0
+        self._exit_layer_ema = float(cfg.num_layers)
+        self._latencies: list[float] = []
+        self._ecache: dict[int, np.ndarray] = {}
+
+    # -- compiled closures --------------------------------------------------
+    def _make_slot_controller(self):
+        """fn(h, i, thr [B], kind [B]) -> exit decision in {0., 1.} per slot.
+
+        Every *allowed* controller kind is computed, then selected per slot —
+        one compiled step serves heterogeneous per-request controllers.
+        Kinds outside ``allowed_kinds`` never pay their cost (the head-stat
+        kinds in particular re-project through the LM head per exit point).
+        """
+        kinds = self.allowed_kinds
+        params, cfg = self.params, self.cfg
+        agent, temp = self.agent_params, self.temperature
+        fixed_idx = self.fixed_exit_idx
+        need_policy = "policy" in kinds and agent is not None
+        need_head = bool(kinds & {"confidence", "entropy"})
+        if not (need_policy or need_head or "fixed" in kinds):
+            return None
+
+        def ctrl(h, i, thr, kind):
+            decide = jnp.zeros((h.shape[0],), jnp.float32)
+            if need_policy:
+                p_exit = policy_net.exit_probability(agent, h, temp)
+                decide = jnp.where(kind == CTRL_KINDS["policy"],
+                                   (p_exit > thr).astype(jnp.float32), decide)
+            if need_head:
+                p1, ent = _head_stats(params, cfg, h, False)
+                decide = jnp.where(kind == CTRL_KINDS["confidence"],
+                                   (p1 > thr).astype(jnp.float32), decide)
+                decide = jnp.where(kind == CTRL_KINDS["entropy"],
+                                   (ent < thr).astype(jnp.float32), decide)
+            if "fixed" in kinds:
+                hit = jnp.asarray(1.0 if i >= fixed_idx else 0.0, jnp.float32)
+                decide = jnp.where(kind == CTRL_KINDS["fixed"], hit, decide)
+            return decide
+
+        return ctrl
+
+    def _make_step(self):
+        cfg = self.cfg
+        slot_ctrl = self._make_slot_controller()
+        dummy_key = jax.random.PRNGKey(0)   # greedy: picker ignores it
+
+        def step(params, tokens, caches, pos, thr, kind):
+            ctrl = (None if slot_ctrl is None
+                    else lambda h, i: slot_ctrl(h, i, thr, kind))
+            fn = make_decode_fn(cfg, ctrl)
+            nxt, new_caches, exit_layer, _ = fn(params, tokens, caches, pos,
+                                                dummy_key)
+            return nxt, new_caches, exit_layer
+
+        return step
+
+    def _prefill_fn(self, params, prompt):
+        """[1, P] prompt -> (first greedy token [1], ring caches at pool W)."""
+        h, caches, _ = prefill(params, self.cfg, prompt,
+                               max_len=self.pool.max_len)
+        t0 = jnp.argmax(lm_logits(params, self.cfg, h[:, -1:, :])[:, 0],
+                        axis=-1)
+        return t0.astype(jnp.int32), caches
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "Scheduler":
+        if self._running:
+            return self
+        if self._stopped:
+            raise RuntimeError("scheduler lifecycle is one-shot: build a "
+                               "new Scheduler instead of restarting")
+        self._running = True
+        self._thread = threading.Thread(target=self._loop,
+                                        name="scheduler-decode", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        with self._work:
+            self._running = False
+            self._stopped = True
+            self._work.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def __enter__(self) -> "Scheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, prompt: Sequence[int], *,
+               max_new: Optional[int] = None,
+               threshold: Optional[float] = None,
+               controller: Optional[str] = None,
+               request_class: str = "default",
+               energy_budget_j: Optional[float] = None) -> Request:
+        kind = controller or self.default_kind
+        if kind not in self.allowed_kinds:
+            raise ValueError(
+                f"controller {kind!r} not in this scheduler's compiled set "
+                f"{sorted(self.allowed_kinds)}")
+        if max_new is None:
+            max_new = self.default_max_new
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        keep = self.pool.max_len - max_new
+        if keep < 1:
+            raise ValueError(f"max_new={max_new} leaves no room for a prompt "
+                             f"(pool max_len={self.pool.max_len})")
+        prompt = list(prompt)[-keep:]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if self.prefill_buckets is not None:
+            # left-pad to the smallest bucket >= len(prompt): prefill then
+            # compiles O(#buckets) shapes instead of one per distinct
+            # length (Engine.serve pads the same way)
+            blen = min((b for b in self.prefill_buckets
+                        if b >= len(prompt)), default=keep)
+            prompt = [self.pad_id] * (min(blen, keep) - len(prompt)) + prompt
+        if energy_budget_j is None:
+            energy_budget_j = self.class_energy_budgets_j.get(request_class)
+        with self._work:
+            if self._stopped:
+                # queuing before start() is fine; after stop()/a loop crash
+                # nothing will ever drain the queue — fail fast
+                raise RuntimeError("scheduler is stopped")
+            if len(self._queue) >= self.queue_depth:
+                raise SchedulerQueueFull(
+                    f"admission queue full ({self.queue_depth})")
+            req = Request(req_id=self._seq, prompt=prompt, max_new=max_new,
+                          threshold=(self.default_threshold
+                                     if threshold is None else threshold),
+                          kind=kind, request_class=request_class,
+                          energy_budget_j=energy_budget_j)
+            self._seq += 1
+            self._queue.append(req)
+            self._work.notify_all()
+        return req
+
+    def serve_batch(self, requests: Sequence[Sequence[int]],
+                    max_new: Optional[int] = None,
+                    threshold: Optional[float] = None,
+                    controller: Optional[str] = None,
+                    timeout: Optional[float] = 300.0) -> ServeResult:
+        """Engine-compatible convenience: submit all, wait all. Blocks on a
+        full admission queue instead of raising (offline batches may exceed
+        ``queue_depth``)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        handles = []
+        for r in requests:
+            while True:
+                try:
+                    handles.append(self.submit(r, max_new=max_new,
+                                               threshold=threshold,
+                                               controller=controller))
+                    break
+                except SchedulerQueueFull:
+                    if not self._running:
+                        raise
+                    if deadline is not None and time.monotonic() > deadline:
+                        raise TimeoutError("queue stayed full past timeout")
+                    time.sleep(0.01)
+        for h in handles:
+            h.result(None if deadline is None
+                     else max(deadline - time.monotonic(), 0.001))
+        return ServeResult([h.tokens for h in handles],
+                           [h.exit_layers for h in handles],
+                           [h.metrics for h in handles])
+
+    # -- decode loop --------------------------------------------------------
+    def _loop(self) -> None:
+        reason = "shutdown"
+        try:
+            while True:
+                with self._work:
+                    while (self._running and not self._queue
+                           and self.pool.n_used == 0):
+                        self._work.wait(0.1)
+                    if not self._running:
+                        break
+                self._admit_ready()
+                if self.pool.n_used:
+                    self._tick()
+                else:
+                    time.sleep(0.002)   # queued but gated: don't busy-spin
+        except Exception:  # noqa: BLE001
+            # a dead decode thread must not leave waiters blocked and the
+            # queue silently accepting work nothing will ever drain
+            import traceback
+            traceback.print_exc()
+            reason = "error"
+            with self._work:
+                self._running = False
+                self._stopped = True
+        self._drain(reason)
+
+    def _pick_next(self, now: float) -> Optional[Request]:
+        """Shortest-prompt-first with FIFO aging: once the oldest request has
+        waited past ``max_wait_s`` it wins regardless of length (no
+        starvation of long prompts)."""
+        if not self._queue:
+            return None
+        oldest = min(self._queue, key=lambda r: r.req_id)
+        if now - oldest.submitted_at > self.max_wait_s:
+            pick = oldest
+        else:
+            pick = min(self._queue, key=lambda r: (len(r.prompt), r.req_id))
+        self._queue.remove(pick)
+        return pick
+
+    def _admission_open(self) -> bool:
+        if self.power_budget_w is None:
+            return True
+        return self._power_w_ema <= self.power_budget_w
+
+    def _admit_ready(self) -> None:
+        now = time.monotonic()
+        while self.pool.n_free:
+            if not self._admission_open():
+                # _power_w_ema is only touched by this thread, so the
+                # deferred-gate bookkeeping needs no lock — and must not
+                # hold it: submit()/stats() would serialize behind the
+                # sleep. A deferred scheduler emits no tokens: decay the
+                # power estimate so the gate reopens instead of
+                # livelocking with a frozen EMA (and don't busy-spin).
+                with self._lock:
+                    if not self._queue:
+                        return
+                    self._deferred_admissions += 1
+                self._power_w_ema *= 0.95
+                time.sleep(0.005)
+                return
+            with self._lock:
+                if not self._queue:
+                    return
+                req = self._pick_next(now)
+            if req is not None:
+                # referenced while in flight: a crash inside _admit must
+                # still let _drain fail this request (it is neither queued
+                # nor resident at that point)
+                self._admitting = req
+                self._admit(req)
+                self._admitting = None
+
+    def _admit(self, req: Request) -> None:
+        t0, req_caches = self._prefill(
+            self.params, jnp.asarray([req.prompt], jnp.int32))
+        slot = self.pool.alloc()
+        assert slot is not None, "admission with no free slot"
+        self.pool.write(req_caches, slot)
+        req.status = "running"
+        req.started_at = time.monotonic()
+        req._exits_all.append(self.cfg.num_layers)   # token 0: full prefill
+        self._slot_req[slot] = req
+        self._cur_tok[slot] = 0
+        self._pos[slot] = len(req.prompt)
+        self._thr[slot] = req.threshold
+        self._kind[slot] = CTRL_KINDS[req.kind]
+        self._account_token(req, int(t0[0]), slot)
+
+    def _tick(self) -> None:
+        t_start = time.monotonic()
+        nxt, new_caches, exitl = self._step(
+            self.params, jnp.asarray(self._cur_tok), self.pool.caches,
+            jnp.asarray(self._pos), jnp.asarray(self._thr),
+            jnp.asarray(self._kind))
+        self.pool.caches = new_caches
+        nxt = np.asarray(nxt)
+        exitl = np.asarray(exitl)
+        tick_energy = 0.0
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            self._pos[slot] += 1
+            req._exits_all.append(int(exitl[slot]))
+            tick_energy += self._account_token(req, int(nxt[slot]), slot)
+        dt = max(time.monotonic() - t_start, 1e-6)
+        self._power_w_ema = (0.9 * self._power_w_ema
+                             + 0.1 * (tick_energy / dt))
+
+    def _account_token(self, req: Request, token: int, slot: int) -> float:
+        """Record one produced token; retire the request when finished.
+        Returns the modeled energy of the step that produced it."""
+        e = self._token_energy(req.ctx_len, req._exits_all[-1])
+        if token == self.eos_id:
+            # EOS is excluded from the response; its producing step is
+            # excluded from accounting too (Engine.serve semantics).
+            self._retire(req, slot, "eos")
+            return 0.0
+        req.tokens.append(token)
+        req.energy_j += e
+        req._stream.put(token)
+        self._exit_layer_ema = (0.95 * self._exit_layer_ema
+                                + 0.05 * req._exits_all[-1])
+        if (req.energy_budget_j is not None
+                and req.energy_j >= req.energy_budget_j):
+            self._retire(req, slot, "energy_budget")
+        elif len(req.tokens) >= req.max_new:
+            self._retire(req, slot, "length")
+        else:
+            self._cur_tok[slot] = token
+        return e
+
+    def _token_energy(self, ctx_len: int, exit_layer: int) -> float:
+        tab = self._ecache.get(ctx_len)
+        if tab is None:
+            tab = energy.decode_token_energy(
+                self.cfg, ctx_len, np.arange(1, self.cfg.num_layers + 1))
+            self._ecache[ctx_len] = tab
+        idx = int(np.clip(exit_layer, 1, self.cfg.num_layers)) - 1
+        return float(tab[idx])
+
+    def _retire(self, req: Request, slot: int, reason: str) -> None:
+        el = np.asarray(req._exits_all[:max(len(req.tokens), 1)], np.int32)
+        req.exit_layers = el.tolist()
+        req.metrics = request_metrics(self.cfg, el, req.ctx_len)
+        req.finish_reason = reason
+        req.finished_at = time.monotonic()
+        req.status = "done"
+        self._slot_req[slot] = None
+        self._cur_tok[slot] = self.pad_id
+        self._pos[slot] = 0
+        self._thr[slot] = self.default_threshold
+        self._kind[slot] = CTRL_KINDS["none"]
+        self.pool.release(slot)
+        with self._lock:
+            self._completed += 1
+            self._fleet_tokens += len(req.tokens)
+            self._fleet_energy_j += req.metrics.energy_j
+            self._latencies.append(req.latency_s)
+            if len(self._latencies) > 4096:
+                del self._latencies[:2048]
+        req._stream.put(None)
+        req._done.set()
+
+    def _drain(self, reason: str = "shutdown") -> None:
+        """On stop/crash: fail queued requests, retire residents
+        mid-sequence (partial tokens + metrics are kept)."""
+        with self._lock:
+            dropped, self._queue = self._queue, []
+        if (self._admitting is not None
+                and self._admitting.status != "done"):
+            dropped.append(self._admitting)
+        self._admitting = None
+        for req in dropped:
+            req.status = "done"
+            req.finish_reason = reason
+            req.finished_at = time.monotonic()
+            req._stream.put(None)
+            req._done.set()
+        for slot, req in enumerate(self._slot_req):
+            if req is not None:
+                self._retire(req, slot, reason)
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            pct = latency_percentiles(self._latencies)
+            up = max(time.monotonic() - self._t0, 1e-9)
+            return {
+                "queue_depth": len(self._queue),
+                "queue_capacity": self.queue_depth,
+                "active_slots": self.pool.n_used,
+                "free_slots": self.pool.n_free,
+                "max_slots": self.pool.max_slots,
+                "max_len": self.pool.max_len,
+                "completed_requests": self._completed,
+                "fleet_tokens": self._fleet_tokens,
+                "fleet_energy_j": self._fleet_energy_j,
+                "fleet_j_per_token": (self._fleet_energy_j
+                                      / max(self._fleet_tokens, 1)),
+                "throughput_tok_s": self._fleet_tokens / up,
+                "power_w_ema": self._power_w_ema,
+                "power_budget_w": self.power_budget_w,
+                "deferred_admissions": self._deferred_admissions,
+                "exit_layer_ema": self._exit_layer_ema,
+                "latency_p50_s": pct["p50_s"],
+                "latency_p95_s": pct["p95_s"],
+                "controllers": sorted(self.allowed_kinds),
+                "uptime_s": up,
+            }

@@ -1,15 +1,26 @@
 """HTTP inference endpoint (paper §V: HF-Inference-API-compatible-ish).
 
-Minimal stdlib server exposing the early-exit engine:
+Threaded stdlib server on top of the continuous-batching scheduler
+(serving/scheduler.py). Concurrent requests share the decode loop: each
+POST submits into the admission queue and its tokens are generated in the
+same fixed-shape batch as everyone else's.
 
   POST /generate {"inputs": "<code>", "parameters": {"max_new_tokens": 15,
-                  "threshold": 0.9}}
+                  "threshold": 0.9, "controller": "policy"}}
   -> {"generated_text": ..., "exit_layers": [...], "energy_j": ...,
       "energy_saving_frac": ...}
 
-The paper wires this into the HuggingFace VS Code extension; the JSON
-contract here mirrors that usage (runtime-adjustable threshold = the
-paper's resource/accuracy knob).
+  * ``inputs`` may be a list of strings — one scheduler request each,
+    served concurrently; the response carries ``results`` per input.
+  * ``"stream": true`` (single input) switches to newline-delimited JSON:
+    one ``{"token": ...}`` line per generated token, then a final metrics
+    line — tokens go out while later ones are still decoding.
+  * per-request ``threshold``/``controller`` select the exit policy per
+    *slot* inside the compiled step; nothing is mutated on shared state
+    (the old ``engine.controller = ...`` write raced under concurrency).
+
+  GET /queue -> scheduler stats (queue depth, slot occupancy, fleet
+                J/token, throughput, latency percentiles)
 
   PYTHONPATH=src python -m repro.serving.server --port 8799   # mini demo
 """
@@ -17,43 +28,87 @@ from __future__ import annotations
 
 import argparse
 import json
-from http.server import BaseHTTPRequestHandler, HTTPServer
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-from repro.core.controller import make_controller
-from repro.serving.engine import Engine
 from repro.serving.metrics import aggregate_metrics
+from repro.serving.scheduler import Scheduler, SchedulerQueueFull
 
 
 class _State:
-    engine: Engine = None
+    scheduler: Scheduler = None
     tokenizer = None
     params = None
     cfg = None
     agent = None
 
 
-def _handle_generate(payload: dict) -> dict:
-    text = payload.get("inputs", "")
-    par = payload.get("parameters", {})
-    max_new = int(par.get("max_new_tokens", 15))
-    thr = float(par.get("threshold", 0.9))
-    kind = par.get("controller", "policy" if _State.agent else "none")
-    ctrl = make_controller(kind, params=_State.params, cfg=_State.cfg,
-                           agent_params=_State.agent, threshold=thr)
-    _State.engine.controller = ctrl
+class RequestError(ValueError):
+    """Bad request payload (maps to HTTP 400)."""
+
+
+def _parse_generate(payload: dict) -> tuple[list[str], dict, bool, bool]:
+    inputs = payload.get("inputs", "")
+    many = isinstance(inputs, list)
+    texts = [str(t) for t in inputs] if many else [str(inputs)]
+    if not texts:
+        raise RequestError("empty inputs")
+    par = payload.get("parameters", {}) or {}
+    # controller-kind validation lives in Scheduler.submit; _submit maps its
+    # ValueError to a 400
+    kind = par.get("controller")
+    opts = {
+        "max_new": int(par.get("max_new_tokens", 15)),
+        "threshold": (float(par["threshold"]) if "threshold" in par
+                      else None),
+        "controller": kind,
+        "request_class": str(par.get("request_class", "default")),
+        "energy_budget_j": (float(par["energy_budget_j"])
+                            if "energy_budget_j" in par else None),
+    }
+    stream = bool(par.get("stream", payload.get("stream", False)))
+    if stream and many:
+        raise RequestError("streaming supports a single input only")
+    return texts, opts, many, stream
+
+
+def _submit(text: str, opts: dict):
     ids = _State.tokenizer.encode(text)
-    res = _State.engine.serve([ids], max_new=max_new)
-    agg = aggregate_metrics(res.metrics)
+    try:
+        return _State.scheduler.submit(ids, **opts)
+    except ValueError as e:          # empty prompt, bad max_new, ...
+        raise RequestError(str(e)) from e
+
+
+def _req_json(req) -> dict:
+    agg = aggregate_metrics([req.metrics])
     return {
-        "generated_text": _State.tokenizer.decode(res.tokens[0]),
-        "exit_layers": res.exit_layers[0],
+        "generated_text": _State.tokenizer.decode(req.tokens),
+        "exit_layers": req.exit_layers,
         "mean_layers": agg["mean_layers"],
         "energy_j": agg["energy_j"],
         "energy_saving_frac": agg["energy_saving_frac"],
+        "finish_reason": req.finish_reason,
+        "latency_s": req.latency_s,
+        "request_id": req.req_id,
     }
 
 
+def _handle_generate(texts: list[str], opts: dict, many: bool) -> dict:
+    handles = [_submit(t, opts) for t in texts]
+    for h in handles:
+        h.result(timeout=300.0)
+    if not many:
+        return _req_json(handles[0])
+    agg = aggregate_metrics([h.metrics for h in handles])
+    return {"results": [_req_json(h) for h in handles],
+            "mean_layers": agg["mean_layers"],
+            "energy_j": agg["energy_j"],
+            "energy_saving_frac": agg["energy_saving_frac"]}
+
+
 class Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+
     def log_message(self, *a):  # quiet
         pass
 
@@ -65,6 +120,40 @@ class Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _send_stream(self, text: str, opts: dict):
+        """Newline-delimited JSON: a line per token, then final metrics.
+
+        Once the 200 headers are out, errors (client disconnect, scheduler
+        shutdown) can only close the connection — a second status line
+        would corrupt the already-started body.
+        """
+        req = _submit(text, opts)
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-ndjson")
+        self.send_header("Connection", "close")
+        self.close_connection = True
+        self.end_headers()
+        try:
+            ids, emitted = [], ""
+            for tok in req.stream(timeout=300.0):
+                # decode the whole prefix each time: byte-fallback tokens
+                # (multi-byte UTF-8 split across tokens) only render once
+                # their sequence completes — per-token decode would stream
+                # U+FFFD replacement characters
+                ids.append(tok)
+                full = _State.tokenizer.decode(ids)
+                # hold back trailing U+FFFD: an in-progress byte sequence
+                # streams as its resolved character on a later line
+                stable = full.rstrip("�")
+                delta, emitted = stable[len(emitted):], stable
+                line = {"token": tok, "text": delta}
+                self.wfile.write((json.dumps(line) + "\n").encode())
+                self.wfile.flush()
+            req.result(timeout=10.0)
+            self.wfile.write((json.dumps(_req_json(req)) + "\n").encode())
+        except Exception:  # noqa: BLE001
+            return
+
     def do_POST(self):
         if self.path.rstrip("/") not in ("/generate", ""):
             self._send(404, {"error": "unknown path"})
@@ -72,17 +161,41 @@ class Handler(BaseHTTPRequestHandler):
         try:
             n = int(self.headers.get("Content-Length", 0))
             payload = json.loads(self.rfile.read(n) or b"{}")
-            self._send(200, _handle_generate(payload))
+            texts, opts, many, stream = _parse_generate(payload)
+        except RequestError as e:
+            self._send(400, {"error": str(e)})
+            return
+        except Exception as e:  # noqa: BLE001
+            self._send(400, {"error": f"bad request: {e!r}"})
+            return
+        try:
+            if stream:
+                self._send_stream(texts[0], opts)
+            else:
+                self._send(200, _handle_generate(texts, opts, many))
+        except RequestError as e:
+            self._send(400, {"error": str(e)})
+        except SchedulerQueueFull as e:
+            self._send(503, {"error": str(e)})
         except Exception as e:  # noqa: BLE001
             self._send(500, {"error": repr(e)})
 
     def do_GET(self):
+        if self.path.rstrip("/") == "/queue":
+            self._send(200, _State.scheduler.stats())
+            return
         self._send(200, {"status": "ok", "model": _State.cfg.name,
-                         "num_layers": _State.cfg.num_layers})
+                         "num_layers": _State.cfg.num_layers,
+                         "scheduler": {
+                             "max_slots": _State.scheduler.pool.max_slots,
+                             "controllers":
+                                 sorted(_State.scheduler.allowed_kinds)}})
 
 
-def setup_mini(train_steps: int = 60, rl: bool = True):
-    """Build a mini model + agent for the demo server (CPU)."""
+def setup_mini(train_steps: int = 60, rl: bool = True, *,
+               max_slots: int = 8, max_len: int = 320,
+               power_budget_w: float = None):
+    """Build a mini model + agent and start the scheduler (CPU demo)."""
     from repro.configs.llama32_3b import paper_mini
     from repro.data import CodeCompletionDataset
     from repro.training import train_model
@@ -100,7 +213,17 @@ def setup_mini(train_steps: int = 60, rl: bool = True):
                                   log_every=0)
     _State.cfg, _State.params, _State.agent = cfg, params, agent
     _State.tokenizer = ds.tokenizer
-    _State.engine = Engine(params, cfg, None)
+    kinds = ["none", "confidence", "entropy", "fixed"]
+    if agent is not None:
+        kinds.append("policy")
+    _State.scheduler = Scheduler(
+        params, cfg, agent_params=agent,
+        controller_kind="policy" if agent is not None else "none",
+        allowed_kinds=kinds, max_slots=max_slots, max_len=max_len,
+        # arbitrary user text: bucket prompt lengths so prefill compiles
+        # O(#buckets) shapes, not one per distinct length
+        prefill_buckets=(16, 32, 64, 96, 128, 192, 256),
+        power_budget_w=power_budget_w).start()
     return cfg, ds
 
 
@@ -109,12 +232,20 @@ def main():
     ap.add_argument("--port", type=int, default=8799)
     ap.add_argument("--train-steps", type=int, default=60)
     ap.add_argument("--no-rl", action="store_true")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=320)
+    ap.add_argument("--power-budget-w", type=float, default=None,
+                    help="defer admission while modeled fleet power exceeds")
     args = ap.parse_args()
     print("[server] preparing mini model ...")
-    setup_mini(args.train_steps, rl=not args.no_rl)
-    srv = HTTPServer(("127.0.0.1", args.port), Handler)
-    print(f"[server] listening on :{args.port} — POST /generate")
-    srv.serve_forever()
+    setup_mini(args.train_steps, rl=not args.no_rl, max_slots=args.slots,
+               max_len=args.max_len, power_budget_w=args.power_budget_w)
+    srv = ThreadingHTTPServer(("127.0.0.1", args.port), Handler)
+    print(f"[server] listening on :{args.port} — POST /generate, GET /queue")
+    try:
+        srv.serve_forever()
+    finally:
+        _State.scheduler.stop()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Property-test shim: use hypothesis when installed, otherwise fall back
+to hand-rolled deterministic example loops with the same decorator API.
+
+    from _propcheck import given, settings, strategies as st
+
+The fallback draws ``max_examples`` pseudo-random examples from a fixed
+seed, so CI without hypothesis still exercises the properties (just with
+less adversarial inputs and no shrinking).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import string
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    # a few awkward characters on purpose: multi-byte UTF-8, controls,
+    # whitespace runs — the cases the tokenizer round-trip must survive
+    _CHARS = (string.printable + "äöüßµ€→λ  中日")
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def text(min_size=0, max_size=20):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return "".join(r.choice(_CHARS) for _ in range(n))
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.example(r) for _ in range(n)]
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(max_examples: int = 25, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", 25))
+                rng = random.Random(0)
+                for _ in range(n):
+                    vals = [s.example(rng) for s in strats]
+                    fn(*args, *vals, **kwargs)
+            # pytest must see run()'s own (empty) signature, not unwrap to
+            # fn and treat the property arguments as fixtures
+            del run.__wrapped__
+            return run
+        return deco

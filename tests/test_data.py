@@ -1,6 +1,7 @@
-"""Data pipeline: tokenizer round-trip, packing invariants (hypothesis)."""
+"""Data pipeline: tokenizer round-trip, packing invariants (property-based;
+hypothesis when installed, deterministic example loops otherwise)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.data import CodeCompletionDataset, CodeGenerator
 from repro.data.pipeline import pack_sequences, sample_context_split

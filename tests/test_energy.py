@@ -1,7 +1,9 @@
-"""Energy model invariants (hardware adaptation of the paper's §VI-A1)."""
+"""Energy model invariants (hardware adaptation of the paper's §VI-A1).
+Property tests run under hypothesis when installed, deterministic example
+loops otherwise (see tests/_propcheck.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core import energy

@@ -1,0 +1,237 @@
+"""Continuous-batching scheduler: slot-pool invariants, mid-flight join
+determinism, EOS retirement, per-slot controllers, energy accounting parity
+with the one-shot Engine."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.controller import make_controller
+from repro.serving import Engine, Scheduler, SchedulerQueueFull
+from repro.serving.scheduler import KVSlotPool
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, vocab, n).tolist() for n in lens]
+
+
+@pytest.fixture(scope="module")
+def sched(mini_cfg, mini_params):
+    s = Scheduler(mini_params, mini_cfg, controller_kind="fixed",
+                  fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                  max_slots=3, max_len=64, max_new=8,
+                  queue_depth=16).start()
+    yield s
+    s.stop()
+
+
+# ---------------------------------------------------------------------------
+# KV slot pool
+# ---------------------------------------------------------------------------
+def test_pool_alloc_free_invariants(mini_cfg):
+    pool = KVSlotPool(mini_cfg, max_slots=3, max_len=16)
+    slots = [pool.alloc() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2]
+    assert pool.alloc() is None and pool.n_free == 0 and pool.n_used == 3
+    pool.release(slots[1])
+    assert pool.n_free == 1
+    with pytest.raises(ValueError):
+        pool.release(slots[1])          # double free
+    with pytest.raises(ValueError):
+        pool.release(99)                # out of range
+    assert pool.alloc() == slots[1]     # LIFO reuse
+
+
+def test_pool_write_touches_only_target_slot(mini_cfg, mini_params):
+    import jax.numpy as jnp
+    from repro.models.transformer import prefill
+    pool = KVSlotPool(mini_cfg, max_slots=2, max_len=16)
+    # copy out before the write: the pool buffer is donated to the jit
+    before0 = np.asarray(pool.caches[0]["k"][:, 0])
+    prompt = jnp.asarray(_prompts(mini_cfg.vocab_size, [8])[0],
+                         jnp.int32)[None]
+    _, caches, _ = prefill(mini_params, mini_cfg, prompt, max_len=16)
+    pool.write(caches, 1)
+    after = pool.caches[0]["k"]         # scanned segment: [L, slots, W, ...]
+    assert not np.allclose(np.asarray(after[:, 1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(after[:, 0]), before0)
+
+
+# ---------------------------------------------------------------------------
+# determinism: joining mid-flight == serving alone
+# ---------------------------------------------------------------------------
+def test_join_mid_decode_is_byte_identical(sched, mini_cfg):
+    a, b = _prompts(mini_cfg.vocab_size, [20, 14], seed=1)
+
+    solo = sched.serve_batch([b], max_new=8)
+
+    ha = sched.submit(a, max_new=16)
+    it = ha.stream(timeout=60.0)
+    for _ in range(3):                  # A is mid-decode...
+        next(it)
+    hb = sched.submit(b, max_new=8)     # ...when B joins the running batch
+    ha.result(60.0), hb.result(60.0)
+
+    assert hb.started_at < ha.finished_at, "B never overlapped A"
+    assert hb.tokens == solo.tokens[0]
+    assert hb.exit_layers == solo.exit_layers[0]
+    assert hb.metrics.energy_j == solo.metrics[0].energy_j
+
+
+def test_early_exit_controller_engaged(sched, mini_cfg):
+    # fixed_exit_idx=0 exits every decode token at the first exit point;
+    # token 0 always comes from full-depth prefill
+    res = sched.serve_batch(_prompts(mini_cfg.vocab_size, [12]), max_new=6)
+    el = res.exit_layers[0]
+    assert el[0] == mini_cfg.num_layers
+    assert all(e < mini_cfg.num_layers for e in el[1:])
+
+
+def test_per_slot_controller_mix(sched, mini_cfg):
+    """'none' and 'fixed' requests share one batch; each slot's exit policy
+    applies independently (no shared-state mutation between requests)."""
+    p = _prompts(mini_cfg.vocab_size, [16, 16], seed=2)
+    h_none = sched.submit(p[0], max_new=6, controller="none")
+    h_fixed = sched.submit(p[1], max_new=6, controller="fixed")
+    h_none.result(60.0), h_fixed.result(60.0)
+    assert all(e == mini_cfg.num_layers for e in h_none.exit_layers)
+    assert all(e < mini_cfg.num_layers for e in h_fixed.exit_layers[1:])
+
+
+# ---------------------------------------------------------------------------
+# retirement
+# ---------------------------------------------------------------------------
+def test_eos_retires_and_frees_slot(mini_cfg, mini_params):
+    probe = Scheduler(mini_params, mini_cfg, max_slots=2, max_len=64,
+                      max_new=8).start()
+    try:
+        prompt = _prompts(mini_cfg.vocab_size, [18], seed=3)[0]
+        full = probe.serve_batch([prompt], max_new=8).tokens[0]
+        # first token value not seen earlier in the sequence -> usable EOS
+        cut, eos = next((i, t) for i, t in enumerate(full)
+                        if t not in full[:i] and i > 0)
+    finally:
+        probe.stop()
+
+    s = Scheduler(mini_params, mini_cfg, max_slots=2, max_len=64,
+                  max_new=8, eos_id=eos).start()
+    try:
+        h = s.submit(prompt, max_new=8).result(60.0)
+        assert h.finish_reason == "eos"
+        assert h.tokens == full[:cut]           # EOS itself excluded
+        assert len(h.exit_layers) == max(cut, 1)
+        assert s.pool.n_free == s.pool.max_slots
+    finally:
+        s.stop()
+
+
+def test_oversubscription_retires_and_reuses_slots(sched, mini_cfg):
+    reqs = _prompts(mini_cfg.vocab_size, [10, 12, 14, 10, 12, 14], seed=4)
+    res = sched.serve_batch(reqs, max_new=5)    # 6 requests, 3 slots
+    assert [len(t) for t in res.tokens] == [5] * 6
+    deadline = time.monotonic() + 5
+    while sched.pool.n_free != sched.pool.max_slots:
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+
+
+def test_energy_budget_retires_early(sched, mini_cfg):
+    prompt = _prompts(mini_cfg.vocab_size, [16], seed=5)[0]
+    free = sched.serve_batch([prompt], max_new=8)
+    budget = free.metrics[0].energy_j / 2
+    h = sched.submit(prompt, max_new=8, energy_budget_j=budget).result(60.0)
+    assert h.finish_reason == "energy_budget"
+    assert 0 < len(h.tokens) < 8
+    assert h.tokens == free.tokens[0][:len(h.tokens)]
+
+
+# ---------------------------------------------------------------------------
+# accounting parity with the one-shot Engine
+# ---------------------------------------------------------------------------
+def test_energy_accounting_matches_engine(sched, mini_cfg, mini_params):
+    # equal-length prompts: Engine pads to the batch max, so only then are
+    # its per-request contexts identical to the scheduler's
+    reqs = _prompts(mini_cfg.vocab_size, [20, 20, 20], seed=6)
+    res = sched.serve_batch(reqs, max_new=8, controller="fixed")
+    eng = Engine(mini_params, mini_cfg, max_new=8)
+    ref = eng.serve(reqs, max_new=8,
+                    controller=make_controller("fixed", exit_idx=0))
+    assert res.tokens == ref.tokens
+    assert res.exit_layers == ref.exit_layers
+    for a, b in zip(res.metrics, ref.metrics):
+        assert a.energy_j == pytest.approx(b.energy_j, rel=1e-12)
+        assert a.mean_layers == b.mean_layers
+        assert a.n_tokens == b.n_tokens
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+def test_queue_overflow_raises(mini_cfg, mini_params):
+    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=32,
+                  max_new=4, queue_depth=2)      # not started: queue fills
+    p = _prompts(mini_cfg.vocab_size, [8, 8, 8], seed=7)
+    s.submit(p[0]), s.submit(p[1])
+    with pytest.raises(SchedulerQueueFull):
+        s.submit(p[2])
+
+
+def test_max_new_zero_rejected(sched, mini_cfg):
+    with pytest.raises(ValueError):
+        sched.submit(_prompts(mini_cfg.vocab_size, [8])[0], max_new=0)
+
+
+def test_prefill_buckets_pad_prompt(mini_cfg, mini_params):
+    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=48,
+                  max_new=4, prefill_buckets=(16, 32))
+    h = s.submit(_prompts(mini_cfg.vocab_size, [10])[0])
+    assert len(h.prompt) == 16 and h.prompt[0] == s.pad_id
+    h2 = s.submit(_prompts(mini_cfg.vocab_size, [40])[0])
+    assert len(h2.prompt) == 44          # over the top bucket: keep-limit
+
+
+def test_shutdown_drops_queued_requests_cleanly(mini_cfg, mini_params):
+    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=32, max_new=4)
+    h = s.submit(_prompts(mini_cfg.vocab_size, [8])[0])   # never admitted
+    s._drain()
+    with pytest.raises(RuntimeError, match="aborted: shutdown"):
+        h.result(1.0)
+
+
+def test_decode_loop_crash_fails_waiters(mini_cfg, mini_params, capsys):
+    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=32, max_new=4)
+
+    def boom(params, prompt):
+        raise RuntimeError("injected prefill failure")
+
+    s._prefill = boom
+    s.start()
+    h = s.submit(_prompts(mini_cfg.vocab_size, [8])[0])
+    with pytest.raises(RuntimeError, match="aborted: error"):
+        h.result(10.0)
+    assert not s._running                 # loop shut itself down
+    with pytest.raises(RuntimeError, match="stopped"):
+        s.submit(_prompts(mini_cfg.vocab_size, [8])[0])   # fail fast now
+    capsys.readouterr()                   # swallow the printed traceback
+
+
+def test_submit_after_stop_fails_fast(mini_cfg, mini_params):
+    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=32,
+                  max_new=4).start()
+    s.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        s.submit(_prompts(mini_cfg.vocab_size, [8])[0])
+    with pytest.raises(RuntimeError, match="one-shot"):
+        s.start()
+
+
+def test_stats_shape(sched):
+    st = sched.stats()
+    for key in ("queue_depth", "active_slots", "free_slots", "max_slots",
+                "completed_requests", "fleet_tokens", "fleet_j_per_token",
+                "throughput_tok_s", "latency_p50_s", "latency_p95_s",
+                "exit_layer_ema", "controllers"):
+        assert key in st
+    assert st["completed_requests"] >= 1
+    assert st["fleet_j_per_token"] > 0
