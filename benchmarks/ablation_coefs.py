@@ -8,8 +8,7 @@ optional bench: ``python -m benchmarks.run --bench ablation_coefs``.
 from __future__ import annotations
 
 from benchmarks.common import artifacts, evaluate, save_result, table
-from repro.core.controller import make_controller
-from repro.rl import EarlyExitEnv, PPOConfig, RewardCoefs
+from repro.rl import EarlyExitEnv, PPOConfig, RewardCoefs, agent_policy_spec
 from repro.rl.ppo import ppo_train
 from repro.rl.rollout import build_rollout_cache
 
@@ -26,8 +25,8 @@ def run(full: bool = False, n: int = 24):
             env, config=PPOConfig(total_steps=60_000, horizon=128),
             log_every=0)
         # T=0.5 (argmax policy): 40-60k-step agents rarely clear 0.9
-        ctrl = make_controller("policy", agent_params=agent, threshold=0.5)
-        r = evaluate(ft, cfg, ds, ctrl, n=n)
+        r = evaluate(ft, cfg, ds, agent_policy_spec(threshold=0.5),
+                     agent_params=agent, n=n)
         rows.append({"alpha": alpha, "beta": beta, "gamma": gamma,
                      "reward": hist[-1]["mean_step_reward"],
                      "mean_layers": r["mean_layers"],

@@ -12,7 +12,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.controller import make_controller
+from repro.api import GenerationRequest, PolicySpec
 from repro.core import energy
 from repro.data import CodeCompletionDataset
 from repro.models import transformer as T
@@ -86,21 +86,11 @@ def artifacts(model: str = "llama", lang: str = "java", *,
     return out
 
 
-def evaluate(params, cfg, ds, controller, *, n: int = 40, max_new: int = 15,
-             ctx_frac: tuple = (0.2, 0.2), max_context: int = 192,
-             seed: int = 0):
-    """Paper §VI-C evaluation: returns quality + efficiency metrics."""
-    tasks = ds.completion_tasks("test", n, seed=seed, ctx_lo=ctx_frac[0],
-                                ctx_hi=ctx_frac[1], max_context=max_context)
-    eng = Engine(params, cfg, controller, max_new=max_new,
-                 max_context=max_context)
-    t0 = time.time()
-    res = eng.serve([c for c, _ in tasks])
-    wall = time.time() - t0
+def _quality_row(ds, tasks, tokens_per_task, max_new):
     vocab = ds.tokenizer.vocab
     q = {"rougeL": [], "codebleu": [], "syntax": [], "dataflow": [],
          "em": []}
-    for (ctx, ref), toks in zip(tasks, res.tokens):
+    for (ctx, ref), toks in zip(tasks, tokens_per_task):
         ref_t = [vocab[i] if i < len(vocab) else "?"
                  for i in ref[:max_new]]
         hyp_t = [vocab[i] if i < len(vocab) else "?" for i in toks]
@@ -110,26 +100,83 @@ def evaluate(params, cfg, ds, controller, *, n: int = 40, max_new: int = 15,
         q["syntax"].append(cb["syntax"])
         q["dataflow"].append(cb["dataflow"])
         q["em"].append(float(hyp_t[:5] == ref_t[:5]))
-    agg = aggregate_metrics(res.metrics)
+    return {k: float(np.mean(v)) for k, v in q.items()}
+
+
+def _efficiency_row(metrics):
+    agg = aggregate_metrics(metrics)
     toks_total = agg["tokens"]
     return {
-        **{k: float(np.mean(v)) for k, v in q.items()},
         "mean_layers": agg["mean_layers"],
         "energy_j": agg["energy_j"],
         "energy_saving_frac": agg["energy_saving_frac"],
         "modeled_latency_s": agg["modeled_latency_s"],
         "modeled_throughput_tok_s": toks_total
         / max(agg["modeled_latency_s"], 1e-12),
-        "wall_s": wall,
         "tokens": toks_total,
     }
 
 
-def controllers_for(params, cfg, agent, thresholds=(0.6, 0.8, 0.9, 0.92)):
-    out = {"full(ft)": make_controller("none")}
+def evaluate(params, cfg, ds, policy, *, agent_params=None, n: int = 40,
+             max_new: int = 15, ctx_frac: tuple = (0.2, 0.2),
+             max_context: int = 192, seed: int = 0):
+    """Paper §VI-C evaluation: returns quality + efficiency metrics.
+
+    ``policy``: a ``repro.api.PolicySpec`` / name (resolved against
+    ``agent_params`` for the RL kind) or a legacy controller callable."""
+    tasks = ds.completion_tasks("test", n, seed=seed, ctx_lo=ctx_frac[0],
+                                ctx_hi=ctx_frac[1], max_context=max_context)
+    eng = Engine(params, cfg, policy, max_new=max_new,
+                 max_context=max_context, agent_params=agent_params)
+    t0 = time.time()
+    res = eng.serve([c for c, _ in tasks])
+    wall = time.time() - t0
+    return {
+        **_quality_row(ds, tasks, res.tokens, max_new),
+        **_efficiency_row(res.metrics),
+        "wall_s": wall,
+    }
+
+
+def evaluate_sweep(params, cfg, ds, specs, *, agent_params=None, n: int = 40,
+                   max_new: int = 15, ctx_frac: tuple = (0.2, 0.2),
+                   max_context: int = 192, seed: int = 0):
+    """Evaluate MANY policy specs in ONE compiled batched run.
+
+    The task batch is tiled once per spec and the specs are stacked into
+    per-row policy ids/params (``stack_policies`` via
+    ``Engine.serve_requests``), so the whole sweep — e.g. every GC
+    threshold — shares a single fixed-shape compiled step instead of
+    retracing per setting. Returns (rows, wall_s): one metrics dict per
+    spec, in order.
+    """
+    specs = list(specs)
+    tasks = ds.completion_tasks("test", n, seed=seed, ctx_lo=ctx_frac[0],
+                                ctx_hi=ctx_frac[1], max_context=max_context)
+    eng = Engine(params, cfg, max_new=max_new, max_context=max_context,
+                 agent_params=agent_params)
+    reqs = [GenerationRequest(prompt=c, max_new_tokens=max_new, policy=spec)
+            for spec in specs for c, _ in tasks]
+    t0 = time.time()
+    results = eng.serve_requests(reqs)
+    wall = time.time() - t0
+    rows = []
+    for si in range(len(specs)):
+        chunk = results[si * len(tasks):(si + 1) * len(tasks)]
+        rows.append({
+            **_quality_row(ds, tasks, [r.tokens for r in chunk], max_new),
+            **_efficiency_row([r.metrics for r in chunk]),
+            "wall_s": wall / len(specs),
+        })
+    return rows, wall
+
+
+def policies_for(thresholds=(0.6, 0.8, 0.9, 0.92)):
+    """Named sweep of the paper's settings: full model + GC(T) specs (pass
+    ``agent_params`` to ``evaluate``/``evaluate_sweep`` alongside)."""
+    out = {"full(ft)": PolicySpec("none")}
     for t in thresholds:
-        out[f"GC({t})"] = make_controller("policy", agent_params=agent,
-                                          threshold=t)
+        out[f"GC({t})"] = PolicySpec("policy", {"threshold": float(t)})
     return out
 
 

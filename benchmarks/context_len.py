@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from benchmarks.common import artifacts, evaluate, save_result, table
-from repro.core.controller import make_controller
+from repro.api import PolicySpec
 
 
 def run(full: bool = False, n: int = 24):
@@ -10,13 +10,13 @@ def run(full: bool = False, n: int = 24):
     rows = []
     fracs = (0.2, 0.3, 0.5, 0.6) if full else (0.2, 0.5)
     for frac in fracs:
-        base = evaluate(ft, cfg, ds, make_controller("none"), n=n,
+        base = evaluate(ft, cfg, ds, PolicySpec("none"), n=n,
                         ctx_frac=(frac, frac))
         rows.append({"ctx": frac, "setting": "full", **base})
         for t in ((0.6, 0.92) if full else (0.9,)):
-            ctrl = make_controller("policy", agent_params=agent,
-                                   threshold=t)
-            r = evaluate(ft, cfg, ds, ctrl, n=n, ctx_frac=(frac, frac))
+            spec = PolicySpec("policy", {"threshold": t})
+            r = evaluate(ft, cfg, ds, spec, agent_params=agent, n=n,
+                         ctx_frac=(frac, frac))
             rows.append({"ctx": frac, "setting": f"GC({t})", **r})
     print(table(rows, ["ctx", "setting", "codebleu", "energy_j",
                        "energy_saving_frac"],

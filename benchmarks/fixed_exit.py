@@ -6,9 +6,9 @@ fraction of final-layer quality while energy/latency grow with depth.
 """
 from __future__ import annotations
 
-from benchmarks.common import (LANGS, MODELS, artifacts, controllers_for,
-                               evaluate, save_result, table)
-from repro.core.controller import make_controller
+from benchmarks.common import (LANGS, MODELS, artifacts, evaluate,
+                               save_result, table)
+from repro.api import PolicySpec
 from repro.models.transformer import plan_segments
 
 
@@ -22,9 +22,9 @@ def run(full: bool = False, n: int = 32):
             segs = plan_segments(cfg)
             rows = []
             for i, seg in enumerate(segs):
-                ctrl = (make_controller("none") if i == len(segs) - 1
-                        else make_controller("fixed", exit_idx=i))
-                r = evaluate(ft, cfg, ds, ctrl, n=n)
+                spec = (PolicySpec("none") if i == len(segs) - 1
+                        else PolicySpec("fixed", {"exit_idx": i}))
+                r = evaluate(ft, cfg, ds, spec, n=n)
                 rows.append({"model": model, "lang": lang,
                              "exit_layer": seg.end, **r})
             all_rows += rows

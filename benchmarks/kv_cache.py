@@ -13,17 +13,17 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import artifacts, evaluate, save_result, table
-from repro.core.controller import make_controller
+from repro.api import PolicySpec
 
 
 def run(full: bool = False, n: int = 24):
     cfg, ds, _, ft, agent = artifacts("llama", "java")
     rows = []
-    r_full = evaluate(ft, cfg, ds, make_controller("none"), n=n)
+    r_full = evaluate(ft, cfg, ds, PolicySpec("none"), n=n)
     rows.append({"setting": "full model (exact)", **r_full})
     for t in (0.6, 0.9):
-        ctrl = make_controller("policy", agent_params=agent, threshold=t)
-        r = evaluate(ft, cfg, ds, ctrl, n=n)
+        spec = PolicySpec("policy", {"threshold": t})
+        r = evaluate(ft, cfg, ds, spec, agent_params=agent, n=n)
         rows.append({"setting": f"GC({t}) + KV propagation", **r})
     print(table(rows, ["setting", "rougeL", "codebleu", "mean_layers",
                        "energy_saving_frac"],

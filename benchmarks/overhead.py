@@ -9,8 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import artifacts, save_result, table
+from repro.api import PolicySpec
 from repro.core import energy
-from repro.core.controller import make_controller
 from repro.core.early_exit import generate
 from repro.models.transformer import plan_segments
 
@@ -28,9 +28,9 @@ def run(full: bool = False, n: int = 16):
         for j, (c, _) in enumerate(tasks):
             ctx[j, 128 - len(c):] = c
         for t in (0.6, 0.8, 0.9, 0.92):
-            ctrl = make_controller("policy", agent_params=agent,
-                                   threshold=t)
-            out = generate(ft, cfg, jnp.asarray(ctx), 10, ctrl)
+            out = generate(ft, cfg, jnp.asarray(ctx), 10,
+                           policy=PolicySpec("policy", {"threshold": t}),
+                           agent_params=agent)
             exits = np.asarray(out["exit_layers"])
             # checks per token = number of boundaries passed before exit
             bounds = np.asarray([s.end for s in segs])

@@ -38,7 +38,7 @@ import jax
 import numpy as np
 
 from repro.configs.llama32_3b import paper_mini
-from repro.core.controller import make_controller
+from repro.api import PolicySpec
 from repro.models import transformer as T
 from repro.serving import Engine, Scheduler
 from repro.serving.metrics import latency_percentiles
@@ -170,7 +170,7 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
                       max_slots=slots, max_len=max_len,
                       queue_depth=max(64, n)).start()
     engine = Engine(params, cfg, max_context=max(PROMPT_LENS))
-    ctrl = make_controller("fixed", exit_idx=exit_idx)
+    ctrl = PolicySpec("fixed", {"exit_idx": exit_idx})
     print(f"[load] warming shapes (model {num_layers}L/{d_model}d, "
           f"{slots} slots) ...", flush=True)
     warmup(sched, engine, ctrl, slots)

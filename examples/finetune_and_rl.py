@@ -10,10 +10,10 @@ import argparse
 
 import numpy as np
 
+from repro.api import PolicySpec
 from repro.configs.llama32_3b import paper_mini
-from repro.core.controller import make_controller
 from repro.data import CodeCompletionDataset
-from repro.rl import PPOConfig, RewardCoefs, train_agent
+from repro.rl import PPOConfig, RewardCoefs, agent_policy_spec, train_agent
 from repro.serving import Engine
 from repro.serving.metrics import aggregate_metrics, rouge_l
 from repro.training import save_pytree, train_model
@@ -51,14 +51,13 @@ def main():
     print("[3/3] evaluation")
     tasks = ds.completion_tasks("test", 24, max_context=160)
     vocab = ds.tokenizer.vocab
-    for name, ctrl in [
-            ("full", make_controller("none")),
-            ("GC(0.6)", make_controller("policy", agent_params=agent,
-                                        threshold=0.6)),
-            ("GC(0.9)", make_controller("policy", agent_params=agent,
-                                        threshold=0.9))]:
-        eng = Engine(params, cfg, ctrl, max_new=15, max_context=160)
-        res = eng.serve([c for c, _ in tasks])
+    eng = Engine(params, cfg, max_new=15, max_context=160,
+                 agent_params=agent)
+    for name, spec in [
+            ("full", PolicySpec("none")),
+            ("GC(0.6)", agent_policy_spec(threshold=0.6)),
+            ("GC(0.9)", agent_policy_spec(threshold=0.9))]:
+        res = eng.serve([c for c, _ in tasks], policy=spec)
         scores = [rouge_l([vocab[i] for i in hyp if i < len(vocab)],
                           [vocab[i] for i in ref[:15] if i < len(vocab)])
                   for (_, ref), hyp in zip(tasks, res.tokens)]

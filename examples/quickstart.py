@@ -8,9 +8,9 @@ Runs in ~2 minutes on CPU: synthetic Java corpus -> LITE fine-tune (Eq. 1)
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import PolicySpec
 from repro.configs.llama32_3b import paper_mini
 from repro.core import energy
-from repro.core.controller import make_controller
 from repro.core.early_exit import generate
 from repro.core.exit_points import exit_points
 from repro.data import CodeCompletionDataset
@@ -32,10 +32,10 @@ def main():
         ctx[j, 96 - len(c):] = c
     ctx = jnp.asarray(ctx)
 
-    for name, ctrl in [("full model", make_controller("none")),
-                       ("early exit @4", make_controller("fixed",
-                                                         exit_idx=0))]:
-        out = generate(params, cfg, ctx, 12, ctrl)
+    for name, spec in [("full model", PolicySpec("none")),
+                       ("early exit @4", PolicySpec("fixed",
+                                                    {"exit_idx": 0}))]:
+        out = generate(params, cfg, ctx, 12, policy=spec)
         exits = np.asarray(out["exit_layers"])
         stats = energy.summarize_exit_energy(cfg, 96, exits)
         txt = ds.tokenizer.decode(np.asarray(out["tokens"])[0].tolist())

@@ -2,27 +2,36 @@
 
     PYTHONPATH=src python examples/serve_batch.py --controller confidence
 
-Shows the four controller families on one batch of code-completion
-requests, comparing quality proxies and modeled energy. The 'policy'
-controller trains a quick PPO agent first.
+Shows the exit-policy families on one batch of code-completion requests,
+comparing quality proxies and modeled energy. With ``--controller all`` the
+policies are served *heterogeneously*: every (policy x request) pair is one
+``GenerationRequest`` and the whole mix runs as a single stacked batch
+(``Engine.serve_requests``) under one compiled step — no per-policy
+closures, no retracing. The 'policy' controller trains a quick PPO agent
+first.
 """
 import argparse
 
-import numpy as np
-
+from repro.api import GenerationRequest, PolicySpec
 from repro.configs.opt_2_7b import paper_mini
-from repro.core.controller import make_controller
 from repro.data import CodeCompletionDataset
 from repro.serving import Engine
 from repro.serving.metrics import aggregate_metrics
 from repro.training import train_model
 
+SPECS = {
+    "none": PolicySpec("none"),
+    "fixed": PolicySpec("fixed", {"exit_idx": 0}),
+    "confidence": PolicySpec("confidence", {"threshold": 0.7}),
+    "entropy": PolicySpec("entropy", {"threshold": 0.7}),
+    "policy": PolicySpec("policy", {"threshold": 0.7}),
+}
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--controller", default="all",
-                    choices=["all", "none", "fixed", "confidence",
-                             "entropy", "policy"])
+                    choices=["all", *SPECS])
     ap.add_argument("--requests", type=int, default=6)
     args = ap.parse_args()
 
@@ -34,8 +43,7 @@ def main():
                             lr=1e-3, log_every=30)
 
     agent = None
-    kinds = ([args.controller] if args.controller != "all"
-             else ["none", "fixed", "confidence", "entropy", "policy"])
+    kinds = [args.controller] if args.controller != "all" else list(SPECS)
     if "policy" in kinds:
         from repro.rl import PPOConfig, train_agent
         print("training PPO exit agent ...")
@@ -45,18 +53,21 @@ def main():
                                   log_every=0)
 
     tasks = ds.completion_tasks("test", args.requests, max_context=128)
-    for kind in kinds:
-        ctrl = make_controller(kind, params=params, cfg=cfg,
-                               agent_params=agent, threshold=0.7,
-                               exit_idx=0)
-        eng = Engine(params, cfg, ctrl, max_new=10, max_context=128)
-        res = eng.serve([c for c, _ in tasks])
-        agg = aggregate_metrics(res.metrics)
+    eng = Engine(params, cfg, max_new=10, max_context=128,
+                 agent_params=agent, tokenizer=ds.tokenizer)
+    # one heterogeneous batch: every (policy, request) pair is a row
+    reqs = [GenerationRequest(prompt=c, max_new_tokens=10,
+                              policy=SPECS[kind])
+            for kind in kinds for c, _ in tasks]
+    results = eng.serve_requests(reqs)
+    for ki, kind in enumerate(kinds):
+        chunk = results[ki * len(tasks):(ki + 1) * len(tasks)]
+        agg = aggregate_metrics([r.metrics for r in chunk])
         print(f"[{kind:10s}] layers {agg['mean_layers']:5.2f}"
               f"/{cfg.num_layers}  energy saving "
               f"{agg['energy_saving_frac']*100:5.1f}%  "
               f"tokens {agg['tokens']}")
-        txt = ds.tokenizer.decode(res.tokens[0]).replace("\n", "\\n")
+        txt = (chunk[0].text or "").replace("\n", "\\n")
         print(f"    e.g. {txt!r}")
 
 

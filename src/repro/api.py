@@ -1,0 +1,153 @@
+"""One policy/request surface for generate, engine, scheduler, RL and server.
+
+Three dataclasses every entry point shares (plus :class:`PolicySpec`
+re-exported from :mod:`repro.core.exit_policy`):
+
+``SamplingParams``
+    temperature / top_k / top_p / seed. All knobs are runtime values — the
+    token picker (:func:`repro.core.early_exit.pick_tokens`) takes them as
+    per-row arrays, so one compiled step serves greedy and sampled requests
+    side by side with zero recompiles.
+
+``GenerationRequest``
+    prompt (text or token ids) + decode budget + exit policy + sampling +
+    stop sequences + energy budget + request class. What the HTTP server
+    parses into, what ``Scheduler.submit`` / ``Engine.serve_requests``
+    accept.
+
+``GenerationResult``
+    tokens / text / per-token exit layers / finish reason / energy.
+
+This module stays dependency-light on purpose (dataclasses only — no jax at
+import time beyond the registry): ``repro.core`` never imports it, so the
+layering is strictly api -> core.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Union
+
+from repro.core.exit_policy import (ExitPolicy, PolicyBatch,  # noqa: F401
+                                    PolicyContext, PolicySpec, as_spec,
+                                    stack_policies)
+
+TokenIds = Sequence[int]
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SamplingParams:
+    """Runtime sampling knobs. ``temperature <= 0`` means greedy (argmax).
+
+    ``top_k <= 0`` and ``top_p >= 1`` disable the respective filters. The
+    values are data, not trace-time constants: the scheduler carries them in
+    per-slot arrays and a request's draw stream is keyed by ``seed`` + token
+    position, so results are independent of batch composition.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        # fields may also carry per-row arrays (Engine.serve_requests);
+        # validate eagerly only for plain scalars. int32 bounds matter: an
+        # out-of-range value would otherwise blow up as an OverflowError
+        # inside the scheduler's decode thread and kill it for everyone.
+        if isinstance(self.top_p, (int, float)):
+            if self.top_p <= 0.0:
+                raise ValueError(f"top_p must be > 0, got {self.top_p}")
+            if self.top_p > 1.0:
+                raise ValueError(f"top_p must be <= 1, got {self.top_p}")
+        if isinstance(self.top_k, int):
+            if not 0 <= self.top_k < 2 ** 31:
+                raise ValueError(f"top_k must be in [0, 2^31), got "
+                                 f"{self.top_k}")
+        if isinstance(self.seed, int):
+            if not -2 ** 31 <= self.seed < 2 ** 31:
+                raise ValueError(f"seed must fit int32, got {self.seed}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+@dataclass
+class GenerationRequest:
+    """One generation request, shared by every serving entry point.
+
+    ``prompt`` may be raw text (the scheduler/engine tokenizer encodes it)
+    or pre-tokenized ids. ``policy`` may be a name, a :class:`PolicySpec`,
+    or ``None`` (the serving layer's default policy).
+    """
+    prompt: Union[str, TokenIds]
+    max_new_tokens: int = 15
+    policy: Optional[Union[str, PolicySpec]] = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    stop_sequences: tuple[str, ...] = ()
+    energy_budget_j: Optional[float] = None
+    request_class: str = "default"
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if isinstance(self.policy, str):
+            self.policy = PolicySpec(self.policy)
+        elif self.policy is not None and not isinstance(self.policy,
+                                                        PolicySpec):
+            raise TypeError(f"policy must be a name, PolicySpec or None, "
+                            f"got {type(self.policy).__name__}")
+        if isinstance(self.stop_sequences, str):
+            raise TypeError("stop_sequences must be a sequence of strings, "
+                            "not a single string")
+        self.stop_sequences = tuple(str(s) for s in self.stop_sequences)
+        if any(not s for s in self.stop_sequences):
+            raise ValueError("empty string in stop_sequences")
+        if not isinstance(self.sampling, SamplingParams):
+            raise TypeError("sampling must be a SamplingParams")
+
+    def spec(self, default: Optional[PolicySpec] = None) -> PolicySpec:
+        """The effective policy spec (``default`` fills a ``None`` policy)."""
+        if self.policy is not None:
+            return self.policy
+        return default if default is not None else PolicySpec("none")
+
+
+@dataclass
+class GenerationResult:
+    """What every entry point hands back for one request."""
+    tokens: list[int]
+    exit_layers: list[int]
+    finish_reason: str                 # length | eos | stop | energy_budget
+    text: Optional[str] = None         # decoded (stop-truncated) text
+    energy_j: float = 0.0
+    metrics: Any = None                # serving.metrics.RequestMetrics
+    request_id: Optional[int] = None
+    latency_s: Optional[float] = None
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+
+def find_stop(text: str, stop_sequences: Sequence[str]
+              ) -> Optional[tuple[int, str]]:
+    """Earliest stop-sequence hit in ``text`` as (index, sequence), else
+    None. Ties at the same index resolve to the longest sequence."""
+    best: Optional[tuple[int, str]] = None
+    for s in stop_sequences:
+        i = text.find(s)
+        if i < 0:
+            continue
+        if best is None or i < best[0] or (i == best[0] and len(s) > len(best[1])):
+            best = (i, s)
+    return best

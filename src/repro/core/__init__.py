@@ -2,8 +2,9 @@
 
 exit_points  — §III-D exit schedule
 lite_loss    — Eq. 1 aggregated fine-tuning loss (single LM head)
-controller   — exit controllers incl. the RL policy (§IV)
-early_exit   — dynamic early-exit generation loop
+exit_policy  — first-class exit-policy registry (§IV / §VI-B controllers)
+controller   — DEPRECATED closure shims over exit_policy
+early_exit   — dynamic early-exit generation loop + runtime-param sampling
 energy       — TPU-adapted analytic energy model (§VI efficiency metrics)
 policy_net   — the small actor-critic network (Table III)
 
@@ -12,8 +13,8 @@ transformer needs the exit schedule; lite_loss needs the transformer head).
 """
 import importlib
 
-__all__ = ["exit_points", "lite_loss", "controller", "early_exit", "energy",
-           "policy_net"]
+__all__ = ["exit_points", "lite_loss", "exit_policy", "controller",
+           "early_exit", "energy", "policy_net"]
 
 
 def __getattr__(name):

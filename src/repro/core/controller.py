@@ -1,110 +1,98 @@
-"""Exit controllers: map a hidden state at an exit point to an exit
-decision.
+"""DEPRECATED closure-based controller construction — thin shims only.
 
-All controllers return a float in {0., 1.} per token (already thresholded —
-``decode_step`` treats > 0.5 as exit). Kinds:
+The single implementation of every exit policy now lives in
+:mod:`repro.core.exit_policy` (a registry of policies whose parameters are
+runtime pytrees). These helpers remain for existing callers and tests: they
+validate eagerly (clear messages instead of mid-trace tracer errors) and
+return plain ``ControllerFn`` closures bound to the registry's appliers.
 
-  * ``none``        never exit (baseline full model)
-  * ``fixed``       exit at a fixed exit-point index (paper §II experiment)
-  * ``confidence``  top-1 softmax probability of the shared LM head > tau
-                    (score-based baseline, CALM-style)
-  * ``entropy``     normalized entropy of the head distribution < tau
-  * ``policy``      the paper's RL agent: softmax(policy logits / temp)[EXIT]
-                    thresholded by T (paper §VI-B)
+Migrate to::
 
-The confidence/entropy controllers need head logits at intermediate layers;
-they use the fused exit-check kernel when enabled (kernels/exit_head).
+    from repro.api import PolicySpec
+    generate(..., policy=PolicySpec("confidence", {"threshold": 0.9}))
+
+See ``docs/api.md`` for the full migration table.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core import policy_net
-from repro.models.layers import apply_norm
-from repro.models.transformer import head_matrix
+from repro.core import exit_policy
+from repro.core.exit_policy import PolicyContext, PolicySpec, head_stats
 
 Array = jax.Array
 ControllerFn = Callable[[Array, int], Optional[Array]]
 
+# scheduler versions < PR 2 imported this privately
+_head_stats = head_stats
+
+
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.controller.{name} is deprecated; use "
+        f"repro.api.PolicySpec / repro.core.exit_policy instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def make_controller(kind: str, *, params=None,
+                    cfg: Optional[ModelConfig] = None, agent_params=None,
+                    threshold: float = 0.9, exit_idx: int = 0,
+                    temperature: float = 1.0,
+                    use_kernel: bool = False) -> Optional[ControllerFn]:
+    """Build a legacy controller closure for ``kind``.
+
+    Validates eagerly: an unknown ``kind``, a missing ``params``/``cfg``
+    (confidence/entropy) or a missing ``agent_params`` (policy) raise here
+    with a readable message rather than surfacing later as a cryptic
+    tracer error inside jit.
+    """
+    _warn("make_controller")
+    pol = exit_policy.get(kind)                      # unknown kind -> error
+    if kind == "fixed":
+        spec = PolicySpec(kind, {"exit_idx": float(exit_idx)})
+    elif kind == "policy":
+        spec = PolicySpec(kind, {"threshold": float(threshold),
+                                 "temperature": float(temperature)})
+    elif kind in ("confidence", "entropy"):
+        spec = PolicySpec(kind, {"threshold": float(threshold)})
+    else:
+        spec = PolicySpec(kind)
+    ctx = PolicyContext(params=params, cfg=cfg, agent_params=agent_params,
+                        use_kernel=use_kernel)
+    exit_policy.validate_context(pol, ctx)
+    if kind == "none":
+        return lambda h, i: None                     # seed semantics
+    return exit_policy.as_exit_fn(spec, ctx)
+
 
 def make_none() -> ControllerFn:
+    _warn("make_none")
     return lambda h, i: None
 
 
 def make_fixed(exit_idx: int) -> ControllerFn:
     """Exit every token at exit point ``exit_idx`` (0-based segment index)."""
-
-    def ctrl(h: Array, i: int):
-        return jnp.full((h.shape[0],), 1.0 if i >= exit_idx else 0.0)
-
-    return ctrl
-
-
-def _head_stats(params, cfg: ModelConfig, h: Array, use_kernel: bool):
-    """(top1_prob, normalized_entropy) of the shared LM head on h [B, D]."""
-    if use_kernel:
-        from repro.kernels.ops import exit_check
-        hn = apply_norm(params["final_norm"], h)
-        top1, lse, ent = exit_check(hn, head_matrix(params, cfg),
-                                    cfg.final_logit_softcap)
-        p1 = jnp.exp(top1 - lse)
-        ent_n = ent / jnp.log(cfg.vocab_size)
-        return p1, ent_n
-    from repro.models.transformer import lm_logits
-    logits = lm_logits(params, cfg, h[:, None, :])[:, 0, :]
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    p = jnp.exp(logp)
-    p1 = p.max(axis=-1)
-    ent = -(p * logp).sum(axis=-1) / jnp.log(cfg.vocab_size)
-    return p1, ent
+    return make_controller("fixed", exit_idx=exit_idx)
 
 
 def make_confidence(params, cfg: ModelConfig, tau: float,
                     use_kernel: bool = False) -> ControllerFn:
-    def ctrl(h: Array, i: int):
-        p1, _ = _head_stats(params, cfg, h, use_kernel)
-        return (p1 > tau).astype(jnp.float32)
-
-    return ctrl
+    return make_controller("confidence", params=params, cfg=cfg,
+                           threshold=tau, use_kernel=use_kernel)
 
 
 def make_entropy(params, cfg: ModelConfig, tau: float,
                  use_kernel: bool = False) -> ControllerFn:
-    def ctrl(h: Array, i: int):
-        _, ent = _head_stats(params, cfg, h, use_kernel)
-        return (ent < tau).astype(jnp.float32)
-
-    return ctrl
+    return make_controller("entropy", params=params, cfg=cfg, threshold=tau,
+                           use_kernel=use_kernel)
 
 
 def make_policy(agent_params, threshold: float,
                 temperature: float = 1.0) -> ControllerFn:
     """The paper's RL controller: exit iff softmax(pi(h))[EXIT] > T."""
-
-    def ctrl(h: Array, i: int):
-        p_exit = policy_net.exit_probability(agent_params, h, temperature)
-        return (p_exit > threshold).astype(jnp.float32)
-
-    return ctrl
-
-
-def make_controller(kind: str, *, params=None, cfg: ModelConfig = None,
-                    agent_params=None, threshold: float = 0.9,
-                    exit_idx: int = 0, temperature: float = 1.0,
-                    use_kernel: bool = False) -> ControllerFn:
-    if kind == "none":
-        return make_none()
-    if kind == "fixed":
-        return make_fixed(exit_idx)
-    if kind == "confidence":
-        return make_confidence(params, cfg, threshold, use_kernel)
-    if kind == "entropy":
-        return make_entropy(params, cfg, threshold, use_kernel)
-    if kind == "policy":
-        return make_policy(agent_params, threshold, temperature)
-    raise ValueError(f"unknown controller kind {kind!r}")
+    return make_controller("policy", agent_params=agent_params,
+                           threshold=threshold, temperature=temperature)

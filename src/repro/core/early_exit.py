@@ -3,6 +3,13 @@
 ``generate`` runs prefill (always full-depth — the paper only exits during
 token generation) followed by a ``lax.scan`` over early-exit decode steps.
 Per-token exit layers are recorded so the energy model can account savings.
+
+Exit behaviour is described by the first-class policy API
+(:mod:`repro.core.exit_policy`): pass ``policy=`` a name / ``PolicySpec`` /
+``PolicyBatch`` (heterogeneous per-row policies) — or a legacy controller
+callable for backward compatibility. Sampling is runtime-parameterized:
+:func:`pick_tokens` takes temperature / top-k / top-p as values or per-row
+arrays, so one compiled step serves mixed greedy/sampled traffic.
 """
 from __future__ import annotations
 
@@ -12,44 +19,125 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.core import exit_policy
 from repro.models.transformer import decode_step, lm_logits, prefill
 
 Array = jax.Array
 
 
-def token_picker(temperature: float = 0.0):
-    """Returns pick(logits [B, V], key) -> (token [B], logprob [B]).
+# ---------------------------------------------------------------------------
+# Token picking (runtime-parameterized)
+# ---------------------------------------------------------------------------
+def pick_tokens(logits: Array, key: Array, temperature=0.0, top_k=0,
+                top_p=1.0):
+    """Pick next tokens from ``logits [B, V]``.
 
-    Greedy when ``temperature <= 0`` (key ignored); the logprob is always the
-    full-precision log-softmax of the chosen token.
+    ``temperature`` / ``top_k`` / ``top_p`` are runtime values — scalars or
+    per-row ``[B]`` arrays — never trace-time constants, so heterogeneous
+    per-request sampling shares one compiled step. ``key`` is either one
+    PRNG key for the batch or per-row keys ``[B, 2]`` (see
+    :func:`request_keys`). Per row: ``temperature <= 0`` → greedy argmax
+    (key ignored); ``top_k <= 0`` / ``top_p >= 1`` disable the filters.
+
+    Returns ``(token [B], logprob [B])`` where the logprob is always the
+    full-precision log-softmax of the chosen token under the *unscaled*
+    head distribution.
+
+    When ``temperature`` is a static scalar <= 0 the whole batch is greedy
+    and the sort/cumsum/categorical machinery is skipped entirely (the
+    seed's argmax-only compute). Runtime arrays can't take that shortcut —
+    the scheduler deliberately compiles the general path once so mixed
+    greedy/sampled traffic never recompiles.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    greedy_tok = jnp.argmax(logits, axis=-1)
+    if isinstance(temperature, (int, float)) and temperature <= 0:
+        return greedy_tok, jnp.take_along_axis(logp, greedy_tok[:, None],
+                                               1)[:, 0]
+
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+    p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
+
+    # temperature-scaled logits, sorted descending per row
+    z = logits / jnp.maximum(t, 1e-6)[:, None]
+    z_sorted = jnp.sort(z, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(z_sorted, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # nucleus: smallest prefix whose mass reaches top_p (>= 1 token)
+    keep_p = jnp.sum((csum - probs) < p[:, None], axis=-1)
+    keep_k = jnp.where(k <= 0, V, jnp.clip(k, 1, V))
+    n_keep = jnp.minimum(jnp.maximum(keep_p, 1), keep_k)
+    z_min = jnp.take_along_axis(z_sorted, (n_keep - 1)[:, None], axis=-1)
+    z_filt = jnp.where(z >= z_min, z, -jnp.inf)
+
+    if key.ndim == 2:                   # per-row keys
+        sampled = jax.vmap(jax.random.categorical)(key, z_filt)
+    else:
+        sampled = jax.random.categorical(key, z_filt, axis=-1)
+    tok = jnp.where(t <= 0.0, greedy_tok, sampled)
+    return tok, jnp.take_along_axis(logp, tok[:, None], 1)[:, 0]
+
+
+def request_keys(seeds: Array, steps: Array) -> Array:
+    """Per-row PRNG keys ``[B, 2]`` from (request seed, token position).
+
+    A row's draw stream depends only on its own seed and position — never
+    on slot index or batch composition — so a sampled request joining the
+    scheduler mid-flight reproduces its solo run exactly.
+    """
+    base = jax.random.PRNGKey(0)
+
+    def one(seed, step):
+        return jax.random.fold_in(jax.random.fold_in(base, seed), step)
+
+    return jax.vmap(one)(jnp.asarray(seeds, jnp.int32),
+                         jnp.asarray(steps, jnp.int32))
+
+
+def token_picker(temperature: float = 0.0):
+    """Legacy shim: returns pick(logits [B, V], key) -> (token, logprob).
+
+    New code should call :func:`pick_tokens` directly with runtime params.
     """
 
     def pick(logits, key):
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        if temperature <= 0.0:
-            tok = jnp.argmax(logits, axis=-1)
-        else:
-            tok = jax.random.categorical(key, logits / temperature, axis=-1)
-        return tok, jnp.take_along_axis(logp, tok[:, None], 1)[:, 0]
+        return pick_tokens(logits, key, temperature)
 
     return pick
 
 
+def _sampling_args(sampling, temperature):
+    """(temperature, top_k, top_p) from a SamplingParams-like or a float."""
+    if sampling is None:
+        return temperature, 0, 1.0
+    return sampling.temperature, sampling.top_k, sampling.top_p
+
+
+# ---------------------------------------------------------------------------
+# Decode step + generation loop
+# ---------------------------------------------------------------------------
 def make_decode_fn(cfg: ModelConfig, controller=None, *,
-                   temperature: float = 0.0):
-    """One-token early-exit decode closure, shared by ``generate``, the
-    serving engine and the continuous-batching scheduler.
+                   temperature: float = 0.0, sampling=None):
+    """One-token early-exit decode closure, shared by ``generate`` and the
+    serving engine (the scheduler builds its own step with per-slot policy
+    and sampling arrays).
+
+    ``controller``: anything :func:`repro.core.exit_policy.as_exit_fn`
+    accepts — already bound to a context, or a legacy callable.
 
     signature: fn(params, tokens [B], caches, pos [B], key) ->
                (next_tokens [B], new_caches, exit_layer [B], logprob [B])
     """
-
-    pick = token_picker(temperature)
+    temp, top_k, top_p = _sampling_args(sampling, temperature)
 
     def fn(params, tokens, caches, pos, key):
         logits, new_caches, info = decode_step(params, cfg, tokens, caches,
                                                pos, controller)
-        nxt, lp = pick(logits, key)
+        nxt, lp = pick_tokens(logits, key, temp, top_k, top_p)
         return (nxt.astype(jnp.int32), new_caches, info["exit_layer"], lp)
 
     return fn
@@ -58,14 +146,40 @@ def make_decode_fn(cfg: ModelConfig, controller=None, *,
 def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
              controller=None, *, max_len: Optional[int] = None,
              temperature: float = 0.0, key: Optional[Array] = None,
-             prefix_embed: Optional[Array] = None):
-    """Greedy (or sampled) generation.
+             prefix_embed: Optional[Array] = None, policy=None,
+             sampling=None, seeds=None, seed_offsets=None, agent_params=None,
+             use_kernel: bool = False):
+    """Greedy (or sampled) generation with dynamic early exit.
 
-    prompt: [B, S0] token ids. Returns dict with
+    prompt: [B, S0] token ids. Exit behaviour comes from ``policy`` (a
+    name / PolicySpec / PolicyBatch resolved against this call's params,
+    cfg and ``agent_params``) or a pre-built ``controller`` callable;
+    passing both is an error. ``sampling`` (SamplingParams-like) overrides
+    the legacy ``temperature`` kwarg; its fields may be per-row arrays.
+
+    ``seeds`` ([B] ints) switches sampling to per-row draw streams keyed
+    by (seed, token position) — the scheduler's convention — making each
+    row's output independent of batch composition; ``key`` is then
+    ignored. ``seed_offsets`` ([B] ints) is subtracted from the position
+    before key folding — callers that left-pad prompts to a common length
+    (Engine) pass the pad amount so the stream is keyed by the row's *own*
+    positions, invariant to co-batched prompt lengths. Default: one shared
+    key chain for the batch (seed semantics).
+
+    Returns dict with
       tokens      [B, steps]   generated ids
       exit_layers [B, steps]   layers used per generated token
       logprobs    [B, steps]   chosen-token log-probs (full-precision head)
     """
+    if controller is not None and policy is not None:
+        raise ValueError("pass either controller= (legacy callable) or "
+                         "policy=, not both")
+    if policy is not None:
+        ctx = exit_policy.PolicyContext(params=params, cfg=cfg,
+                                        agent_params=agent_params,
+                                        use_kernel=use_kernel)
+        controller = exit_policy.as_exit_fn(policy, ctx)
+
     B, S0 = prompt.shape
     n_prefix = prefix_embed.shape[1] if prefix_embed is not None else 0
     total0 = S0 + n_prefix
@@ -77,14 +191,26 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
                            max_len=max_len)
     logits0 = lm_logits(params, cfg, h[:, -1:, :])[:, 0]
 
-    pick = token_picker(temperature)
-    decode_fn = make_decode_fn(cfg, controller, temperature=temperature)
+    temp, top_k, top_p = _sampling_args(sampling, temperature)
+    decode_fn = make_decode_fn(cfg, controller, temperature=temperature,
+                               sampling=sampling)
 
-    key, k0 = jax.random.split(key)
-    tok0, lp0 = pick(logits0, k0)
+    if seeds is not None:
+        seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (B,))
+        off = (jnp.zeros((B,), jnp.int32) if seed_offsets is None
+               else jnp.broadcast_to(jnp.asarray(seed_offsets, jnp.int32),
+                                     (B,)))
+        k0 = request_keys(seeds,
+                          jnp.full((B,), total0 - 1, jnp.int32) - off)
+    else:
+        key, k0 = jax.random.split(key)
+    tok0, lp0 = pick_tokens(logits0, k0, temp, top_k, top_p)
+    tok0 = tok0.astype(jnp.int32)
 
     def step(carry, k):
         tok, caches, pos = carry
+        if seeds is not None:
+            k = request_keys(seeds, pos - off)
         nxt, caches, exit_layer, lp = decode_fn(params, tok, caches, pos, k)
         return (nxt, caches, pos + 1), (tok, exit_layer, lp)
 

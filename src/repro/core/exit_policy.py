@@ -1,0 +1,371 @@
+"""First-class exit policies: the paper's controllers as *data*, not closures.
+
+GREEN-CODE's contribution is the exit policy (RL agent vs. CALM-style
+confidence/entropy baselines, paper §VI-B). The seed encoded each policy as
+an opaque ``ControllerFn`` closure whose knobs (threshold, exit index, agent
+weights) were baked in at trace time — so the serving scheduler had to
+re-implement every policy as an integer switch to serve mixed traffic in one
+compiled step. This module is the single implementation both paths share:
+
+``ExitPolicy``
+    A registered ``(name, id, param-pytree defaults, apply)`` module.
+    ``apply(ctx, h, exit_idx, params) -> decision [B]`` maps the hidden
+    state at an exit boundary to a per-token decision in {0., 1.}
+    (``decode_step`` treats > 0.5 as exit). ``params`` is a pytree of
+    runtime values (scalars or per-row ``[B]`` arrays), so thresholds are
+    *arguments of the compiled step*, never trace-time constants.
+
+``PolicySpec``
+    The user-facing declarative selection: ``PolicySpec("confidence",
+    {"threshold": 0.95})``. Validated eagerly against the registry.
+
+``stack_policies`` / ``select_apply``
+    Heterogeneous per-row policies inside ONE jitted step: specs are
+    stacked into ``(ids [B], param-pytree of [B] leaves)`` and each row
+    gathers its own branch from the stacked branch outputs. This is the
+    fixed-shape lowering of a per-row ``lax.switch`` over the stacked param
+    pytree (a vmapped switch computes every branch and selects exactly the
+    same way, but would break the batch-rank sharding annotations inside
+    the head-stat policies, so the gather form is used). Policies outside
+    the candidate set never pay their compute cost — the head-stat kinds in
+    particular re-project through the LM head per exit point.
+
+Registered kinds (paper §II / §IV / §VI-B):
+
+  * ``none``        never exit (baseline full model)
+  * ``fixed``       exit at a fixed exit-point index
+  * ``confidence``  top-1 softmax probability of the shared LM head > tau
+  * ``entropy``     normalized entropy of the head distribution < tau
+  * ``policy``      the paper's RL agent: softmax(pi(h)/temp)[EXIT] > T
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import policy_net
+from repro.models.layers import apply_norm
+from repro.models.transformer import head_matrix
+
+Array = jax.Array
+
+# decode_step's exit-decision callback: (h [B, D], exit_idx) -> [B] | None
+ExitFn = Callable[[Array, int], Optional[Array]]
+
+
+# ---------------------------------------------------------------------------
+# Context: everything an apply() may need beyond its own params
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PolicyContext:
+    """Model-side inputs shared by all policies (never per-request).
+
+    ``params``/``cfg`` feed the head-stat policies, ``agent_params`` the RL
+    policy. Request-side knobs (threshold, exit index, ...) travel in the
+    policy's own param pytree instead, so they stay runtime data.
+    """
+    params: Any = None
+    cfg: Optional[ModelConfig] = None
+    agent_params: Any = None
+    use_kernel: bool = False
+
+    def with_params(self, params) -> "PolicyContext":
+        return replace(self, params=params)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+PolicyApplyFn = Callable[[PolicyContext, Array, int, Mapping[str, Array]],
+                         Array]
+
+
+@dataclass(frozen=True)
+class ExitPolicy:
+    """A registered exit policy: identity + param schema + pure apply fn."""
+    name: str
+    id: int
+    defaults: Mapping[str, float]       # param field -> default value
+    apply: PolicyApplyFn
+    requires: tuple[str, ...] = ()      # PolicyContext fields that must be set
+    doc: str = ""
+
+
+_REGISTRY: dict[str, ExitPolicy] = {}
+_BY_ID: dict[int, ExitPolicy] = {}
+
+
+def register(name: str, policy_id: int, *,
+             defaults: Optional[Mapping[str, float]] = None,
+             requires: Sequence[str] = ()):
+    """Decorator: register ``fn(ctx, h, exit_idx, params) -> [B]``."""
+
+    def deco(fn: PolicyApplyFn) -> PolicyApplyFn:
+        if name in _REGISTRY:
+            raise ValueError(f"exit policy {name!r} already registered")
+        if policy_id in _BY_ID:
+            raise ValueError(
+                f"exit policy id {policy_id} already taken by "
+                f"{_BY_ID[policy_id].name!r}")
+        pol = ExitPolicy(name=name, id=policy_id,
+                         defaults=dict(defaults or {}), apply=fn,
+                         requires=tuple(requires), doc=fn.__doc__ or "")
+        _REGISTRY[name] = pol
+        _BY_ID[policy_id] = pol
+        return fn
+
+    return deco
+
+
+def get(name: str) -> ExitPolicy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown exit policy {name!r}; registered: "
+                         f"{sorted(_REGISTRY)}") from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def param_fields() -> tuple[str, ...]:
+    """Union of all registered policies' param fields (stable order)."""
+    out: dict[str, None] = {}
+    for name in sorted(_REGISTRY):
+        for f in _REGISTRY[name].defaults:
+            out.setdefault(f)
+    return tuple(out)
+
+
+def field_default(fld: str) -> float:
+    """Fill value for rows whose policy does not use ``fld``."""
+    for name in sorted(_REGISTRY):
+        if fld in _REGISTRY[name].defaults:
+            return float(_REGISTRY[name].defaults[fld])
+    raise KeyError(fld)
+
+
+def validate_context(policy: ExitPolicy, ctx: PolicyContext) -> None:
+    """Eager, readable failure instead of a mid-trace tracer error."""
+    missing = [r for r in policy.requires if getattr(ctx, r) is None]
+    if missing:
+        hints = {"params": "the model parameter pytree",
+                 "cfg": "the ModelConfig",
+                 "agent_params": "the trained RL agent parameters"}
+        need = ", ".join(f"{m} ({hints.get(m, m)})" for m in missing)
+        raise TypeError(f"exit policy {policy.name!r} requires {need} — "
+                        f"pass it via PolicyContext / the *_params kwargs")
+
+
+# ---------------------------------------------------------------------------
+# User-facing declarative spec
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PolicySpec:
+    """Declarative exit-policy selection: a name + runtime param overrides.
+
+    ``PolicySpec("policy", {"threshold": 0.92})`` — validated eagerly, turned
+    into arrays at the jit boundary. This replaces the seed's
+    ``make_controller(...)`` closures as the thing callers hold and ship.
+    """
+    name: str = "none"
+    params: Mapping[str, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        pol = get(self.name)                       # raises on unknown name
+        unknown = set(self.params) - set(pol.defaults)
+        if unknown:
+            raise ValueError(
+                f"policy {self.name!r} has no params {sorted(unknown)}; "
+                f"accepted: {sorted(pol.defaults)}")
+        for k, v in self.params.items():
+            float(v)                               # must be a runtime scalar
+
+    def resolved(self) -> dict[str, float]:
+        """Defaults overlaid with this spec's overrides."""
+        pol = get(self.name)
+        out = {k: float(v) for k, v in pol.defaults.items()}
+        out.update({k: float(v) for k, v in self.params.items()})
+        return out
+
+
+PolicyLike = Union[None, str, PolicySpec]
+
+
+def as_spec(policy: PolicyLike) -> PolicySpec:
+    if policy is None:
+        return PolicySpec("none")
+    if isinstance(policy, PolicySpec):
+        return policy
+    if isinstance(policy, str):
+        return PolicySpec(policy)
+    raise TypeError(f"expected PolicySpec | str | None, got {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Stacking + per-row selection (the scheduler/sweep hot path)
+# ---------------------------------------------------------------------------
+@dataclass
+class PolicyBatch:
+    """Per-row exit policies as data: ``ids [B]`` + stacked param pytree.
+
+    ``params`` holds one ``[B]`` float32 leaf per field in
+    :func:`param_fields`; rows not using a field carry its global default.
+    ``names`` is the *static* candidate set — only these policies are
+    compiled into a step consuming this batch.
+    """
+    ids: Any                      # [B] int32 (numpy or jax)
+    params: dict[str, Any]        # field -> [B] float32
+    names: tuple[str, ...]
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+
+def stack_policies(specs: Sequence[PolicyLike]) -> PolicyBatch:
+    """Stack heterogeneous per-row specs into runtime arrays."""
+    resolved = [as_spec(s) for s in specs]
+    if not resolved:
+        raise ValueError("stack_policies needs at least one spec")
+    fields = param_fields()
+    ids = np.asarray([get(s.name).id for s in resolved], np.int32)
+    params = {f: np.full(len(resolved), field_default(f), np.float32)
+              for f in fields}
+    for row, spec in enumerate(resolved):
+        for k, v in spec.resolved().items():
+            params[k][row] = v
+    return PolicyBatch(ids=ids, params=params,
+                       names=tuple(sorted({s.name for s in resolved})))
+
+
+def select_apply(policies: Sequence[ExitPolicy], ctx: PolicyContext,
+                 ids: Array, params: Mapping[str, Array]) -> Optional[ExitFn]:
+    """One ExitFn serving heterogeneous per-row policies with zero recompiles.
+
+    Every candidate policy (a static set) is evaluated on the whole batch
+    and each row gathers its own branch by ``ids`` — the fixed-shape
+    equivalent of a per-row ``lax.switch`` over the stacked param pytree.
+    ``ids``/``params`` are runtime arrays: new thresholds, temperatures or
+    policy mixes never retrace the step. Rows whose id is outside the
+    candidate set never exit (the ``none`` semantics the seed scheduler
+    gave unknown kinds).
+    """
+    policies = tuple(policies)
+    for pol in policies:
+        validate_context(pol, ctx)
+    if all(pol.name == "none" for pol in policies):
+        return None                      # decode_step skips masking entirely
+
+    lut = np.full(max(_BY_ID) + 2, -1, np.int32)
+    for k, pol in enumerate(policies):
+        lut[pol.id] = k
+
+    def fn(h: Array, exit_idx: int) -> Array:
+        decisions = jnp.stack(
+            [pol.apply(ctx, h, exit_idx, params) for pol in policies])
+        branch = jnp.asarray(lut)[jnp.clip(ids, 0, len(lut) - 1)]
+        picked = jnp.take_along_axis(
+            decisions, jnp.maximum(branch, 0)[None, :], axis=0)[0]
+        return jnp.where(branch >= 0, picked, 0.0)
+
+    return fn
+
+
+def as_exit_fn(policy, ctx: PolicyContext) -> Optional[ExitFn]:
+    """Normalize any policy description to ``decode_step``'s callback.
+
+    Accepts ``None`` | a legacy ``ControllerFn`` callable (returned as-is) |
+    a name | ``PolicySpec`` | ``PolicyBatch``.
+    """
+    if policy is None:
+        return None
+    if callable(policy):
+        return policy
+    if isinstance(policy, PolicyBatch):
+        pols = tuple(get(n) for n in policy.names)
+        return select_apply(
+            pols, ctx, jnp.asarray(policy.ids, jnp.int32),
+            {k: jnp.asarray(v, jnp.float32)
+             for k, v in policy.params.items()})
+    spec = as_spec(policy)
+    if spec.name == "none":
+        return None
+    pol = get(spec.name)
+    validate_context(pol, ctx)
+    params = {k: jnp.float32(v) for k, v in spec.resolved().items()}
+    return lambda h, i: pol.apply(ctx, h, i, params)
+
+
+# ---------------------------------------------------------------------------
+# Shared head statistics (confidence/entropy baselines)
+# ---------------------------------------------------------------------------
+def head_stats(params, cfg: ModelConfig, h: Array, use_kernel: bool):
+    """(top1_prob, normalized_entropy) of the shared LM head on h [B, D]."""
+    if use_kernel:
+        from repro.kernels.ops import exit_check
+        hn = apply_norm(params["final_norm"], h)
+        top1, lse, ent = exit_check(hn, head_matrix(params, cfg),
+                                    cfg.final_logit_softcap)
+        p1 = jnp.exp(top1 - lse)
+        ent_n = ent / jnp.log(cfg.vocab_size)
+        return p1, ent_n
+    from repro.models.transformer import lm_logits
+    logits = lm_logits(params, cfg, h[:, None, :])[:, 0, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    p1 = p.max(axis=-1)
+    ent = -(p * logp).sum(axis=-1) / jnp.log(cfg.vocab_size)
+    return p1, ent
+
+
+# ---------------------------------------------------------------------------
+# The registered policies
+# ---------------------------------------------------------------------------
+def _rows(h: Array, x: Array) -> Array:
+    """Broadcast a decision to [B] float32 (params may be scalars)."""
+    return jnp.broadcast_to(x.astype(jnp.float32), (h.shape[0],))
+
+
+@register("none", 0)
+def _none(ctx, h, exit_idx, p):
+    """Never exit — the full-depth baseline."""
+    return jnp.zeros((h.shape[0],), jnp.float32)
+
+
+@register("policy", 1, defaults={"threshold": 0.9, "temperature": 1.0},
+          requires=("agent_params",))
+def _policy(ctx, h, exit_idx, p):
+    """The paper's RL agent: softmax(pi(h)/temp)[EXIT] > threshold."""
+    logits = policy_net.policy_logits(ctx.agent_params, h)
+    temp = jnp.maximum(jnp.asarray(p["temperature"], jnp.float32), 1e-6)
+    p_exit = jax.nn.softmax(logits / temp[..., None],
+                            axis=-1)[..., policy_net.EXIT]
+    return _rows(h, p_exit > p["threshold"])
+
+
+@register("confidence", 2, defaults={"threshold": 0.9},
+          requires=("params", "cfg"))
+def _confidence(ctx, h, exit_idx, p):
+    """CALM-style score baseline: head top-1 probability > threshold."""
+    p1, _ = head_stats(ctx.params, ctx.cfg, h, ctx.use_kernel)
+    return _rows(h, p1 > p["threshold"])
+
+
+@register("entropy", 3, defaults={"threshold": 0.9},
+          requires=("params", "cfg"))
+def _entropy(ctx, h, exit_idx, p):
+    """Normalized head entropy < threshold."""
+    _, ent = head_stats(ctx.params, ctx.cfg, h, ctx.use_kernel)
+    return _rows(h, ent < p["threshold"])
+
+
+@register("fixed", 4, defaults={"exit_idx": 0.0})
+def _fixed(ctx, h, exit_idx, p):
+    """Exit every token at exit point >= ``exit_idx`` (segment index)."""
+    return _rows(h, jnp.float32(exit_idx) >= p["exit_idx"])

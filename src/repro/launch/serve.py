@@ -7,33 +7,49 @@ Loads (or trains on the fly at --mini scale) the LITE model + RL agent, then
 serves a batch of code-completion requests and prints quality + energy
 metrics — the CPU-scale analogue of the paper's VS-Code endpoint (§V).
 
-``--scheduler`` routes the batch through the continuous-batching scheduler
-(serving/scheduler.py) instead of the one-shot Engine: requests are admitted
-into a persistent KV-slot pool and retire independently; queue/fleet stats
-are printed alongside the quality metrics.
+Arguments parse straight into the shared request surface
+(``repro.api``): an exit :class:`PolicySpec`, :class:`SamplingParams` and
+one :class:`GenerationRequest` per task, served either by the one-shot
+``Engine`` or (``--scheduler``) the continuous-batching scheduler, where
+requests are admitted into a persistent KV-slot pool and retire
+independently; queue/fleet stats are printed alongside quality metrics.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
-from repro.core.controller import make_controller
+from repro.api import GenerationRequest, PolicySpec, SamplingParams
+from repro.core import exit_policy
 from repro.data import CodeCompletionDataset
-from repro.models import transformer as T
 from repro.serving import Engine
 from repro.serving.metrics import aggregate_metrics, codebleu_like, rouge_l
 from repro.training.checkpoint import load_pytree
+
+
+def build_spec(kind: str, threshold: float, exit_idx: int = 0) -> PolicySpec:
+    pol = exit_policy.get(kind)
+    params = {}
+    if "threshold" in pol.defaults:
+        params["threshold"] = threshold
+    if "exit_idx" in pol.defaults:
+        params["exit_idx"] = float(exit_idx)
+    return PolicySpec(kind, params)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama32-3b")
     ap.add_argument("--controller", default="policy",
-                    choices=["none", "fixed", "confidence", "entropy",
-                             "policy"])
+                    choices=sorted(exit_policy.names()))
     ap.add_argument("--threshold", type=float, default=0.9)
+    ap.add_argument("--exit-idx", type=int, default=0,
+                    help="segment index for --controller fixed")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=15)
     ap.add_argument("--language", default="java")
@@ -74,54 +90,63 @@ def main():
                 params, cfg, ds, n_episodes=24, gen_tokens=8,
                 ppo=PPOConfig(total_steps=30_000), log_every=5)
 
+    spec = build_spec(args.controller, args.threshold, args.exit_idx)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
     tasks = ds.completion_tasks("test", args.requests, max_context=192)
-    requests = [c for c, _ in tasks]
+    reqs = [GenerationRequest(prompt=c, max_new_tokens=args.max_new,
+                              policy=spec, sampling=sampling)
+            for c, _ in tasks]
 
     sched = None
     if args.scheduler:
         from repro.serving import Scheduler
-        sched = Scheduler(params, cfg, controller_kind=args.controller,
-                          agent_params=agent, threshold=args.threshold,
+        sched = Scheduler(params, cfg, default_policy=spec,
+                          agent_params=agent,
                           allowed_kinds=("none", args.controller),
+                          tokenizer=ds.tokenizer,
                           max_slots=args.slots,
                           max_len=192 + args.max_new,
                           max_new=args.max_new,
                           queue_depth=max(64, args.requests)).start()
         try:
-            res = sched.serve_batch(requests, max_new=args.max_new)
+            handles = [sched.submit(r) for r in reqs]
+            results = [h.result(300.0).to_result(ds.tokenizer)
+                       for h in handles]
         except BaseException:
             sched.stop()
             raise
     else:
-        ctrl = make_controller(args.controller, params=params, cfg=cfg,
-                               agent_params=agent, threshold=args.threshold)
-        engine = Engine(params, cfg, max_new=args.max_new)
-        res = engine.serve(requests, max_new=args.max_new, controller=ctrl)
+        engine = Engine(params, cfg, max_new=args.max_new,
+                        agent_params=agent, tokenizer=ds.tokenizer)
+        results = engine.serve_requests(reqs)
 
     scores = []
-    for (ctx, ref), toks in zip(tasks, res.tokens):
+    for (ctx, ref), res in zip(tasks, results):
         ref_toks = [ds.tokenizer.vocab[i] if i < len(ds.tokenizer.vocab)
                     else "?" for i in ref[:args.max_new]]
         hyp_toks = [ds.tokenizer.vocab[i] if i < len(ds.tokenizer.vocab)
-                    else "?" for i in toks]
+                    else "?" for i in res.tokens]
         scores.append({"rougeL": rouge_l(hyp_toks, ref_toks),
                        **codebleu_like(hyp_toks, ref_toks)})
-    agg = aggregate_metrics(res.metrics)
-    print(f"[serve] controller={args.controller} T={args.threshold}")
+    agg = aggregate_metrics([r.metrics for r in results])
+    print(f"[serve] policy={spec.name} params={spec.resolved()}")
     print(f"  rougeL    {np.mean([s['rougeL'] for s in scores]):.3f}")
     print(f"  codebleu  {np.mean([s['codebleu'] for s in scores]):.3f}")
     print(f"  layers    {agg['mean_layers']:.2f}/{cfg.num_layers}")
     print(f"  energy    {agg['energy_j']:.4f} J "
           f"(saving {agg['energy_saving_frac']*100:.1f}%)")
-    for i, (toks, el) in enumerate(zip(res.tokens[:3], res.exit_layers[:3])):
-        txt = ds.tokenizer.decode(toks).replace("\n", "\\n")
-        print(f"  [{i}] exits={el} -> {txt!r}")
+    for i, res in enumerate(results[:3]):
+        txt = (res.text or "").replace("\n", "\\n")
+        print(f"  [{i}] finish={res.finish_reason} exits={res.exit_layers} "
+              f"-> {txt!r}")
     if sched is not None:
         st = sched.stats()
         print(f"  [scheduler] slots={st['max_slots']} "
               f"throughput={st['throughput_tok_s']:.1f} tok/s "
               f"fleet J/tok={st['fleet_j_per_token']:.3e} "
-              f"p95 latency={st['latency_p95_s']:.3f}s")
+              f"p95 latency={st['latency_p95_s']:.3f}s "
+              f"step compiles={st['step_compiles']}")
         sched.stop()
 
 

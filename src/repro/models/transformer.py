@@ -569,11 +569,14 @@ def write_cache_slots(cfg: ModelConfig, pool_caches, req_caches, slots):
     return out
 
 
-ControllerFn = Callable[[Array, int], Optional[Array]]
+# exit-decision callback: (h [B, D], exit_idx) -> decision [B] | None.
+# Built by repro.core.exit_policy.as_exit_fn / select_apply — policies are
+# registry data with runtime param pytrees, never hand-rolled closures.
+ExitFn = Callable[[Array, int], Optional[Array]]
 
 
 def decode_step(params, cfg: ModelConfig, tokens: Array, caches, pos: Array,
-                controller: Optional[ControllerFn] = None):
+                controller: Optional[ExitFn] = None):
     """One decode step with dynamic early exit.
 
     tokens: [B] current input token ids; pos: [B] absolute positions.

@@ -45,11 +45,13 @@ class RolloutCache:
 def build_rollout_cache(params, cfg: ModelConfig, dataset, *,
                         n_episodes: int = 64, gen_tokens: int = 15,
                         batch: int = 8, split: str = "train",
-                        seed: int = 0, max_context: int = 256
-                        ) -> RolloutCache:
+                        seed: int = 0, max_context: int = 256,
+                        sampling=None) -> RolloutCache:
     """Sample episodes (context-fraction protocol), generate ``gen_tokens``
-    greedily with the full model, then collect per-boundary hiddens/preds
-    over the generated positions with one forward pass."""
+    with the full model (greedy by default; pass a
+    ``repro.api.SamplingParams`` to roll out under the serving-time
+    sampling regime), then collect per-boundary hiddens/preds over the
+    generated positions with one forward pass."""
     bounds = np.asarray(segment_boundaries(cfg), np.int32)
     n_b = len(bounds)
     tasks = dataset.completion_tasks(split, n_episodes, seed=seed,
@@ -63,7 +65,10 @@ def build_rollout_cache(params, cfg: ModelConfig, dataset, *,
         for j, (c, _) in enumerate(chunk):
             ctxs[j, ctx_len - len(c):] = c          # left-pad with PAD=0
         ctxs = jnp.asarray(ctxs)
-        out = generate(params, cfg, ctxs, gen_tokens)
+        # per-chunk key: otherwise every chunk would reuse generate()'s
+        # default PRNGKey(0) and sampled rollouts would repeat draw streams
+        out = generate(params, cfg, ctxs, gen_tokens, sampling=sampling,
+                       key=jax.random.fold_in(jax.random.PRNGKey(seed), i))
         toks = out["tokens"]                         # [b, T]
         full = jnp.concatenate([ctxs, toks], axis=1)
         outs, _ = T.forward(params, cfg, full, inference=True)

@@ -1,16 +1,27 @@
 """End-to-end RL agent training: fine-tuned LLM -> rollout cache -> PPO.
 
 Reproduces the paper's offline phase (Fig. 2): the fine-tuned early-exit
-model is rolled out over the code corpus; the PPO agent learns the
-exit policy from the cached traces; the extracted policy network is then
-used by ``core.controller.make_policy`` at inference.
+model is rolled out over the code corpus; the PPO agent learns the exit
+policy from the cached traces; at inference the trained weights plug into
+the ``"policy"`` entry of the exit-policy registry — ship
+:func:`agent_policy_spec` (plus ``agent_params`` in the context) to
+``generate`` / ``Engine`` / ``Scheduler``.
 """
 from __future__ import annotations
 
 from repro.config import ModelConfig
+from repro.core.exit_policy import PolicySpec
 from repro.rl.env import EarlyExitEnv, RewardCoefs
 from repro.rl.ppo import PPOConfig, ppo_train
 from repro.rl.rollout import build_rollout_cache
+
+
+def agent_policy_spec(threshold: float = 0.9,
+                      temperature: float = 1.0) -> PolicySpec:
+    """The serving-side spec for a trained agent (paper §VI-B: exit iff
+    softmax(pi(h)/temperature)[EXIT] > threshold)."""
+    return PolicySpec("policy", {"threshold": float(threshold),
+                                 "temperature": float(temperature)})
 
 
 def train_agent(params, cfg: ModelConfig, dataset, *,

@@ -1,3 +1,5 @@
+from repro.api import (GenerationRequest, GenerationResult,  # noqa: F401
+                       PolicySpec, SamplingParams)
 from repro.serving.engine import Engine, ServeResult  # noqa: F401
 from repro.serving.metrics import (RequestMetrics, aggregate_metrics,  # noqa
                                    latency_percentiles)

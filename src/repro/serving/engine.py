@@ -2,8 +2,15 @@
 
 The engine mirrors the paper's endpoint: requests (token lists) are batched,
 left-padded, prefetched through full-depth prefill, then decoded with the
-exit controller. EOS stops a sequence (its later tokens are masked out of
-the response and of the energy accounting).
+exit policy. EOS stops a sequence (its later tokens are masked out of the
+response and of the energy accounting).
+
+Exit behaviour is data, not closures: pass ``policy=`` a name /
+``PolicySpec`` / ``PolicyBatch`` (heterogeneous per-row policies in one
+compiled step — used by the stacked threshold sweep in ``benchmarks/``);
+legacy controller callables are still accepted. ``serve_requests`` consumes
+:class:`repro.api.GenerationRequest` directly and returns
+:class:`repro.api.GenerationResult` per request.
 
 ``make_serve_step`` exposes the jit-able one-token step used by the
 multi-pod dry-run (launch/dryrun.py) — batch sharded over ``data``,
@@ -18,7 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (GenerationRequest, GenerationResult, SamplingParams,
+                       find_stop, stack_policies)
 from repro.config import ModelConfig
+from repro.core import exit_policy
 from repro.core.early_exit import generate
 from repro.data.tokenizer import EOS, PAD
 from repro.serving.metrics import RequestMetrics, request_metrics
@@ -35,21 +45,39 @@ class ServeResult:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, controller=None, *,
-                 max_new: int = 15, max_context: int = 512):
+                 max_new: int = 15, max_context: int = 512,
+                 agent_params=None, tokenizer=None):
+        """``controller`` may be a legacy callable or anything
+        ``exit_policy.as_exit_fn`` accepts (name / PolicySpec /
+        PolicyBatch). ``agent_params`` feeds 'policy' specs,
+        ``tokenizer`` enables text prompts and stop sequences."""
         self.params = params
         self.cfg = cfg
         self.controller = controller
+        self.agent_params = agent_params
+        self.tokenizer = tokenizer
         self.max_new = max_new
         self.max_context = max_context
 
+    def _ctx(self) -> exit_policy.PolicyContext:
+        return exit_policy.PolicyContext(params=self.params, cfg=self.cfg,
+                                         agent_params=self.agent_params)
+
     def serve(self, requests: Sequence[Sequence[int]],
               max_new: Optional[int] = None,
-              controller=None) -> ServeResult:
-        """Serve one batch. ``controller`` overrides the engine default for
-        this call only — concurrent callers must use this instead of mutating
-        ``self.controller`` (shared state)."""
+              controller=None, policy=None,
+              sampling: Optional[SamplingParams] = None,
+              key: Optional[Array] = None, seeds=None,
+              seed_offsets=None) -> ServeResult:
+        """Serve one batch. ``controller``/``policy`` override the engine
+        default for this call only — concurrent callers must use this
+        instead of mutating ``self.controller`` (shared state)."""
+        if controller is not None and policy is not None:
+            raise ValueError("pass either controller= or policy=, not both")
         max_new = max_new or self.max_new
-        ctrl = controller if controller is not None else self.controller
+        ctrl = controller if controller is not None else (
+            policy if policy is not None else self.controller)
+        exit_fn = exit_policy.as_exit_fn(ctrl, self._ctx())
         B = len(requests)
         ctx_len = min(self.max_context, max(len(r) for r in requests))
         ctx = np.full((B, ctx_len), PAD, np.int32)
@@ -57,7 +85,9 @@ class Engine:
             r = list(r)[-ctx_len:]
             ctx[i, ctx_len - len(r):] = r
         out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
-                       ctrl, max_len=ctx_len + max_new)
+                       exit_fn, max_len=ctx_len + max_new,
+                       sampling=sampling, key=key, seeds=seeds,
+                       seed_offsets=seed_offsets)
         toks = np.asarray(out["tokens"])
         exits = np.asarray(out["exit_layers"])
         tokens, exit_layers, metrics = [], [], []
@@ -69,6 +99,100 @@ class Engine:
             exit_layers.append(el.tolist())
             metrics.append(request_metrics(self.cfg, el, ctx_len))
         return ServeResult(tokens, exit_layers, metrics)
+
+    def serve_requests(self, requests: Sequence[GenerationRequest],
+                       default_policy=None,
+                       key: Optional[Array] = None
+                       ) -> list[GenerationResult]:
+        """Serve heterogeneous :class:`GenerationRequest`s in ONE batch.
+
+        Per-row exit policies are stacked (``stack_policies``) and per-row
+        sampling params become arrays, so requests with different policies,
+        thresholds and temperatures share a single compiled step. The batch
+        decodes to the largest ``max_new_tokens``; each result is truncated
+        to its own budget, at EOS, and at its earliest stop sequence
+        (string-level; finish_reason "stop" — tokens, exit layers and
+        energy end at the token that completed the stop, matching the
+        scheduler's retirement accounting). Sampled rows draw from
+        (seed, own-position)-keyed streams, so their randomness never
+        depends on neighbours or batch size; note the engine left-pads to
+        the batch-max prompt length, so a longer co-batched prompt still
+        changes a row's padded context (and thus its logits) — exact
+        batch-invariant tokens need the scheduler's exact-length rows.
+        Offline semantics: unlike the scheduler, a stop hit cannot retire
+        the row early, so extra tokens are computed then discarded here.
+        """
+        reqs = list(requests)
+        if not reqs:
+            return []
+        prompts = []
+        for r in reqs:
+            p = r.prompt
+            if isinstance(p, str):
+                if self.tokenizer is None:
+                    raise ValueError("text prompts need an Engine "
+                                     "tokenizer (pass tokenizer=)")
+                p = self.tokenizer.encode(p)
+            prompts.append(list(p))
+        if any(r.stop_sequences for r in reqs) and self.tokenizer is None:
+            raise ValueError("stop_sequences need an Engine tokenizer")
+        # policy=None falls back to the engine default, same as serve()
+        if default_policy is None:
+            default_policy = self.controller
+        if callable(default_policy):
+            if any(r.policy is None for r in reqs):
+                raise ValueError(
+                    "the engine default is a legacy controller callable, "
+                    "which cannot be stacked per-row — give each request "
+                    "a policy or configure a PolicySpec default")
+            default_policy = None
+        batch = stack_policies(
+            [r.spec(exit_policy.as_spec(default_policy)) for r in reqs])
+        sampling = SamplingParams(
+            temperature=np.asarray([r.sampling.temperature for r in reqs],
+                                   np.float32),
+            top_k=np.asarray([r.sampling.top_k for r in reqs], np.int32),
+            top_p=np.asarray([r.sampling.top_p for r in reqs], np.float32))
+        seeds = np.asarray([r.sampling.seed for r in reqs], np.int32)
+        max_new = max(r.max_new_tokens for r in reqs)
+        # draw streams are keyed by each row's *own* (unpadded) positions:
+        # serve() left-pads to the batch max, so hand it the pad amounts
+        ctx_len = min(self.max_context, max(len(p) for p in prompts))
+        offsets = np.asarray([ctx_len - min(len(p), ctx_len)
+                              for p in prompts], np.int32)
+        res = self.serve(prompts, max_new=max_new, policy=batch,
+                         sampling=sampling, key=key, seeds=seeds,
+                         seed_offsets=offsets)
+        # serve() padded every prompt to the batch context length (ctx_len
+        # above) — account energy against the context the model attended to
+        out = []
+        for i, r in enumerate(reqs):
+            toks = res.tokens[i][:r.max_new_tokens]
+            exits = res.exit_layers[i][:max(len(toks), 1)]
+            hit_eos = (len(res.tokens[i]) < max_new
+                       and len(res.tokens[i]) < r.max_new_tokens)
+            reason = "eos" if hit_eos else "length"
+            text = None
+            if self.tokenizer is not None:
+                text = self.tokenizer.decode(toks)
+                hit = find_stop(text, r.stop_sequences)
+                if hit is not None:
+                    # retire-at-stop accounting, like the scheduler: keep
+                    # tokens only up to the one that completed the stop
+                    k = next(kk for kk in range(1, len(toks) + 1)
+                             if find_stop(self.tokenizer.decode(toks[:kk]),
+                                          r.stop_sequences) is not None)
+                    toks = toks[:k]
+                    exits = exits[:max(k, 1)]
+                    text = text[:hit[0]]
+                    reason = "stop"
+            metrics = request_metrics(self.cfg, np.asarray(exits, np.int32),
+                                      ctx_len)
+            out.append(GenerationResult(
+                tokens=toks, exit_layers=exits, finish_reason=reason,
+                text=text, energy_j=metrics.energy_j, metrics=metrics,
+                request_id=i))
+        return out
 
 
 def make_serve_step(cfg: ModelConfig, controller=None):

@@ -24,15 +24,24 @@ Pieces
     make every row's math independent of its neighbours, which is what makes
     a mid-flight join byte-identical to a solo run (tests/test_scheduler.py).
 
+Policies and sampling as data
+    Exit policies come from the first-class registry
+    (:mod:`repro.core.exit_policy`): each resident request carries a policy
+    id plus a stacked param pytree row, and ``select_apply`` runs the
+    heterogeneous mix inside the one compiled step. Sampling knobs
+    (temperature / top-k / top-p) are per-slot arrays consumed by
+    ``pick_tokens``; a request's draw stream is keyed by its own seed +
+    token position, so sampled output is independent of batch composition.
+    New thresholds, policies or sampling mixes therefore never recompile —
+    ``Scheduler.step_compiles`` counts decode-step compilations and stays
+    at 1 across arbitrary traffic.
+
 Early-exit awareness
-    Exit controllers are compiled *into* the step once, but selected per
-    slot at runtime: each resident request carries ``(kind, threshold)``
-    arrays, so per-request thresholds need no re-jit and no shared-state
-    mutation (the seed server's ``engine.controller = ...`` race is gone).
     Per-slot exit-layer traces feed ``core.energy`` so the scheduler reports
-    fleet J/token, enforces optional per-request energy budgets, and gates
-    admission on a fleet power target (fewer layers used -> lower modeled
-    power -> more admission).
+    fleet J/token, enforces optional per-request energy budgets, retires on
+    per-request ``stop_sequences`` (string-level, at detokenize time), and
+    gates admission on a fleet power target (fewer layers used -> lower
+    modeled power -> more admission).
 """
 from __future__ import annotations
 
@@ -41,25 +50,24 @@ import threading
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (GenerationRequest, GenerationResult, SamplingParams,
+                       find_stop)
 from repro.config import ModelConfig
-from repro.core import energy, policy_net
-from repro.core.controller import _head_stats
-from repro.core.early_exit import make_decode_fn
+from repro.core import energy, exit_policy
+from repro.core.early_exit import pick_tokens, request_keys
+from repro.core.exit_policy import PolicyContext, PolicySpec
 from repro.data.tokenizer import EOS, PAD
-from repro.models.transformer import (init_cache, lm_logits, prefill,
-                                      write_cache_slots)
+from repro.models.transformer import (decode_step, init_cache, lm_logits,
+                                      prefill, write_cache_slots)
 from repro.serving.engine import ServeResult
 from repro.serving.metrics import (RequestMetrics, latency_percentiles,
                                    request_metrics)
-
-CTRL_KINDS = {"none": 0, "policy": 1, "confidence": 2, "entropy": 3,
-              "fixed": 4}
 
 
 class SchedulerQueueFull(RuntimeError):
@@ -120,16 +128,18 @@ class Request:
     req_id: int
     prompt: list[int]
     max_new: int
-    threshold: float
-    kind: str
+    spec: PolicySpec
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    stop_sequences: tuple[str, ...] = ()
     request_class: str = "default"
     energy_budget_j: Optional[float] = None
     submitted_at: float = field(default_factory=time.monotonic)
 
     status: str = "queued"               # queued | running | done
-    finish_reason: Optional[str] = None  # eos | length | energy_budget
+    finish_reason: Optional[str] = None  # eos | length | stop | energy_budget
     tokens: list[int] = field(default_factory=list)
     exit_layers: list[int] = field(default_factory=list)
+    text: Optional[str] = None           # decoded (stop-truncated) output
     energy_j: float = 0.0
     metrics: Optional[RequestMetrics] = None
     started_at: Optional[float] = None
@@ -139,6 +149,10 @@ class Request:
     _done: threading.Event = field(default_factory=threading.Event,
                                    repr=False)
     _stream: _queue.Queue = field(default_factory=_queue.Queue, repr=False)
+
+    @property
+    def kind(self) -> str:
+        return self.spec.name
 
     @property
     def ctx_len(self) -> int:
@@ -167,6 +181,17 @@ class Request:
                 return
             yield tok
 
+    def to_result(self, tokenizer=None) -> GenerationResult:
+        """Snapshot a finished request as the shared result dataclass."""
+        text = self.text
+        if text is None and tokenizer is not None:
+            text = tokenizer.decode(self.tokens)
+        return GenerationResult(
+            tokens=list(self.tokens), exit_layers=list(self.exit_layers),
+            finish_reason=self.finish_reason or "unknown", text=text,
+            energy_j=self.energy_j, metrics=self.metrics,
+            request_id=self.req_id, latency_s=self.latency_s)
+
 
 # ---------------------------------------------------------------------------
 # Scheduler
@@ -178,7 +203,10 @@ class Scheduler:
                  controller_kind: str = "none", agent_params=None,
                  threshold: float = 0.9, temperature: float = 1.0,
                  fixed_exit_idx: int = 0,
+                 default_policy: Union[None, str, PolicySpec] = None,
+                 default_sampling: Optional[SamplingParams] = None,
                  allowed_kinds: Optional[Sequence[str]] = None,
+                 tokenizer=None,
                  max_slots: int = 8, max_len: int = 512, max_new: int = 15,
                  queue_depth: int = 64, max_wait_s: float = 2.0,
                  prefill_buckets: Optional[Sequence[int]] = None,
@@ -186,16 +214,20 @@ class Scheduler:
                  class_energy_budgets_j: Optional[dict] = None,
                  eos_id: int = EOS, pad_id: int = PAD,
                  dtype=jnp.float32):
-        if controller_kind not in CTRL_KINDS:
-            raise ValueError(f"unknown controller kind {controller_kind!r}")
         self.params = params
         self.cfg = cfg
         self.agent_params = agent_params
-        self.default_kind = controller_kind
+        self.tokenizer = tokenizer
         self.default_threshold = threshold
         self.default_max_new = max_new
-        self.temperature = temperature
+        self.temperature = temperature           # RL-policy softmax temp
         self.fixed_exit_idx = fixed_exit_idx
+        if default_policy is not None:
+            self.default_spec = exit_policy.as_spec(default_policy)
+        else:
+            self.default_spec = self._legacy_spec(controller_kind, threshold)
+        self.default_kind = self.default_spec.name
+        self.default_sampling = default_sampling or SamplingParams()
         self.queue_depth = queue_depth
         self.max_wait_s = max_wait_s
         self.prefill_buckets = (tuple(sorted(prefill_buckets))
@@ -206,18 +238,31 @@ class Scheduler:
         self.pad_id = pad_id
         self.allowed_kinds = frozenset(allowed_kinds
                                        if allowed_kinds is not None
-                                       else {"none", controller_kind})
-        bad = self.allowed_kinds - set(CTRL_KINDS)
-        if bad:
-            raise ValueError(f"unknown controller kinds {sorted(bad)}")
+                                       else {"none", self.default_kind})
+        # eager validation: unknown kinds and missing context (e.g. a
+        # 'policy' scheduler without agent_params) fail here with a clear
+        # message, not as a tracer error on the decode thread
+        probe = PolicyContext(params=params, cfg=cfg,
+                              agent_params=agent_params)
+        for k in sorted(self.allowed_kinds):
+            exit_policy.validate_context(exit_policy.get(k), probe)
+        if self.default_kind not in self.allowed_kinds:
+            raise ValueError(f"default policy {self.default_kind!r} not in "
+                             f"allowed_kinds {sorted(self.allowed_kinds)}")
 
         self.pool = KVSlotPool(cfg, max_slots, max_len, dtype)
         S = max_slots
         self._slot_req: list[Optional[Request]] = [None] * S
         self._cur_tok = np.full(S, pad_id, np.int32)
         self._pos = np.zeros(S, np.int32)
-        self._thr = np.full(S, threshold, np.float32)
-        self._kind = np.zeros(S, np.int32)
+        # per-slot policy + sampling state: runtime data, never trace-time
+        self._ids = np.zeros(S, np.int32)            # exit-policy id ('none')
+        self._pp = {f: np.full(S, exit_policy.field_default(f), np.float32)
+                    for f in exit_policy.param_fields()}
+        self._temp = np.zeros(S, np.float32)
+        self._topk = np.zeros(S, np.int32)
+        self._topp = np.ones(S, np.float32)
+        self._seed = np.zeros(S, np.int32)
 
         self._step = jax.jit(self._make_step(), donate_argnums=2)
         self._prefill = jax.jit(self._prefill_fn)
@@ -242,65 +287,55 @@ class Scheduler:
         self._latencies: list[float] = []
         self._ecache: dict[int, np.ndarray] = {}
 
+    def _legacy_spec(self, kind: str, threshold: Optional[float]
+                     ) -> PolicySpec:
+        """Map the seed (kind, threshold) scalar pair onto a PolicySpec."""
+        pol = exit_policy.get(kind)          # unknown kind -> clear error
+        params: dict[str, float] = {}
+        if "threshold" in pol.defaults and threshold is not None:
+            params["threshold"] = float(threshold)
+        if "temperature" in pol.defaults:
+            params["temperature"] = float(self.temperature)
+        if "exit_idx" in pol.defaults:
+            params["exit_idx"] = float(self.fixed_exit_idx)
+        return PolicySpec(kind, params)
+
     # -- compiled closures --------------------------------------------------
-    def _make_slot_controller(self):
-        """fn(h, i, thr [B], kind [B]) -> exit decision in {0., 1.} per slot.
-
-        Every *allowed* controller kind is computed, then selected per slot —
-        one compiled step serves heterogeneous per-request controllers.
-        Kinds outside ``allowed_kinds`` never pay their cost (the head-stat
-        kinds in particular re-project through the LM head per exit point).
-        """
-        kinds = self.allowed_kinds
-        params, cfg = self.params, self.cfg
-        agent, temp = self.agent_params, self.temperature
-        fixed_idx = self.fixed_exit_idx
-        need_policy = "policy" in kinds and agent is not None
-        need_head = bool(kinds & {"confidence", "entropy"})
-        if not (need_policy or need_head or "fixed" in kinds):
-            return None
-
-        def ctrl(h, i, thr, kind):
-            decide = jnp.zeros((h.shape[0],), jnp.float32)
-            if need_policy:
-                p_exit = policy_net.exit_probability(agent, h, temp)
-                decide = jnp.where(kind == CTRL_KINDS["policy"],
-                                   (p_exit > thr).astype(jnp.float32), decide)
-            if need_head:
-                p1, ent = _head_stats(params, cfg, h, False)
-                decide = jnp.where(kind == CTRL_KINDS["confidence"],
-                                   (p1 > thr).astype(jnp.float32), decide)
-                decide = jnp.where(kind == CTRL_KINDS["entropy"],
-                                   (ent < thr).astype(jnp.float32), decide)
-            if "fixed" in kinds:
-                hit = jnp.asarray(1.0 if i >= fixed_idx else 0.0, jnp.float32)
-                decide = jnp.where(kind == CTRL_KINDS["fixed"], hit, decide)
-            return decide
-
-        return ctrl
-
     def _make_step(self):
+        """The one fixed-shape decode step: per-slot exit policies selected
+        from the stacked param pytree, per-slot sampling — all runtime
+        arrays, so mixed traffic never recompiles."""
         cfg = self.cfg
-        slot_ctrl = self._make_slot_controller()
-        dummy_key = jax.random.PRNGKey(0)   # greedy: picker ignores it
+        agent = self.agent_params
+        policies = tuple(exit_policy.get(k)
+                         for k in sorted(self.allowed_kinds))
 
-        def step(params, tokens, caches, pos, thr, kind):
-            ctrl = (None if slot_ctrl is None
-                    else lambda h, i: slot_ctrl(h, i, thr, kind))
-            fn = make_decode_fn(cfg, ctrl)
-            nxt, new_caches, exit_layer, _ = fn(params, tokens, caches, pos,
-                                                dummy_key)
-            return nxt, new_caches, exit_layer
+        def step(params, tokens, caches, pos, ids, pparams, temp, top_k,
+                 top_p, seeds):
+            ctx = PolicyContext(params=params, cfg=cfg, agent_params=agent)
+            ctrl = exit_policy.select_apply(policies, ctx, ids, pparams)
+            logits, new_caches, info = decode_step(params, cfg, tokens,
+                                                   caches, pos, ctrl)
+            keys = request_keys(seeds, pos)
+            nxt, _ = pick_tokens(logits, keys, temp, top_k, top_p)
+            return nxt.astype(jnp.int32), new_caches, info["exit_layer"]
 
         return step
 
-    def _prefill_fn(self, params, prompt):
-        """[1, P] prompt -> (first greedy token [1], ring caches at pool W)."""
+    def _prefill_fn(self, params, prompt, seed, pos0, temp, top_k, top_p):
+        """[1, P] prompt -> (first sampled/greedy token [1], ring caches)."""
         h, caches, _ = prefill(params, self.cfg, prompt,
                                max_len=self.pool.max_len)
-        t0 = jnp.argmax(lm_logits(params, self.cfg, h[:, -1:, :])[:, 0],
-                        axis=-1)
+        logits = lm_logits(params, self.cfg, h[:, -1:, :])[:, 0]
+        keys = request_keys(seed, pos0)
+        t0, _ = pick_tokens(logits, keys, temp, top_k, top_p)
         return t0.astype(jnp.int32), caches
+
+    @property
+    def step_compiles(self) -> int:
+        """Decode-step jit-cache size — a compile counter. Heterogeneous
+        policies/sampling must keep this at 1 (tests assert it)."""
+        return int(self._step._cache_size())
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Scheduler":
@@ -331,17 +366,78 @@ class Scheduler:
         self.stop()
 
     # -- submission ---------------------------------------------------------
-    def submit(self, prompt: Sequence[int], *,
+    def submit(self, request: Union[GenerationRequest, Sequence[int]], *,
                max_new: Optional[int] = None,
                threshold: Optional[float] = None,
                controller: Optional[str] = None,
+               policy: Union[None, str, PolicySpec] = None,
+               sampling: Optional[SamplingParams] = None,
+               stop_sequences: Optional[Sequence[str]] = None,
                request_class: str = "default",
                energy_budget_j: Optional[float] = None) -> Request:
-        kind = controller or self.default_kind
-        if kind not in self.allowed_kinds:
+        """Queue one request. ``request`` is either a
+        :class:`repro.api.GenerationRequest` (kwargs must then be left at
+        their defaults) or a raw token-id sequence plus kwargs (the seed
+        calling convention — ``controller``/``threshold`` map onto a
+        :class:`PolicySpec`)."""
+        if isinstance(request, GenerationRequest):
+            if (max_new is not None or threshold is not None
+                    or controller is not None or policy is not None
+                    or sampling is not None or stop_sequences is not None
+                    or request_class != "default"
+                    or energy_budget_j is not None):
+                raise ValueError("options must live inside the "
+                                 "GenerationRequest when one is submitted")
+            prompt = request.prompt
+            if isinstance(prompt, str):
+                if self.tokenizer is None:
+                    raise ValueError("text prompt needs a scheduler "
+                                     "tokenizer (pass tokenizer=)")
+                prompt = self.tokenizer.encode(prompt)
+            spec = request.spec(self.default_spec)
+            sampling = request.sampling
+            stop_sequences = request.stop_sequences
+            max_new = request.max_new_tokens
+            request_class = request.request_class
+            energy_budget_j = request.energy_budget_j
+        else:
+            prompt = request
+            if policy is not None:
+                if controller is not None or threshold is not None:
+                    raise ValueError("pass either policy= or the legacy "
+                                     "controller=/threshold= pair, not both")
+                spec = exit_policy.as_spec(policy)
+            elif controller is None and threshold is None:
+                spec = self.default_spec
+            else:
+                # legacy (kind, threshold) pair: start from the configured
+                # default spec when the kind matches (its non-threshold
+                # params — policy temperature, fixed exit_idx — must
+                # survive a mere threshold override)
+                kind = controller or self.default_kind
+                base = (self.default_spec if kind == self.default_kind
+                        else self._legacy_spec(kind, None))
+                params = dict(base.params)
+                if "threshold" in exit_policy.get(kind).defaults:
+                    params.setdefault("threshold", self.default_threshold)
+                    if threshold is not None:
+                        params["threshold"] = float(threshold)
+                spec = PolicySpec(kind, params)
+            sampling = sampling or self.default_sampling
+            if isinstance(stop_sequences, str):
+                raise ValueError("stop_sequences must be a sequence of "
+                                 "strings, not a single string")
+            stop_sequences = tuple(str(s) for s in (stop_sequences or ()))
+            if any(not s for s in stop_sequences):
+                raise ValueError("empty string in stop_sequences")
+
+        if spec.name not in self.allowed_kinds:
             raise ValueError(
-                f"controller {kind!r} not in this scheduler's compiled set "
-                f"{sorted(self.allowed_kinds)}")
+                f"controller {spec.name!r} not in this scheduler's compiled "
+                f"set {sorted(self.allowed_kinds)}")
+        if stop_sequences and self.tokenizer is None:
+            raise ValueError("stop_sequences need a scheduler tokenizer "
+                             "(pass tokenizer=)")
         if max_new is None:
             max_new = self.default_max_new
         if max_new < 1:
@@ -371,9 +467,9 @@ class Scheduler:
                 raise SchedulerQueueFull(
                     f"admission queue full ({self.queue_depth})")
             req = Request(req_id=self._seq, prompt=prompt, max_new=max_new,
-                          threshold=(self.default_threshold
-                                     if threshold is None else threshold),
-                          kind=kind, request_class=request_class,
+                          spec=spec, sampling=sampling,
+                          stop_sequences=tuple(stop_sequences),
+                          request_class=request_class,
                           energy_budget_j=energy_budget_j)
             self._seq += 1
             self._queue.append(req)
@@ -486,8 +582,14 @@ class Scheduler:
                 self._admitting = None
 
     def _admit(self, req: Request) -> None:
+        s = req.sampling
         t0, req_caches = self._prefill(
-            self.params, jnp.asarray([req.prompt], jnp.int32))
+            self.params, jnp.asarray([req.prompt], jnp.int32),
+            jnp.asarray([s.seed], jnp.int32),
+            jnp.asarray([len(req.prompt) - 1], jnp.int32),
+            jnp.asarray([s.temperature], jnp.float32),
+            jnp.asarray([s.top_k], jnp.int32),
+            jnp.asarray([s.top_p], jnp.float32))
         slot = self.pool.alloc()
         assert slot is not None, "admission with no free slot"
         self.pool.write(req_caches, slot)
@@ -497,16 +599,24 @@ class Scheduler:
         self._slot_req[slot] = req
         self._cur_tok[slot] = 0
         self._pos[slot] = len(req.prompt)
-        self._thr[slot] = req.threshold
-        self._kind[slot] = CTRL_KINDS[req.kind]
+        self._ids[slot] = exit_policy.get(req.spec.name).id
+        resolved = req.spec.resolved()
+        for f in self._pp:
+            self._pp[f][slot] = resolved.get(f, exit_policy.field_default(f))
+        self._temp[slot] = s.temperature
+        self._topk[slot] = s.top_k
+        self._topp[slot] = s.top_p
+        self._seed[slot] = s.seed
         self._account_token(req, int(t0[0]), slot)
 
     def _tick(self) -> None:
         t_start = time.monotonic()
         nxt, new_caches, exitl = self._step(
             self.params, jnp.asarray(self._cur_tok), self.pool.caches,
-            jnp.asarray(self._pos), jnp.asarray(self._thr),
-            jnp.asarray(self._kind))
+            jnp.asarray(self._pos), jnp.asarray(self._ids),
+            {f: jnp.asarray(v) for f, v in self._pp.items()},
+            jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp), jnp.asarray(self._seed))
         self.pool.caches = new_caches
         nxt = np.asarray(nxt)
         exitl = np.asarray(exitl)
@@ -535,6 +645,22 @@ class Scheduler:
         req._stream.put(token)
         self._exit_layer_ema = (0.95 * self._exit_layer_ema
                                 + 0.05 * req._exits_all[-1])
+        if req.stop_sequences:
+            # string-level check at detokenize time: a stop sequence may
+            # span several (byte-fallback) tokens. Only a tail window is
+            # decoded per token — a match must end at the token just
+            # appended, and one character consumes at most 4 byte-fallback
+            # tokens — so per-token cost is O(longest stop), not O(tokens).
+            longest = max(len(s) for s in req.stop_sequences)
+            tail = self.tokenizer.decode(req.tokens[-(4 * longest + 8):])
+            if find_stop(tail, req.stop_sequences) is not None:
+                # confirmed: one full decode to find the exact cut point
+                text = self.tokenizer.decode(req.tokens)
+                hit = find_stop(text, req.stop_sequences)
+                if hit is not None:
+                    req.text = text[:hit[0]]
+                    self._retire(req, slot, "stop")
+                    return e
         if (req.energy_budget_j is not None
                 and req.energy_j >= req.energy_budget_j):
             self._retire(req, slot, "energy_budget")
@@ -559,12 +685,19 @@ class Scheduler:
         req.metrics = request_metrics(self.cfg, el, req.ctx_len)
         req.finish_reason = reason
         req.finished_at = time.monotonic()
+        if req.text is None and self.tokenizer is not None:
+            req.text = self.tokenizer.decode(req.tokens)
         req.status = "done"
         self._slot_req[slot] = None
         self._cur_tok[slot] = self.pad_id
         self._pos[slot] = 0
-        self._thr[slot] = self.default_threshold
-        self._kind[slot] = CTRL_KINDS["none"]
+        self._ids[slot] = 0                      # 'none'
+        for f in self._pp:
+            self._pp[f][slot] = exit_policy.field_default(f)
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        self._topp[slot] = 1.0
+        self._seed[slot] = 0
         self.pool.release(slot)
         with self._lock:
             self._completed += 1
@@ -619,6 +752,7 @@ class Scheduler:
                 "exit_layer_ema": self._exit_layer_ema,
                 "latency_p50_s": pct["p50_s"],
                 "latency_p95_s": pct["p95_s"],
+                "step_compiles": self.step_compiles,
                 "controllers": sorted(self.allowed_kinds),
                 "uptime_s": up,
             }

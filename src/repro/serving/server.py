@@ -6,21 +6,29 @@ POST submits into the admission queue and its tokens are generated in the
 same fixed-shape batch as everyone else's.
 
   POST /generate {"inputs": "<code>", "parameters": {"max_new_tokens": 15,
-                  "threshold": 0.9, "controller": "policy"}}
+                  "policy": {"name": "policy", "threshold": 0.9},
+                  "temperature": 0.7, "top_k": 40, "top_p": 0.95,
+                  "stop": ["\n\n"], "seed": 1}}
   -> {"generated_text": ..., "exit_layers": [...], "energy_j": ...,
-      "energy_saving_frac": ...}
+      "energy_saving_frac": ..., "finish_reason": "length|eos|stop|..."}
 
+  * payloads parse straight into ``repro.api.GenerationRequest`` /
+    ``SamplingParams`` / ``PolicySpec`` — the same dataclasses the
+    scheduler, engine and benchmarks consume. The seed-era flat
+    ``"controller"``/``"threshold"`` parameters still work.
   * ``inputs`` may be a list of strings — one scheduler request each,
     served concurrently; the response carries ``results`` per input.
   * ``"stream": true`` (single input) switches to newline-delimited JSON:
     one ``{"token": ...}`` line per generated token, then a final metrics
-    line — tokens go out while later ones are still decoding.
-  * per-request ``threshold``/``controller`` select the exit policy per
-    *slot* inside the compiled step; nothing is mutated on shared state
-    (the old ``engine.controller = ...`` write raced under concurrency).
+    line — tokens go out while later ones are still decoding. A stop
+    sequence retires the slot as soon as its token lands, so the stream
+    ends there and the final line carries the stop-truncated text.
+  * per-request policy/sampling select behaviour per *slot* inside the one
+    compiled step; nothing is mutated on shared state and nothing
+    recompiles across mixed traffic.
 
   GET /queue -> scheduler stats (queue depth, slot occupancy, fleet
-                J/token, throughput, latency percentiles)
+                J/token, throughput, latency percentiles, step_compiles)
 
   PYTHONPATH=src python -m repro.serving.server --port 8799   # mini demo
 """
@@ -30,6 +38,8 @@ import argparse
 import json
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro.api import GenerationRequest, PolicySpec, SamplingParams
+from repro.core import exit_policy
 from repro.serving.metrics import aggregate_metrics
 from repro.serving.scheduler import Scheduler, SchedulerQueueFull
 
@@ -46,55 +56,88 @@ class RequestError(ValueError):
     """Bad request payload (maps to HTTP 400)."""
 
 
-def _parse_generate(payload: dict) -> tuple[list[str], dict, bool, bool]:
+def _parse_policy(par: dict):
+    """PolicySpec from ``"policy": {"name", ...params}`` or the legacy flat
+    ``"controller"``/``"threshold"``/``"exit_idx"`` parameters."""
+    po = par.get("policy")
+    if po is not None:
+        if not isinstance(po, dict) or "name" not in po:
+            raise RequestError('parameters.policy must be an object with a '
+                               '"name"')
+        params = {k: float(v) for k, v in po.items() if k != "name"}
+        return PolicySpec(str(po["name"]), params)
+    kind = par.get("controller")
+    if kind is None and "threshold" not in par and "exit_idx" not in par:
+        return None                            # scheduler default policy
+    kind = str(kind) if kind is not None else _State.scheduler.default_kind
+    accepted = exit_policy.get(kind).defaults  # unknown kind -> 400
+    # seed-server compatibility: a flat threshold/exit_idx the policy does
+    # not use is ignored, not rejected
+    params = {k: float(par[k]) for k in ("threshold", "exit_idx")
+              if k in par and k in accepted}
+    return PolicySpec(kind, params)
+
+
+def _parse_generate(payload: dict
+                    ) -> tuple[list[GenerationRequest], bool, bool]:
     inputs = payload.get("inputs", "")
     many = isinstance(inputs, list)
     texts = [str(t) for t in inputs] if many else [str(inputs)]
     if not texts:
         raise RequestError("empty inputs")
     par = payload.get("parameters", {}) or {}
-    # controller-kind validation lives in Scheduler.submit; _submit maps its
-    # ValueError to a 400
-    kind = par.get("controller")
-    opts = {
-        "max_new": int(par.get("max_new_tokens", 15)),
-        "threshold": (float(par["threshold"]) if "threshold" in par
-                      else None),
-        "controller": kind,
-        "request_class": str(par.get("request_class", "default")),
-        "energy_budget_j": (float(par["energy_budget_j"])
-                            if "energy_budget_j" in par else None),
-    }
+    try:
+        policy = _parse_policy(par)
+        sampling = SamplingParams(
+            temperature=float(par.get("temperature", 0.0)),
+            top_k=int(par.get("top_k", 0)),
+            top_p=float(par.get("top_p", 1.0)),
+            seed=int(par.get("seed", 0)))
+        stop = par.get("stop", par.get("stop_sequences", ()))
+        if isinstance(stop, str):
+            stop = (stop,)
+        requests = [GenerationRequest(
+            prompt=t,
+            max_new_tokens=int(par.get("max_new_tokens", 15)),
+            policy=policy,
+            sampling=sampling,
+            stop_sequences=tuple(stop),
+            request_class=str(par.get("request_class", "default")),
+            energy_budget_j=(float(par["energy_budget_j"])
+                             if "energy_budget_j" in par else None))
+            for t in texts]
+    except (TypeError, ValueError) as e:
+        raise RequestError(str(e)) from e
     stream = bool(par.get("stream", payload.get("stream", False)))
     if stream and many:
         raise RequestError("streaming supports a single input only")
-    return texts, opts, many, stream
+    return requests, many, stream
 
 
-def _submit(text: str, opts: dict):
-    ids = _State.tokenizer.encode(text)
+def _submit(req: GenerationRequest):
     try:
-        return _State.scheduler.submit(ids, **opts)
-    except ValueError as e:          # empty prompt, bad max_new, ...
+        return _State.scheduler.submit(req)
+    except ValueError as e:          # empty prompt, unknown policy, ...
         raise RequestError(str(e)) from e
 
 
 def _req_json(req) -> dict:
+    res = req.to_result(_State.tokenizer)
     agg = aggregate_metrics([req.metrics])
     return {
-        "generated_text": _State.tokenizer.decode(req.tokens),
-        "exit_layers": req.exit_layers,
+        "generated_text": res.text,
+        "exit_layers": res.exit_layers,
         "mean_layers": agg["mean_layers"],
         "energy_j": agg["energy_j"],
         "energy_saving_frac": agg["energy_saving_frac"],
-        "finish_reason": req.finish_reason,
-        "latency_s": req.latency_s,
-        "request_id": req.req_id,
+        "finish_reason": res.finish_reason,
+        "latency_s": res.latency_s,
+        "request_id": res.request_id,
     }
 
 
-def _handle_generate(texts: list[str], opts: dict, many: bool) -> dict:
-    handles = [_submit(t, opts) for t in texts]
+def _handle_generate(reqs: list[GenerationRequest], many: bool) -> dict:
+    handles = [_submit(r) for r in reqs]
     for h in handles:
         h.result(timeout=300.0)
     if not many:
@@ -120,14 +163,14 @@ class Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
-    def _send_stream(self, text: str, opts: dict):
+    def _send_stream(self, req: GenerationRequest):
         """Newline-delimited JSON: a line per token, then final metrics.
 
         Once the 200 headers are out, errors (client disconnect, scheduler
         shutdown) can only close the connection — a second status line
         would corrupt the already-started body.
         """
-        req = _submit(text, opts)
+        handle = _submit(req)
         self.send_response(200)
         self.send_header("Content-Type", "application/x-ndjson")
         self.send_header("Connection", "close")
@@ -135,7 +178,7 @@ class Handler(BaseHTTPRequestHandler):
         self.end_headers()
         try:
             ids, emitted = [], ""
-            for tok in req.stream(timeout=300.0):
+            for tok in handle.stream(timeout=300.0):
                 # decode the whole prefix each time: byte-fallback tokens
                 # (multi-byte UTF-8 split across tokens) only render once
                 # their sequence completes — per-token decode would stream
@@ -149,8 +192,10 @@ class Handler(BaseHTTPRequestHandler):
                 line = {"token": tok, "text": delta}
                 self.wfile.write((json.dumps(line) + "\n").encode())
                 self.wfile.flush()
-            req.result(timeout=10.0)
-            self.wfile.write((json.dumps(_req_json(req)) + "\n").encode())
+            handle.result(timeout=10.0)
+            # on a stop hit the final line's generated_text is already the
+            # stop-truncated text (_retire sets it before decoding stops)
+            self.wfile.write((json.dumps(_req_json(handle)) + "\n").encode())
         except Exception:  # noqa: BLE001
             return
 
@@ -161,7 +206,7 @@ class Handler(BaseHTTPRequestHandler):
         try:
             n = int(self.headers.get("Content-Length", 0))
             payload = json.loads(self.rfile.read(n) or b"{}")
-            texts, opts, many, stream = _parse_generate(payload)
+            reqs, many, stream = _parse_generate(payload)
         except RequestError as e:
             self._send(400, {"error": str(e)})
             return
@@ -170,9 +215,9 @@ class Handler(BaseHTTPRequestHandler):
             return
         try:
             if stream:
-                self._send_stream(texts[0], opts)
+                self._send_stream(reqs[0])
             else:
-                self._send(200, _handle_generate(texts, opts, many))
+                self._send(200, _handle_generate(reqs, many))
         except RequestError as e:
             self._send(400, {"error": str(e)})
         except SchedulerQueueFull as e:
@@ -219,7 +264,8 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
     _State.scheduler = Scheduler(
         params, cfg, agent_params=agent,
         controller_kind="policy" if agent is not None else "none",
-        allowed_kinds=kinds, max_slots=max_slots, max_len=max_len,
+        allowed_kinds=kinds, tokenizer=ds.tokenizer,
+        max_slots=max_slots, max_len=max_len,
         # arbitrary user text: bucket prompt lengths so prefill compiles
         # O(#buckets) shapes, not one per distinct length
         prefill_buckets=(16, 32, 64, 96, 128, 192, 256),

@@ -1,0 +1,162 @@
+"""The shared request/sampling surface (repro.api) + picker invariants.
+
+Property tests run under hypothesis when installed, else the deterministic
+example loops from tests/_propcheck.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, strategies as st
+
+from repro.api import (GenerationRequest, PolicySpec, SamplingParams,
+                       find_stop)
+from repro.core.early_exit import pick_tokens, request_keys, token_picker
+
+
+# ---------------------------------------------------------------------------
+# dataclasses
+# ---------------------------------------------------------------------------
+def test_generation_request_normalizes_policy_name():
+    r = GenerationRequest(prompt=[1, 2], policy="fixed")
+    assert isinstance(r.policy, PolicySpec) and r.policy.name == "fixed"
+    assert r.spec().name == "fixed"
+    assert GenerationRequest(prompt=[1]).spec(PolicySpec("entropy")).name \
+        == "entropy"
+
+
+def test_generation_request_validation():
+    with pytest.raises(ValueError):
+        GenerationRequest(prompt=[1], max_new_tokens=0)
+    with pytest.raises(ValueError, match="unknown exit policy"):
+        GenerationRequest(prompt=[1], policy="wat")
+    with pytest.raises(TypeError, match="sequence of strings"):
+        GenerationRequest(prompt=[1], stop_sequences="\n")
+    with pytest.raises(ValueError, match="empty string"):
+        GenerationRequest(prompt=[1], stop_sequences=("ok", ""))
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    # int32 overflow must fail at construction, not on the decode thread
+    with pytest.raises(ValueError, match="int32"):
+        SamplingParams(seed=2 ** 31)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=2 ** 31)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.7).greedy
+
+
+def test_find_stop_earliest_then_longest():
+    assert find_stop("abcdef", ("cd", "e")) == (2, "cd")
+    assert find_stop("abab", ("ab", "aba")) == (0, "aba")
+    assert find_stop("abc", ("zz",)) is None
+
+
+# ---------------------------------------------------------------------------
+# picker invariants (satellite: top_k / top_p property tests)
+# ---------------------------------------------------------------------------
+def _logits(seed, B=3, V=48):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, V))
+
+
+def _keys(seed, B=3):
+    return request_keys(np.full(B, seed), np.arange(B))
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=48))
+@settings(max_examples=25, deadline=None)
+def test_top_k_samples_only_top_k(seed, k):
+    logits = _logits(seed)
+    tok, _ = pick_tokens(logits, _keys(seed), temperature=1.0, top_k=k)
+    order = np.argsort(np.asarray(logits), axis=-1)
+    for b, t in enumerate(np.asarray(tok)):
+        assert int(t) in order[b, -k:], f"token outside top-{k}"
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=99))
+@settings(max_examples=25, deadline=None)
+def test_top_p_samples_inside_nucleus(seed, p_pct):
+    p = p_pct / 100.0
+    logits = _logits(seed)
+    tok, _ = pick_tokens(logits, _keys(seed), temperature=1.0, top_p=p)
+    probs = np.asarray(jax.nn.softmax(logits, axis=-1))
+    for b, t in enumerate(np.asarray(tok)):
+        srt = np.sort(probs[b])[::-1]
+        csum = np.cumsum(srt) - srt
+        n_keep = max(int((csum < p).sum()), 1)    # smallest nucleus
+        thresh = srt[n_keep - 1]
+        assert probs[b, int(t)] >= thresh - 1e-7, \
+            f"token outside the top-p={p} nucleus"
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_zero_temperature_is_argmax_and_key_independent(seed):
+    logits = _logits(seed)
+    t1, lp1 = pick_tokens(logits, _keys(seed), temperature=0.0,
+                          top_k=3, top_p=0.5)
+    t2, lp2 = pick_tokens(logits, _keys(seed + 1), temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(t1),
+                                  np.argmax(np.asarray(logits), -1))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(np.asarray(lp1), np.asarray(lp2))
+
+
+def test_per_row_params_mix_greedy_and_filtered():
+    """One call, heterogeneous rows: greedy rows are exact argmax while
+    sampled rows respect their own top_k — the scheduler's hot path."""
+    logits = _logits(7, B=4)
+    temp = np.asarray([0.0, 1.0, 0.0, 2.0], np.float32)
+    topk = np.asarray([0, 2, 0, 5], np.int32)
+    tok, _ = pick_tokens(logits, _keys(11, B=4), temperature=temp,
+                         top_k=topk)
+    tok = np.asarray(tok)
+    order = np.argsort(np.asarray(logits), axis=-1)
+    assert tok[0] == order[0, -1] and tok[2] == order[2, -1]
+    assert int(tok[1]) in order[1, -2:]
+    assert int(tok[3]) in order[3, -5:]
+
+
+def test_unfiltered_sampling_matches_seed_token_picker():
+    """top_k=0/top_p=1 must reproduce the seed picker draw-for-draw.
+
+    The reference below is the seed PR-1 ``token_picker`` body verbatim
+    (not the shim, which now delegates to pick_tokens)."""
+    logits = _logits(5)
+    key = jax.random.PRNGKey(9)
+    ref_lp_full = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ref_tok = jax.random.categorical(key, logits / 0.8, axis=-1)
+    ref_lp = jnp.take_along_axis(ref_lp_full, ref_tok[:, None], 1)[:, 0]
+    new_tok, new_lp = pick_tokens(logits, key, temperature=0.8)
+    shim_tok, _ = token_picker(0.8)(logits, key)
+    np.testing.assert_array_equal(np.asarray(ref_tok), np.asarray(new_tok))
+    np.testing.assert_array_equal(np.asarray(ref_tok), np.asarray(shim_tok))
+    np.testing.assert_allclose(np.asarray(ref_lp), np.asarray(new_lp),
+                               atol=1e-6)
+
+
+def test_request_keys_depend_on_seed_and_step_only():
+    k1 = np.asarray(request_keys(np.asarray([1, 1]), np.asarray([4, 5])))
+    k2 = np.asarray(request_keys(np.asarray([1, 2]), np.asarray([4, 4])))
+    assert not (k1[0] == k1[1]).all()          # step matters
+    assert not (k1[0] == k2[1]).all()          # seed matters
+    k3 = np.asarray(request_keys(np.asarray([1]), np.asarray([4])))
+    np.testing.assert_array_equal(k1[0], k3[0])   # position in batch doesn't
+
+
+def test_logprob_is_unscaled_head_distribution():
+    logits = _logits(3)
+    tok, lp = pick_tokens(logits, jax.random.PRNGKey(0), temperature=1.3,
+                          top_k=4)
+    full = np.asarray(jax.nn.log_softmax(np.asarray(logits), axis=-1))
+    got = full[np.arange(len(np.asarray(tok))), np.asarray(tok)]
+    np.testing.assert_allclose(np.asarray(lp), got, atol=1e-6)

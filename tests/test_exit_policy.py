@@ -1,0 +1,266 @@
+"""Golden-parity suite for the first-class exit-policy API.
+
+Reference controllers below are *verbatim reimplementations of the seed's
+ControllerFn closures* (PR-1 core/controller.py), so these tests pin the
+new registry/data path to the seed's byte-exact behaviour — solo in
+``generate`` and mid-flight inside the scheduler's one compiled step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PolicySpec, stack_policies
+from repro.core import exit_policy, policy_net
+from repro.core.early_exit import generate
+from repro.models import transformer as T
+from repro.models.transformer import lm_logits
+from repro.serving import Engine, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# seed-PR1 reference controllers (closure style, copied semantics)
+# ---------------------------------------------------------------------------
+def _seed_head_stats(params, cfg, h):
+    logits = lm_logits(params, cfg, h[:, None, :])[:, 0, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    return p.max(axis=-1), -(p * logp).sum(axis=-1) / jnp.log(cfg.vocab_size)
+
+
+def seed_controller(kind, *, params=None, cfg=None, agent_params=None,
+                    threshold=0.9, exit_idx=0, temperature=1.0):
+    if kind == "none":
+        return lambda h, i: None
+    if kind == "fixed":
+        return lambda h, i: jnp.full((h.shape[0],),
+                                     1.0 if i >= exit_idx else 0.0)
+    if kind == "confidence":
+        def ctrl(h, i):
+            p1, _ = _seed_head_stats(params, cfg, h)
+            return (p1 > threshold).astype(jnp.float32)
+        return ctrl
+    if kind == "entropy":
+        def ctrl(h, i):
+            _, ent = _seed_head_stats(params, cfg, h)
+            return (ent < threshold).astype(jnp.float32)
+        return ctrl
+    if kind == "policy":
+        def ctrl(h, i):
+            p_exit = policy_net.exit_probability(agent_params, h,
+                                                 temperature)
+            return (p_exit > threshold).astype(jnp.float32)
+        return ctrl
+    raise ValueError(kind)
+
+
+@pytest.fixture(scope="module")
+def agent(mini_cfg):
+    return policy_net.init_policy(jax.random.PRNGKey(3), mini_cfg.d_model)
+
+
+def _toks(cfg, shape, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), shape, 0,
+                              cfg.vocab_size)
+
+
+# a threshold per kind that actually produces mixed exit depths on the
+# untrained mini model (pure extremes would not exercise the selection)
+CASES = [
+    ("none", {}, {}),
+    ("fixed", dict(exit_idx=0), {"exit_idx": 0.0}),
+    ("confidence", dict(threshold=0.02), {"threshold": 0.02}),
+    ("entropy", dict(threshold=0.98), {"threshold": 0.98}),
+    ("policy", dict(threshold=0.45), {"threshold": 0.45}),
+]
+
+
+# ---------------------------------------------------------------------------
+# registry sanity
+# ---------------------------------------------------------------------------
+def test_registry_covers_seed_kinds_with_unique_ids():
+    assert set(exit_policy.names()) >= {"none", "fixed", "confidence",
+                                        "entropy", "policy"}
+    ids = [exit_policy.get(n).id for n in exit_policy.names()]
+    assert len(set(ids)) == len(ids)
+    assert exit_policy.get("none").id == 0
+    with pytest.raises(ValueError, match="unknown exit policy"):
+        exit_policy.get("nope")
+
+
+def test_spec_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown exit policy"):
+        PolicySpec("nope")
+    with pytest.raises(ValueError, match="no params"):
+        PolicySpec("fixed", {"threshold": 0.5})
+    assert PolicySpec("confidence").resolved() == {"threshold": 0.9}
+    assert PolicySpec("confidence", {"threshold": 0.5}).resolved() == \
+        {"threshold": 0.5}
+
+
+def test_missing_context_raises_clear_typeerror(mini_cfg, mini_params):
+    ctx = exit_policy.PolicyContext()
+    with pytest.raises(TypeError, match="model parameter"):
+        exit_policy.as_exit_fn(PolicySpec("confidence"), ctx)
+    with pytest.raises(TypeError, match="agent"):
+        exit_policy.as_exit_fn(PolicySpec("policy"), ctx)
+    # the deprecated shim validates the same way
+    from repro.core.controller import make_controller
+    with pytest.raises(TypeError, match="ModelConfig"):
+        make_controller("entropy", params=mini_params)
+    with pytest.raises(TypeError, match="agent"):
+        make_controller("policy")
+    with pytest.raises(ValueError, match="unknown exit policy"):
+        make_controller("wat")
+
+
+# ---------------------------------------------------------------------------
+# golden parity: solo generate
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind,seed_kw,spec_params",
+                         CASES, ids=[c[0] for c in CASES])
+def test_generate_matches_seed_controller(kind, seed_kw, spec_params,
+                                          mini_cfg, mini_params, agent):
+    toks = _toks(mini_cfg, (3, 7), seed=1)
+    ref_ctrl = seed_controller(kind, params=mini_params, cfg=mini_cfg,
+                               agent_params=agent, **seed_kw)
+    ref = generate(mini_params, mini_cfg, toks, 5, ref_ctrl)
+    new = generate(mini_params, mini_cfg, toks, 5,
+                   policy=PolicySpec(kind, spec_params),
+                   agent_params=agent)
+    np.testing.assert_array_equal(np.asarray(ref["tokens"]),
+                                  np.asarray(new["tokens"]))
+    np.testing.assert_array_equal(np.asarray(ref["exit_layers"]),
+                                  np.asarray(new["exit_layers"]))
+
+
+def test_stacked_rows_match_solo_runs(mini_cfg, mini_params, agent):
+    """Heterogeneous per-row policies in ONE call == each policy solo."""
+    toks = _toks(mini_cfg, (len(CASES), 7), seed=2)
+    batch = stack_policies([PolicySpec(k, p) for k, _, p in CASES])
+    out = generate(mini_params, mini_cfg, toks, 5, policy=batch,
+                   agent_params=agent)
+    for row, (kind, _, spec_params) in enumerate(CASES):
+        solo = generate(mini_params, mini_cfg, toks[row:row + 1], 5,
+                        policy=PolicySpec(kind, spec_params),
+                        agent_params=agent)
+        np.testing.assert_array_equal(
+            np.asarray(out["tokens"])[row], np.asarray(solo["tokens"])[0],
+            err_msg=f"tokens diverged for stacked row {kind}")
+        np.testing.assert_array_equal(
+            np.asarray(out["exit_layers"])[row],
+            np.asarray(solo["exit_layers"])[0],
+            err_msg=f"exit layers diverged for stacked row {kind}")
+
+
+# ---------------------------------------------------------------------------
+# golden parity: scheduler (mid-flight) vs seed-controller engine
+# ---------------------------------------------------------------------------
+def test_scheduler_matches_seed_controllers_mid_flight(mini_cfg, mini_params,
+                                                       agent):
+    """Every kind, joining a running batch, is byte-identical to the seed
+    ControllerFn path through the one-shot Engine."""
+    sched = Scheduler(mini_params, mini_cfg, agent_params=agent,
+                      allowed_kinds=[c[0] for c in CASES],
+                      max_slots=3, max_len=64, max_new=6).start()
+    eng = Engine(mini_params, mini_cfg, max_new=6, max_context=64)
+    rng = np.random.default_rng(3)
+    prompt_a = rng.integers(4, mini_cfg.vocab_size, 20).tolist()
+    try:
+        for kind, seed_kw, spec_params in CASES:
+            prompt = rng.integers(4, mini_cfg.vocab_size, 16).tolist()
+            ref = eng.serve([prompt], controller=seed_controller(
+                kind, params=mini_params, cfg=mini_cfg, agent_params=agent,
+                **seed_kw))
+            # keep another request mid-decode while this kind joins
+            ha = sched.submit(prompt_a, max_new=6)
+            it = ha.stream(timeout=60.0)
+            next(it), next(it)
+            hb = sched.submit(prompt, max_new=6,
+                              policy=PolicySpec(kind, spec_params))
+            ha.result(60.0)
+            hb.result(60.0)
+            assert hb.tokens == ref.tokens[0], kind
+            assert hb.exit_layers == ref.exit_layers[0], kind
+        assert sched.step_compiles == 1, "policy mix caused a recompile"
+    finally:
+        sched.stop()
+
+
+# ---------------------------------------------------------------------------
+# Engine.serve_requests contracts
+# ---------------------------------------------------------------------------
+def test_serve_requests_honors_engine_default_policy(mini_cfg, mini_params):
+    """policy=None falls back to the engine's configured default, exactly
+    like serve(); a legacy callable default can't be stacked and errors."""
+    from repro.api import GenerationRequest
+    rng = np.random.default_rng(7)
+    p = rng.integers(4, mini_cfg.vocab_size, 10).tolist()
+    eng = Engine(mini_params, mini_cfg, PolicySpec("fixed", {"exit_idx": 0}),
+                 max_context=32)
+    res = eng.serve_requests([GenerationRequest(prompt=p,
+                                                max_new_tokens=4)])[0]
+    assert all(e < mini_cfg.num_layers for e in res.exit_layers[1:])
+    eng2 = Engine(mini_params, mini_cfg,
+                  seed_controller("fixed", exit_idx=0), max_context=32)
+    with pytest.raises(ValueError, match="stacked per-row"):
+        eng2.serve_requests([GenerationRequest(prompt=p, max_new_tokens=4)])
+    # explicit per-request policies still work with a callable default
+    ok = eng2.serve_requests([GenerationRequest(prompt=p, max_new_tokens=4,
+                                                policy="none")])[0]
+    assert all(e == mini_cfg.num_layers for e in ok.exit_layers)
+
+
+def test_serve_requests_sampled_rows_independent_of_batch(mini_cfg,
+                                                          mini_params):
+    """A sampled request's draws are keyed by (seed, own position), never
+    by neighbours or batch size. Note the engine left-pads to the batch
+    max, so a LONGER co-batched prompt still shifts the row's logits
+    (padding is visible to the model) — the invariance contract covers the
+    randomness, and token-level equality holds when the padded context is
+    unchanged, as here."""
+    from repro.api import GenerationRequest, SamplingParams
+    rng = np.random.default_rng(5)
+    p1 = rng.integers(4, mini_cfg.vocab_size, 12).tolist()
+    p2 = rng.integers(4, mini_cfg.vocab_size, 12).tolist()
+    p3 = rng.integers(4, mini_cfg.vocab_size, 9).tolist()   # shorter row
+    eng = Engine(mini_params, mini_cfg, max_new=6, max_context=32)
+    gr = lambda: GenerationRequest(  # noqa: E731
+        prompt=p1, max_new_tokens=6,
+        sampling=SamplingParams(temperature=0.9, top_k=10, seed=13))
+    solo = eng.serve_requests([gr()])[0]
+    trio = eng.serve_requests([GenerationRequest(prompt=p2,
+                                                 max_new_tokens=6),
+                               gr(),
+                               GenerationRequest(prompt=p3,
+                                                 max_new_tokens=6)])
+    assert trio[1].tokens == solo.tokens
+    assert trio[1].exit_layers == solo.exit_layers
+
+
+def test_serve_requests_stop_truncates_tokens_and_energy(mini_cfg,
+                                                         mini_params,
+                                                         mini_dataset):
+    """Stop hits end the token/exit/energy accounting at the completing
+    token (scheduler-retirement semantics), not just the text."""
+    from repro.api import GenerationRequest
+    tok = mini_dataset.tokenizer
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(4, mini_cfg.vocab_size, 12).tolist()
+    eng = Engine(mini_params, mini_cfg, max_new=8, max_context=32,
+                 tokenizer=tok)
+    free = eng.serve_requests([GenerationRequest(prompt=prompt,
+                                                 max_new_tokens=8)])[0]
+    import re
+    runs = [m.group() for m in re.finditer(r"[^�]{2,}", free.text or "")]
+    assert runs, "no clean text to derive a stop sequence from"
+    best = max(runs, key=len)
+    mid = best[len(best) // 2 - 1:len(best) // 2 + 1]
+    res = eng.serve_requests([GenerationRequest(
+        prompt=prompt, max_new_tokens=8, stop_sequences=(mid,))])[0]
+    assert res.finish_reason == "stop"
+    assert mid not in (res.text or "")
+    assert len(res.tokens) <= len(free.tokens)
+    assert res.tokens == free.tokens[:len(res.tokens)]
+    assert res.metrics.n_tokens == max(len(res.tokens), 1)
+    assert res.energy_j <= free.energy_j

@@ -1,11 +1,13 @@
 """Continuous-batching scheduler: slot-pool invariants, mid-flight join
-determinism, EOS retirement, per-slot controllers, energy accounting parity
-with the one-shot Engine."""
+determinism, EOS retirement, per-slot policies + sampling, energy accounting
+parity with the one-shot Engine, zero recompiles across mixed traffic."""
+import re
 import time
 
 import numpy as np
 import pytest
 
+from repro.api import GenerationRequest, PolicySpec, SamplingParams
 from repro.core.controller import make_controller
 from repro.serving import Engine, Scheduler, SchedulerQueueFull
 from repro.serving.scheduler import KVSlotPool
@@ -231,7 +233,130 @@ def test_stats_shape(sched):
     for key in ("queue_depth", "active_slots", "free_slots", "max_slots",
                 "completed_requests", "fleet_tokens", "fleet_j_per_token",
                 "throughput_tok_s", "latency_p50_s", "latency_p95_s",
-                "exit_layer_ema", "controllers"):
+                "exit_layer_ema", "controllers", "step_compiles"):
         assert key in st
     assert st["completed_requests"] >= 1
     assert st["fleet_j_per_token"] > 0
+
+
+# ---------------------------------------------------------------------------
+# policies + sampling as runtime data (the PR-2 API redesign)
+# ---------------------------------------------------------------------------
+def test_mixed_traffic_never_recompiles(sched, mini_cfg):
+    """Heterogeneous policies, exit indices, temperatures, top-k/top-p and
+    seeds across requests must share ONE compiled decode step (asserted via
+    the jit-cache-miss counter)."""
+    p = _prompts(mini_cfg.vocab_size, [10, 10, 10, 10, 10, 10], seed=8)
+    handles = [
+        sched.submit(p[0]),
+        sched.submit(p[1], controller="fixed"),
+        sched.submit(p[2], policy=PolicySpec("fixed", {"exit_idx": 1})),
+        sched.submit(GenerationRequest(
+            prompt=p[3], max_new_tokens=5,
+            sampling=SamplingParams(temperature=0.8, top_k=7, seed=3))),
+        sched.submit(GenerationRequest(
+            prompt=p[4], max_new_tokens=5, policy="fixed",
+            sampling=SamplingParams(temperature=1.4, top_p=0.6, seed=4))),
+        sched.submit(p[5], controller="none"),
+    ]
+    for h in handles:
+        h.result(60.0)
+    assert sched.step_compiles == 1, \
+        f"mixed traffic recompiled the step {sched.step_compiles}x"
+
+
+def test_generation_request_roundtrip(sched, mini_cfg):
+    p = _prompts(mini_cfg.vocab_size, [12], seed=9)[0]
+    h = sched.submit(GenerationRequest(prompt=p, max_new_tokens=4,
+                                       policy=PolicySpec("fixed",
+                                                         {"exit_idx": 0})))
+    res = h.result(60.0).to_result()
+    assert len(res.tokens) <= 4 and res.finish_reason in ("length", "eos")
+    assert res.metrics is not None and res.energy_j > 0
+    assert res.exit_layers[0] == mini_cfg.num_layers
+    with pytest.raises(ValueError, match="inside the GenerationRequest"):
+        sched.submit(GenerationRequest(prompt=p), max_new=3)
+
+
+def test_sampled_join_matches_solo_run(sched, mini_cfg):
+    """A *sampled* request joining mid-flight reproduces its solo tokens:
+    the draw stream is keyed by (request seed, position), not by slot or
+    batch composition."""
+    a, b = _prompts(mini_cfg.vocab_size, [18, 14], seed=10)
+    gr = lambda: GenerationRequest(  # noqa: E731
+        prompt=b, max_new_tokens=6,
+        sampling=SamplingParams(temperature=0.9, top_k=12, seed=21))
+    solo = sched.submit(gr()).result(60.0)
+    ha = sched.submit(a, max_new=12)
+    it = ha.stream(timeout=60.0)
+    next(it), next(it)
+    hb = sched.submit(gr())
+    ha.result(60.0)
+    hb.result(60.0)
+    assert hb.tokens == solo.tokens
+    assert hb.exit_layers == solo.exit_layers
+
+
+def test_policy_scheduler_without_agent_fails_eagerly(mini_cfg, mini_params):
+    with pytest.raises(TypeError, match="agent"):
+        Scheduler(mini_params, mini_cfg, controller_kind="policy")
+
+
+def test_stop_sequences_retire_with_stop_reason(mini_cfg, mini_params,
+                                                mini_dataset):
+    tok = mini_dataset.tokenizer
+    s = Scheduler(mini_params, mini_cfg, tokenizer=tok, max_slots=2,
+                  max_len=64, max_new=8).start()
+    try:
+        prompt = _prompts(mini_cfg.vocab_size, [16], seed=11)[0]
+        free = s.submit(prompt, max_new=8).result(60.0)
+        full = tok.decode(free.tokens)
+        # fragment from a contiguous clean run of the raw text (slicing a
+        # de-�-ed copy could straddle a replacement char and never match)
+        runs = [m.group() for m in re.finditer(r"[^�]{2,}", full)]
+        assert runs, "no clean text to derive a stop sequence from"
+        best = max(runs, key=len)
+        mid = best[len(best) // 2 - 1:len(best) // 2 + 1]
+        h = s.submit(GenerationRequest(prompt=prompt, max_new_tokens=8,
+                                       stop_sequences=(mid,)))
+        r = h.result(60.0)
+        assert r.finish_reason == "stop"
+        assert mid not in (r.text or "")
+        assert full.startswith(r.text or "")
+        assert len(r.tokens) <= len(free.tokens)
+        assert s.pool.n_free == s.pool.max_slots  # slot actually retired
+    finally:
+        s.stop()
+
+
+def test_stop_sequences_without_tokenizer_rejected(sched, mini_cfg):
+    with pytest.raises(ValueError, match="tokenizer"):
+        sched.submit(GenerationRequest(
+            prompt=_prompts(mini_cfg.vocab_size, [8])[0],
+            stop_sequences=("x",)))
+
+
+def test_raw_submit_validates_stop_sequences(sched, mini_cfg):
+    p = _prompts(mini_cfg.vocab_size, [8])[0]
+    with pytest.raises(ValueError, match="empty string"):
+        sched.submit(p, stop_sequences=("",))
+    with pytest.raises(ValueError, match="single string"):
+        sched.submit(p, stop_sequences="ab")
+
+
+def test_legacy_threshold_override_keeps_default_spec_params(mini_cfg,
+                                                             mini_params):
+    """submit(threshold=...) on a scheduler whose default policy carries
+    extra params (fixed exit_idx here) must override ONLY the threshold
+    knob — never silently reset the others."""
+    s = Scheduler(mini_params, mini_cfg,
+                  default_policy=PolicySpec("fixed", {"exit_idx": 1.0}))
+    req = s.submit(_prompts(mini_cfg.vocab_size, [8])[0], threshold=0.5)
+    assert req.spec.resolved()["exit_idx"] == 1.0   # survived the override
+    s2 = Scheduler(mini_params, mini_cfg, controller_kind="confidence",
+                   threshold=0.7, allowed_kinds=("none", "confidence"))
+    assert s2.submit(_prompts(mini_cfg.vocab_size, [8])[0],
+                     controller="confidence").spec.resolved() == \
+        {"threshold": 0.7}                           # ctor default honored
+    assert s2.submit(_prompts(mini_cfg.vocab_size, [8])[0],
+                     threshold=0.55).spec.resolved() == {"threshold": 0.55}

@@ -1,0 +1,154 @@
+"""HTTP endpoint contract: request parsing into the shared dataclasses,
+per-request policies, stop sequences (finish_reason "stop"), errors."""
+import json
+import re
+import threading
+import urllib.error
+import urllib.request
+from http.server import ThreadingHTTPServer
+
+import pytest
+
+from repro.serving import Scheduler
+from repro.serving.server import Handler, _State
+
+
+@pytest.fixture(scope="module")
+def server(mini_cfg, mini_params, mini_dataset):
+    _State.cfg = mini_cfg
+    _State.params = mini_params
+    _State.agent = None
+    _State.tokenizer = mini_dataset.tokenizer
+    _State.scheduler = Scheduler(
+        mini_params, mini_cfg, controller_kind="none",
+        allowed_kinds=("none", "fixed", "confidence"),
+        tokenizer=mini_dataset.tokenizer,
+        max_slots=2, max_len=96, max_new=8,
+        prefill_buckets=(16, 32, 64)).start()
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    yield f"http://127.0.0.1:{srv.server_address[1]}"
+    srv.shutdown()
+    _State.scheduler.stop()
+    _State.scheduler = None
+
+
+def _post(url, payload, timeout=120.0):
+    req = urllib.request.Request(
+        f"{url}/generate", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as r:
+        return json.loads(r.read())
+
+
+def _gen(url, text, **params):
+    return _post(url, {"inputs": text, "parameters": params})
+
+
+PROMPT = "public static int add(int a, int b) { return "
+
+
+def test_generate_basic(server):
+    out = _gen(server, PROMPT, max_new_tokens=6)
+    assert out["finish_reason"] in ("length", "eos")
+    assert isinstance(out["generated_text"], str)
+    assert 1 <= len(out["exit_layers"]) <= 6
+    assert out["energy_j"] > 0
+
+
+def test_policy_object_selects_per_request(server, mini_cfg):
+    out = _gen(server, PROMPT, max_new_tokens=5,
+               policy={"name": "fixed", "exit_idx": 0})
+    assert out["exit_layers"][0] == mini_cfg.num_layers
+    assert all(e < mini_cfg.num_layers for e in out["exit_layers"][1:])
+    # legacy flat controller/threshold parameters still parse
+    out = _gen(server, PROMPT, max_new_tokens=4, controller="confidence",
+               threshold=1.01)
+    assert all(e == mini_cfg.num_layers for e in out["exit_layers"])
+
+
+def test_stop_sequence_truncates_and_reports_stop(server):
+    free = _gen(server, PROMPT, max_new_tokens=8)
+    full = free["generated_text"]
+    # a fragment from inside one contiguous clean run of the RAW text —
+    # slicing the de-�-ed string could span a replacement-char boundary
+    # and never occur in the actual output
+    runs = [m.group() for m in re.finditer(r"[^�]{2,}", full)]
+    assert runs, "mini model produced no clean text to derive a stop from"
+    best = max(runs, key=len)
+    mid = best[len(best) // 2 - 1:len(best) // 2 + 1]
+    out = _gen(server, PROMPT, max_new_tokens=8, stop=[mid])
+    assert out["finish_reason"] == "stop"
+    assert mid not in out["generated_text"]
+    assert full.startswith(out["generated_text"])
+    assert len(out["exit_layers"]) <= len(free["exit_layers"])
+
+
+def test_legacy_threshold_ignored_by_thresholdless_default(server,
+                                                           mini_cfg):
+    """Seed-era clients send a flat threshold even when the default policy
+    ('none' here) has no such knob — accepted and ignored, not a 400."""
+    out = _gen(server, PROMPT, max_new_tokens=3, threshold=0.9)
+    assert all(e == mini_cfg.num_layers for e in out["exit_layers"])
+
+
+def test_out_of_range_seed_is_400_not_outage(server):
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _gen(server, PROMPT, seed=2 ** 31)
+    assert e.value.code == 400
+    # the scheduler must still be alive afterwards
+    out = _gen(server, PROMPT, max_new_tokens=2)
+    assert out["finish_reason"] in ("length", "eos")
+
+
+def test_unknown_policy_is_400(server):
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _gen(server, PROMPT, controller="wat")
+    assert e.value.code == 400
+    body = json.loads(e.value.read())
+    assert "unknown exit policy" in body["error"]
+
+
+def test_policy_outside_compiled_set_is_400(server):
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _gen(server, PROMPT, policy={"name": "entropy", "threshold": 0.5})
+    assert e.value.code == 400
+    assert "compiled set" in json.loads(e.value.read())["error"]
+
+
+def test_sampling_params_parse_and_reproduce(server):
+    kw = dict(max_new_tokens=6, temperature=0.9, top_k=8, seed=11)
+    a = _gen(server, PROMPT, **kw)
+    b = _gen(server, PROMPT, **kw)
+    assert a["generated_text"] == b["generated_text"]
+    c = _gen(server, PROMPT, **{**kw, "seed": 12})
+    # different seed *may* coincide on tiny vocabs, but text is still valid
+    assert isinstance(c["generated_text"], str)
+
+
+def test_queue_stats_report_single_compile(server):
+    with urllib.request.urlopen(f"{server}/queue", timeout=30) as r:
+        st = json.loads(r.read())
+    assert st["completed_requests"] >= 1
+    assert st["step_compiles"] == 1
+    assert set(st["controllers"]) == {"none", "fixed", "confidence"}
+
+
+def test_stream_ndjson(server):
+    req = urllib.request.Request(
+        f"{server}/generate",
+        data=json.dumps({"inputs": PROMPT,
+                         "parameters": {"max_new_tokens": 4,
+                                        "stream": True}}).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=120) as r:
+        lines = [json.loads(ln) for ln in r.read().splitlines() if ln]
+    assert len(lines) >= 2                     # token lines + final
+    assert all("token" in ln for ln in lines[:-1])
+    final = lines[-1]
+    assert final["finish_reason"] in ("length", "eos")
+    assert len(lines) - 1 == len(final["exit_layers"])
+    joined = "".join(ln["text"] for ln in lines[:-1])
+    # the stream holds back trailing in-progress byte-fallback sequences
+    assert final["generated_text"].startswith(joined)
