@@ -19,11 +19,22 @@ the batch max). Reported per rate and per system:
   p50/p95      request latency (arrival -> all tokens done), seconds
   J/token      modeled energy per useful token (core.energy, TPU-v5e model)
 
+A second phase compares the **paged** KV pool against the contiguous one at
+an **equal KV-memory budget** and the top arrival rate: the contiguous pool
+must size every slot for the worst case (``max_len`` tokens), the paged
+pool spends the same bytes on blocks that requests bind per
+``ceil(ctx/block_size)`` — so it holds strictly more concurrent residents.
+Half the workload's prompts start from a small set of shared system
+prefixes, so the prefix cache's hit rate shows up too.
+
 Both systems are shape-warmed before the timed run so XLA compile time is
 excluded — the comparison isolates steady-state scheduling behavior.
+Results also land in ``BENCH_serving.json`` at the repo root (schema-stable
+across PRs: tokens/s, peak cache bytes, prefix-hit rate per system).
 
   PYTHONPATH=src python -m benchmarks.serving_load            # mini, CPU
   PYTHONPATH=src python -m benchmarks.serving_load --rates 4 10 25 --n 24
+  PYTHONPATH=src python -m benchmarks.serving_load --smoke    # CI-speed
 """
 from __future__ import annotations
 
@@ -45,11 +56,14 @@ from repro.serving.metrics import latency_percentiles
 
 RES_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "results")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 PROMPT_LENS = (24, 40, 56)       # few distinct buckets -> few prefill shapes
 MAX_NEWS = (4, 12)               # mixed decode lengths: the engine pays the
                                  # batch max for everyone, the scheduler
                                  # retires each slot at its own max_new
+PREFIX_LEN = 16                  # shared "system prompt" prefix pool
+N_PREFIXES = 2
 
 
 @dataclass
@@ -65,14 +79,23 @@ class Job:
 
 def make_workload(n: int, rate_hz: float, vocab: int,
                   seed: int = 0) -> list[Job]:
+    """Poisson arrivals; half the prompts start from one of ``N_PREFIXES``
+    shared prefixes (block-aligned system prompts — the prefix cache's
+    bread and butter), the other half are fully random."""
     rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(4, vocab, PREFIX_LEN).tolist()
+                for _ in range(N_PREFIXES)]
     t = 0.0
     jobs = []
-    for _ in range(n):
+    for i in range(n):
         t += float(rng.exponential(1.0 / rate_hz))
         plen = int(rng.choice(PROMPT_LENS))
-        jobs.append(Job(arrival_s=t,
-                        prompt=rng.integers(4, vocab, plen).tolist(),
+        if i % 2:
+            head = prefixes[int(rng.integers(N_PREFIXES))]
+            prompt = head + rng.integers(4, vocab, plen - len(head)).tolist()
+        else:
+            prompt = rng.integers(4, vocab, plen).tolist()
+        jobs.append(Job(arrival_s=t, prompt=prompt,
                         max_new=int(rng.choice(MAX_NEWS))))
     return jobs
 
@@ -157,9 +180,88 @@ def warmup(sched: Scheduler, engine: Engine, ctrl, batch: int) -> None:
             engine.serve([prompt] * batch, max_new=mn, controller=ctrl)
 
 
+def run_kv_compare(params, cfg, *, rate: float, n: int, slots: int,
+                   max_len: int, exit_idx: int, block_size: int = 8,
+                   seed: int = 0) -> dict:
+    """Contiguous vs paged scheduler at an EQUAL KV-memory budget.
+
+    The contiguous pool spends ``max_slots * max_len`` tokens of cache up
+    front; the paged pool gets the same byte budget as blocks plus 4x the
+    slots (slot rows are bookkeeping — blocks are the scarce resource) and
+    admits on block availability. Reports peak concurrent residents, peak
+    cache bytes actually bound, throughput and prefix-hit rate.
+    """
+    from repro.serving.kv_pool import PagedKVPool
+
+    base = dict(controller_kind="fixed", fixed_exit_idx=exit_idx,
+                allowed_kinds=("none", "fixed"), max_len=max_len,
+                queue_depth=max(64, n))
+    probe = PagedKVPool(cfg, 1, block_size, block_size=block_size,
+                        num_blocks=2)
+    bytes_per_block = probe.bytes_per_block
+    del probe
+
+    out: dict = {}
+    budget = None
+    for layout in ("contiguous", "paged"):
+        if layout == "contiguous":
+            sched = Scheduler(params, cfg, max_slots=slots, **base).start()
+            budget = sched.pool.kv_bytes_total
+            num_blocks = None
+        else:
+            num_blocks = max(budget // bytes_per_block, 2)
+            sched = Scheduler(params, cfg, max_slots=4 * slots,
+                              kv_layout="paged", block_size=block_size,
+                              num_blocks=num_blocks, **base).start()
+        # warm every prefill/step shape outside the timed run — including
+        # the paged writer's (n_write, n_skip) variants that only trigger
+        # on a prefix-cache hit (half the workload shares prefixes, so the
+        # first in-run hit per prompt length would otherwise compile
+        # mid-measurement) — then clear the counters so the reported stats
+        # cover only the timed run
+        rng = np.random.default_rng(123)
+        for plen in PROMPT_LENS:
+            head = rng.integers(4, cfg.vocab_size, PREFIX_LEN).tolist()
+            tail = lambda: rng.integers(                   # noqa: E731
+                4, cfg.vocab_size, plen - PREFIX_LEN).tolist()
+            sched.serve_batch([head + tail(), head + tail()],
+                              max_new=max(MAX_NEWS))
+        sched.reset_peak_stats()
+        jobs = make_workload(n, rate, cfg.vocab_size, seed=seed)
+        r = run_scheduler(sched, jobs)
+        st = sched.stats()
+        sched.stop()
+        r.update(
+            kv_layout=layout,
+            max_slots=st["max_slots"],
+            peak_active_slots=st["peak_active_slots"],
+            kv_bytes_budget=int(budget if layout == "contiguous"
+                                else num_blocks * bytes_per_block),
+            peak_kv_bytes=int(st.get("peak_kv_bytes",
+                                     st.get("kv_bytes_total", 0))),
+            prefix_hit_rate=st.get("prefix_hit_rate", 0.0),
+            blocked_admissions=st.get("blocked_admissions", 0),
+        )
+        out[layout] = r
+        print(f"[load] kv-compare {layout:10s} "
+              f"tput={r['throughput_tok_s']:7.1f} tok/s "
+              f"peak_residents={r['peak_active_slots']} "
+              f"peak_kv={r['peak_kv_bytes']} B "
+              f"prefix_hit={r['prefix_hit_rate']:.2f}", flush=True)
+    more = (out["paged"]["peak_active_slots"]
+            > out["contiguous"]["peak_active_slots"])
+    out["paged_admits_more_concurrent"] = bool(more)
+    print(f"[load] equal-budget paged admits "
+          f"{'STRICTLY MORE' if more else 'NO MORE'} concurrent requests "
+          f"({out['paged']['peak_active_slots']} vs "
+          f"{out['contiguous']['peak_active_slots']})")
+    return out
+
+
 def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
         d_model: int = 96, vocab: int = 512, slots: int = 4,
-        exit_idx: int = 0, seed: int = 0, save: bool = True) -> list[dict]:
+        exit_idx: int = 0, block_size: int = 8, seed: int = 0,
+        save: bool = True, smoke: bool = False) -> dict:
     cfg = paper_mini(num_layers=num_layers, d_model=d_model,
                      vocab_size=vocab)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -199,18 +301,38 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
     print(f"[load] @ {top}/s: continuous batching {speedup:.2f}x the "
           f"seed engine baseline "
           f"({'BEATS' if speedup > 1.0 else 'DOES NOT BEAT'} it)")
+    kv_compare = run_kv_compare(params, cfg, rate=top, n=n, slots=slots,
+                                max_len=max_len, exit_idx=exit_idx,
+                                block_size=block_size, seed=seed)
+
+    payload = {
+        "bench": "serving_load",
+        "schema_version": 1,
+        "smoke": smoke,
+        "config": {"num_layers": num_layers, "d_model": d_model,
+                   "vocab": vocab, "slots": slots, "n": n,
+                   "rates": list(rates), "block_size": block_size},
+        "results": results,
+        "speedup_at_top_rate": speedup,
+        "kv_compare": kv_compare,
+    }
     if save:
-        os.makedirs(RES_DIR, exist_ok=True)
-        out = os.path.join(RES_DIR, "serving_load.json")
-        with open(out, "w") as f:
-            json.dump({"config": {"num_layers": num_layers,
-                                  "d_model": d_model, "vocab": vocab,
-                                  "slots": slots, "n": n,
-                                  "rates": list(rates)},
-                       "results": results,
-                       "speedup_at_top_rate": speedup}, f, indent=2)
-        print(f"[load] wrote {out}")
-    return results
+        wrote = []
+        if not smoke:
+            # the canonical full-config artifact: never clobbered by the
+            # CI/verify smoke invocation
+            os.makedirs(RES_DIR, exist_ok=True)
+            out = os.path.join(RES_DIR, "serving_load.json")
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+            wrote.append(out)
+        # machine-readable perf trajectory across PRs (CI smoke reads it)
+        bench_out = os.path.join(REPO_ROOT, "BENCH_serving.json")
+        with open(bench_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        wrote.append(bench_out)
+        print(f"[load] wrote {' and '.join(wrote)}")
+    return payload
 
 
 def _summarize(jobs: list[Job], wall: float) -> dict:
@@ -240,12 +362,24 @@ def main():
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--exit-idx", type=int, default=0,
                     help="fixed-controller exit point index")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged-pool tokens per KV block")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed run: tiny model, one rate, few requests")
     args = ap.parse_args()
+    if args.smoke:
+        # the rate must exceed slots/service-time or neither pool ever
+        # saturates and the admission comparison is vacuous
+        run((60.0,), 32, num_layers=4, d_model=64, vocab=256, slots=3,
+            exit_idx=args.exit_idx, block_size=args.block_size,
+            seed=args.seed, save=not args.no_save, smoke=True)
+        return
     run(tuple(args.rates), args.n, num_layers=args.layers,
         d_model=args.d_model, vocab=args.vocab, slots=args.slots,
-        exit_idx=args.exit_idx, seed=args.seed, save=not args.no_save)
+        exit_idx=args.exit_idx, block_size=args.block_size, seed=args.seed,
+        save=not args.no_save)
 
 
 if __name__ == "__main__":

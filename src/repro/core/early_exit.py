@@ -121,13 +121,17 @@ def _sampling_args(sampling, temperature):
 # Decode step + generation loop
 # ---------------------------------------------------------------------------
 def make_decode_fn(cfg: ModelConfig, controller=None, *,
-                   temperature: float = 0.0, sampling=None):
+                   temperature: float = 0.0, sampling=None,
+                   block_tables=None, use_kernel: bool = False):
     """One-token early-exit decode closure, shared by ``generate`` and the
     serving engine (the scheduler builds its own step with per-slot policy
     and sampling arrays).
 
     ``controller``: anything :func:`repro.core.exit_policy.as_exit_fn`
     accepts — already bound to a context, or a legacy callable.
+    ``block_tables`` [B, nb] switches the step to paged caches (see
+    ``models.transformer.decode_step``); ``use_kernel`` then picks the
+    Pallas paged-attention kernel over the XLA gather reference.
 
     signature: fn(params, tokens [B], caches, pos [B], key) ->
                (next_tokens [B], new_caches, exit_layer [B], logprob [B])
@@ -136,7 +140,9 @@ def make_decode_fn(cfg: ModelConfig, controller=None, *,
 
     def fn(params, tokens, caches, pos, key):
         logits, new_caches, info = decode_step(params, cfg, tokens, caches,
-                                               pos, controller)
+                                               pos, controller,
+                                               block_tables=block_tables,
+                                               use_kernel=use_kernel)
         nxt, lp = pick_tokens(logits, key, temp, top_k, top_p)
         return (nxt.astype(jnp.int32), new_caches, info["exit_layer"], lp)
 
@@ -148,7 +154,7 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
              temperature: float = 0.0, key: Optional[Array] = None,
              prefix_embed: Optional[Array] = None, policy=None,
              sampling=None, seeds=None, seed_offsets=None, agent_params=None,
-             use_kernel: bool = False):
+             use_kernel: bool = False, kv_block_size: Optional[int] = None):
     """Greedy (or sampled) generation with dynamic early exit.
 
     prompt: [B, S0] token ids. Exit behaviour comes from ``policy`` (a
@@ -165,6 +171,13 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
     (Engine) pass the pad amount so the stream is keyed by the row's *own*
     positions, invariant to co-batched prompt lengths. Default: one shared
     key chain for the batch (seed semantics).
+
+    ``kv_block_size`` switches decode to paged KV storage: the prefill
+    ring caches are reshaped into block planes with an identity block
+    table (``models.transformer.ring_to_paged``) and every decode step
+    reads/writes through the table — the offline mirror of the
+    scheduler's ``kv_layout="paged"`` path. With ``use_kernel=True`` the
+    Pallas paged-attention kernel replaces the XLA gather reference.
 
     Returns dict with
       tokens      [B, steps]   generated ids
@@ -184,6 +197,8 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
     n_prefix = prefix_embed.shape[1] if prefix_embed is not None else 0
     total0 = S0 + n_prefix
     max_len = max(max_len or 0, total0 + steps)
+    if kv_block_size:
+        max_len += (-max_len) % kv_block_size      # round up to block grid
     if key is None:
         key = jax.random.PRNGKey(0)
 
@@ -191,9 +206,14 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
                            max_len=max_len)
     logits0 = lm_logits(params, cfg, h[:, -1:, :])[:, 0]
 
+    tables = None
+    if kv_block_size:
+        from repro.models.transformer import ring_to_paged
+        caches, tables = ring_to_paged(cfg, caches, kv_block_size)
     temp, top_k, top_p = _sampling_args(sampling, temperature)
     decode_fn = make_decode_fn(cfg, controller, temperature=temperature,
-                               sampling=sampling)
+                               sampling=sampling, block_tables=tables,
+                               use_kernel=use_kernel)
 
     if seeds is not None:
         seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (B,))

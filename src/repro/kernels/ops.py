@@ -14,6 +14,8 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attn import flash_decode as _flash_decode
 from repro.kernels.exit_head import exit_check as _exit_check
+from repro.kernels.paged_decode_attn import \
+    paged_flash_decode as _paged_flash_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 _MODE = os.environ.get("REPRO_KERNELS", "kernel")
@@ -34,6 +36,18 @@ def flash_decode(q, k, v, kv_pos, pos, *, window: int = 0,
         return _ref.flash_decode_ref(q, k, v, kv_pos, pos, window, softcap)
     return _flash_decode(q, k, v, kv_pos, pos, window=window,
                          softcap=softcap, interpret=_INTERPRET)
+
+
+def paged_flash_decode(q, k_pages, v_pages, tables, pos, k_scale=None,
+                       v_scale=None, *, softcap: float = 0.0):
+    """Single-token GQA decode through a block table (insert-then-attend;
+    int8 pages dequantize in-kernel when scales are given)."""
+    if _MODE == "ref":
+        return _ref.paged_decode_ref(q, k_pages, v_pages, tables, pos,
+                                     k_scale, v_scale, softcap)
+    return _paged_flash_decode(q, k_pages, v_pages, tables, pos,
+                               k_scale, v_scale, softcap=softcap,
+                               interpret=_INTERPRET)
 
 
 def ssd_scan(x, dt, A, B, C, chunk: int = 256):

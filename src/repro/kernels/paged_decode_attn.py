@@ -1,0 +1,164 @@
+"""Paged flash-decode GQA kernel: gather K/V through a block table.
+
+The paged KV pool (serving/kv_pool.py) stores each layer's cache as block
+planes ``[num_blocks, block_size, KH, hd]``; a slot's logical sequence is a
+chain of blocks named by its block-table row. Decode attention must gather
+that chain — doing it with ``plane[table]`` in XLA materializes a
+``[B, max_ctx, KH, hd]`` copy per layer per step. This kernel instead uses
+scalar-prefetched block-table indexing: the grid walks ``(batch, block)``
+and the K/V BlockSpec index maps read ``table[b, j]`` to DMA exactly one
+physical block per step — the gather never exists in HBM.
+
+Convention is insert-then-attend (the current token's K/V is already in its
+block before the call; logical positions ``<= pos`` attend), matching
+kernels/decode_attn.py. Running (max, denom, acc) flash statistics live in
+VMEM scratch across the sequential block dimension.
+
+``int8`` caches are dequantized **in-kernel**: the int8 planes plus their
+``[num_blocks, block_size, KH]`` float32 scales stream to VMEM and the
+multiply happens there — the f32 cache-sized intermediate the pure-XLA
+reference path materializes (models/transformer.py `_dequant_kv`) never
+exists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_body(q_ref, k, v, pos_ref, o_ref, m_s, l_s, acc_s, *,
+                block_size: int, softcap: float, scale: float):
+    """One (batch row, block) flash step; ``k``/``v`` are already f32."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # [KH, G, d]
+    pos = pos_ref[b]                                # scalar
+
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)         # [KH, G, bs]
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    # logical position of entry t in this block is j*bs + t; valid entries
+    # are the ones at or before the current position (insert-then-attend)
+    lpos = (j * block_size
+            + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2))
+    s = jnp.where(lpos <= pos, s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, s.max(axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[..., None])               # [KH, G, bs]
+    l_s[...] = l_s[...] * alpha + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)         # [KH, G, d]
+    acc_s[...] = acc_s[...] * alpha[..., None] + pv
+    m_s[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0] = (acc_s[...] / denom[..., None]).astype(o_ref.dtype)
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_s, l_s, acc_s, **kw):
+    del tbl_ref  # consumed by the BlockSpec index maps
+    _flash_body(q_ref, k_ref[0].astype(jnp.float32),
+                v_ref[0].astype(jnp.float32), pos_ref, o_ref,
+                m_s, l_s, acc_s, **kw)
+
+
+def _kernel_int8(tbl_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                 o_ref, m_s, l_s, acc_s, **kw):
+    """int8 variant: dequantize the gathered block in VMEM, then attend."""
+    del tbl_ref
+    k = (k_ref[0].astype(jnp.float32)
+         * ks_ref[0].astype(jnp.float32)[..., None])
+    v = (v_ref[0].astype(jnp.float32)
+         * vs_ref[0].astype(jnp.float32)[..., None])
+    _flash_body(q_ref, k, v, pos_ref, o_ref, m_s, l_s, acc_s, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       tables: jax.Array, pos: jax.Array,
+                       k_scale: jax.Array | None = None,
+                       v_scale: jax.Array | None = None, *,
+                       softcap: float = 0.0, interpret: bool = True):
+    """Single-token GQA decode against a paged cache.
+
+    q: [B, KH, G, d]; k_pages/v_pages: [num_blocks, block_size, KH, d]
+    (float or int8 — int8 requires ``k_scale``/``v_scale``
+    [num_blocks, block_size, KH] f32); tables: [B, nb] int32 block ids
+    (rows padded with any in-range id — padded blocks are masked by
+    position); pos: [B] current absolute positions (``>= 0``; the current
+    token's K/V must already be inserted). See ref.paged_decode_ref.
+    """
+    B, KH, G, d = q.shape
+    bs = k_pages.shape[1]
+    nb = tables.shape[1]
+    int8 = k_scale is not None
+
+    def page_map(b, j, tbl, p):
+        del p
+        return (jnp.clip(tbl[b, j], 0, k_pages.shape[0] - 1), 0, 0, 0)
+
+    def scale_map(b, j, tbl, p):
+        del p
+        return (jnp.clip(tbl[b, j], 0, k_pages.shape[0] - 1), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, KH, G, d), lambda b, j, tbl, p: (b, 0, 0, 0)),
+        pl.BlockSpec((1, bs, KH, d), page_map),
+        pl.BlockSpec((1, bs, KH, d), page_map),
+    ]
+    if int8:
+        in_specs += [pl.BlockSpec((1, bs, KH), scale_map),
+                     pl.BlockSpec((1, bs, KH), scale_map)]
+    kernel = functools.partial(_kernel_int8 if int8 else _kernel,
+                               block_size=bs, softcap=softcap,
+                               scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, KH, G, d),
+                               lambda b, j, tbl, p: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KH, G), jnp.float32),
+            pltpu.VMEM((KH, G), jnp.float32),
+            pltpu.VMEM((KH, G, d), jnp.float32),
+        ],
+    )
+    args = (tables.astype(jnp.int32), pos.astype(jnp.int32), q,
+            k_pages, v_pages)
+    if int8:
+        args += (k_scale, v_scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)

@@ -3,6 +3,7 @@
 Each function is the semantic ground truth for the matching kernel:
   exit_check_ref   <-> exit_head.py
   flash_decode_ref <-> decode_attn.py
+  paged_decode_ref <-> paged_decode_attn.py
   ssd_scan_ref     <-> ssd_scan.py
 """
 from __future__ import annotations
@@ -53,6 +54,38 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jnp.exp(s - m)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return (out / p.sum(axis=-1)[..., None]).astype(q.dtype)
+
+
+def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, pos: jax.Array,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None,
+                     softcap: float = 0.0):
+    """Single-token GQA decode against a paged (block-table) cache.
+
+    q: [B, KH, G, d]; k_pages/v_pages: [num_blocks, block_size, KH, d]
+    (int8 planes take ``k_scale``/``v_scale`` [num_blocks, block_size, KH]);
+    tables: [B, nb] block ids; pos: [B] current positions.
+    Insert-then-attend: logical positions ``<= pos`` are attended.
+    Gathers the chain into ``[B, nb*block_size, ...]`` logical order and
+    defers to :func:`flash_decode_ref`.
+    """
+    B, nb = tables.shape
+    bs = k_pages.shape[1]
+    tbl = jnp.clip(tables, 0, k_pages.shape[0] - 1)
+
+    def gather(pages):
+        g = pages[tbl]                              # [B, nb, bs, ...]
+        return g.reshape(B, nb * bs, *pages.shape[2:])
+
+    k, v = gather(k_pages), gather(v_pages)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * gather(k_scale)[..., None]
+        v = v.astype(jnp.float32) * gather(v_scale)[..., None]
+    lpos = jnp.arange(nb * bs)
+    kv_pos = jnp.where(lpos[None, :] <= pos[:, None], lpos[None, :], -1)
+    return flash_decode_ref(q.astype(jnp.float32), k, v, kv_pos, pos,
+                            0, softcap).astype(q.dtype)
 
 
 def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,

@@ -61,6 +61,12 @@ def main():
                     help="serve via the continuous-batching scheduler")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV slot pool size (with --scheduler)")
+    ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="KV cache layout (paged = block tables + "
+                         "prefix sharing)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (with --kv-layout paged)")
     args = ap.parse_args()
 
     mod = __import__(f"repro.configs."
@@ -108,6 +114,8 @@ def main():
                           max_slots=args.slots,
                           max_len=192 + args.max_new,
                           max_new=args.max_new,
+                          kv_layout=args.kv_layout,
+                          block_size=args.block_size,
                           queue_depth=max(64, args.requests)).start()
         try:
             handles = [sched.submit(r) for r in reqs]
@@ -142,6 +150,10 @@ def main():
               f"-> {txt!r}")
     if sched is not None:
         st = sched.stats()
+        if st["kv_layout"] == "paged":
+            print(f"  [kv] paged: {st['blocks_in_use']}/{st['num_blocks']} "
+                  f"blocks in use, peak {st['peak_kv_bytes']} B, "
+                  f"prefix hit rate {st['prefix_hit_rate']:.2f}")
         print(f"  [scheduler] slots={st['max_slots']} "
               f"throughput={st['throughput_tok_s']:.1f} tok/s "
               f"fleet J/tok={st['fleet_j_per_token']:.3e} "

@@ -191,6 +191,25 @@ def apply_gqa_train(p, cfg: ModelConfig, x: Array, *, window: int = 0,
     return out, (k, v)
 
 
+def decode_qkv(p, cfg: ModelConfig, x: Array, pos: Array):
+    """Single-token q/k/v projection with per-example rope.
+
+    x: [B, 1, D]; pos: [B] absolute positions. Returns
+    (q [B,1,H,hd], k [B,1,KH,hd], v [B,1,KH,hd]) — rope already applied.
+    Shared by the in-cache decode path (``apply_gqa_decode``) and the
+    paged-attention kernel path (``models.transformer``).
+    """
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.positional == "rope":
+        # per-example positions: vmap rope over batch
+        def rot(qkv, pb):
+            cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, pb[None])
+            return apply_rope(qkv, cos, sin)
+        q = jax.vmap(rot)(q, pos)
+        k = jax.vmap(rot)(k, pos)
+    return q, k, v
+
+
 def apply_gqa_decode(p, cfg: ModelConfig, x: Array, k_cache: Array,
                      v_cache: Array, kv_pos: Array, pos: Array, *,
                      window: int = 0):
@@ -202,14 +221,7 @@ def apply_gqa_decode(p, cfg: ModelConfig, x: Array, k_cache: Array,
     insertion is the caller's job (ring-buffer for sliding window).
     """
     B = x.shape[0]
-    q, k, v = _qkv(p, cfg, x)
-    if cfg.positional == "rope":
-        # per-example positions: vmap rope over batch
-        def rot(qkv, pb):
-            cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, pb[None])
-            return apply_rope(qkv, cos, sin)
-        q = jax.vmap(rot)(q, pos)
-        k = jax.vmap(rot)(k, pos)
+    q, k, v = decode_qkv(p, cfg, x, pos)
     KH = cfg.num_kv_heads
     G = cfg.num_heads // KH
     scale = cfg.head_dim ** -0.5

@@ -37,7 +37,7 @@ from repro.core.exit_points import segment_boundaries
 from repro.models import ssm
 from repro.models.attention import (apply_gqa_decode, apply_gqa_train,
                                     apply_mla_decode, apply_mla_train,
-                                    init_gqa, init_mla)
+                                    decode_qkv, init_gqa, init_mla)
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
                                  init_embed, init_mlp, init_norm,
                                  padded_vocab, softcap)
@@ -234,13 +234,81 @@ def _apply_layer_full(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
     return h, cache, aux
 
 
+def _paged_insert(cache, blk: Array, off: Array, k_new: Array, v_new: Array):
+    """Scatter one token's K/V per row into block planes at (blk, off)."""
+    if "k_s" in cache:
+        kq, ks = _quant_kv(k_new[:, 0])
+        vq, vs = _quant_kv(v_new[:, 0])
+        return {"k": cache["k"].at[blk, off].set(kq),
+                "v": cache["v"].at[blk, off].set(vq),
+                "k_s": cache["k_s"].at[blk, off].set(ks),
+                "v_s": cache["v_s"].at[blk, off].set(vs)}
+    return {"k": cache["k"].at[blk, off].set(k_new[:, 0]),
+            "v": cache["v"].at[blk, off].set(v_new[:, 0])}
+
+
+def _paged_gqa_decode(mp, cfg: ModelConfig, x: Array, cache, pos: Array,
+                      tables: Array, use_kernel: bool):
+    """One-token GQA decode against paged cache planes.
+
+    cache leaves are [num_blocks, block_size, ...]; ``tables`` [B, nb] maps
+    each row's logical blocks to physical ones. The reference path gathers
+    the chain and reuses ``apply_gqa_decode`` verbatim (attend-then-insert
+    with an explicit self term) so its arithmetic — and therefore its
+    tokens/logits — is bit-identical to the contiguous ring path. The
+    kernel path inserts first, then runs the Pallas paged flash kernel
+    (insert-then-attend; same math, flash-accumulated).
+    """
+    B = x.shape[0]
+    num_blocks, bs = cache["k"].shape[:2]
+    int8 = "k_s" in cache
+    tbl = jnp.clip(jnp.asarray(tables, jnp.int32), 0, num_blocks - 1)
+    blk = jnp.take_along_axis(tbl, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    if use_kernel:
+        # ops.py owns kernel dispatch: interpret off on real TPU,
+        # REPRO_KERNELS=ref forces the oracle
+        from repro.kernels.ops import paged_flash_decode
+        q, k_new, v_new = decode_qkv(mp, cfg, x, pos)
+        new_cache = _paged_insert(cache, blk, off, k_new, v_new)
+        KH = cfg.num_kv_heads
+        qr = q.reshape(B, KH, cfg.num_heads // KH, cfg.head_dim)
+        scales = ((new_cache["k_s"], new_cache["v_s"]) if int8
+                  else (None, None))
+        o = paged_flash_decode(qr, new_cache["k"], new_cache["v"], tbl, pos,
+                               *scales, softcap=cfg.attn_logit_softcap)
+        out = o.reshape(B, 1, cfg.q_dim) @ mp["wo"]
+        if "bo" in mp:
+            out = out + mp["bo"]
+        return out, new_cache
+
+    def gather(plane):
+        return plane[tbl].reshape(B, tbl.shape[1] * bs, *plane.shape[2:])
+
+    if int8:
+        k_read = _dequant_kv(gather(cache["k"]), gather(cache["k_s"]),
+                             x.dtype)
+        v_read = _dequant_kv(gather(cache["v"]), gather(cache["v_s"]),
+                             x.dtype)
+    else:
+        k_read, v_read = gather(cache["k"]), gather(cache["v"])
+    lpos = jnp.arange(tbl.shape[1] * bs)
+    kv_pos = jnp.where(lpos[None, :] < pos[:, None], lpos[None, :], -1)
+    out, k_new, v_new = apply_gqa_decode(mp, cfg, x, k_read, v_read,
+                                         kv_pos, pos, window=0)
+    return out, _paged_insert(cache, blk, off, k_new, v_new)
+
+
 def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
-                        h: Array, cache, pos: Array, active: Array):
+                        h: Array, cache, pos: Array, active: Array,
+                        paged=None):
     """One-token decode layer with cache update.
 
     ``active``: [B] bool — tokens that have NOT exited. For exited tokens the
     layer still computes and stores K/V (propagation) but the hidden-state
     update is discarded.
+    ``paged``: None for ring caches, else ``(block_tables [B, nb] int32,
+    use_kernel: bool)`` and the cache leaves are block planes.
     Returns (h, new_cache, aux).
     """
     window = _window_for(cfg, spec)
@@ -249,6 +317,11 @@ def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
     B = h.shape[0]
     if spec.mixer == MIXER_MAMBA:
         out, new_cache = ssm.apply_mamba_decode(lp["mixer"], cfg, x, cache)
+    elif paged is not None:
+        # only full-attention GQA layers page (paged_unsupported gates)
+        mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
+        out, new_cache = _paged_gqa_decode(mp, cfg, x, cache, pos,
+                                           paged[0], paged[1])
     elif spec.mixer == MIXER_MLA:
         W = cache["latent"].shape[1]
         out, lat_new, kr_new = apply_mla_decode(
@@ -339,7 +412,7 @@ def _apply_segment_full(sp, shared_p, h, *, cfg, seg: Segment,
 
 
 def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
-                          pos, active):
+                          pos, active, paged=None):
     if seg.scanned:
         spec = seg.specs[0]
 
@@ -347,7 +420,7 @@ def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
             h, aux = carry
             lp, cache = xs
             h, new_cache, a = _apply_layer_decode(lp, shared_p, cfg, spec, h,
-                                                  cache, pos, active)
+                                                  cache, pos, active, paged)
             return (h, aux + a), new_cache
 
         (h, aux), new_caches = jax.lax.scan(
@@ -357,7 +430,7 @@ def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
     aux = jnp.zeros((), jnp.float32)
     for j, spec in enumerate(seg.specs):
         h, nc, a = _apply_layer_decode(sp[j], shared_p, cfg, spec, h,
-                                       caches[j], pos, active)
+                                       caches[j], pos, active, paged)
         new_caches.append(nc)
         aux = aux + a
     return h, new_caches, aux
@@ -569,6 +642,166 @@ def write_cache_slots(cfg: ModelConfig, pool_caches, req_caches, slots):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged KV caches (block planes + block tables; serving/kv_pool.py owns the
+# allocator/prefix policy, these are the cache-layout primitives)
+# ---------------------------------------------------------------------------
+def paged_unsupported(cfg: ModelConfig) -> Optional[str]:
+    """Why this config cannot use paged KV caches (None = it can).
+
+    Paging covers full-attention GQA layers (incl. shared-weight and int8
+    variants). Mamba state is constant-size (nothing to page), MLA latent
+    caches and sliding-window ring caches keep the contiguous layout for
+    now — a scheduler asked to page them fails eagerly with this reason.
+    """
+    for spec in cfg.block_pattern:
+        if spec.mixer == MIXER_MAMBA:
+            return "mamba layers carry constant-size state, not a KV cache"
+        if spec.mixer == MIXER_MLA:
+            return "MLA latent caches are not paged yet"
+        if _window_for(cfg, spec):
+            return "sliding-window layers use ring caches, not pages"
+    return None
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    """Empty block-pooled decode caches: leaves
+    [L?, num_blocks, block_size, KH, hd] (+ int8 scale planes). Unlike the
+    contiguous ring caches there is no ``pos`` leaf — validity is derived
+    from the block table plus each row's current position."""
+    reason = paged_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"paged KV cache unsupported for {cfg.name}: "
+                         f"{reason}")
+    segs = plan_segments(cfg)
+    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+
+    def one(n: int | None):
+        pre = (n,) if n is not None else ()
+        c = {
+            "k": jnp.zeros((*pre, num_blocks, block_size,
+                            cfg.num_kv_heads, cfg.head_dim), kv_dtype),
+            "v": jnp.zeros((*pre, num_blocks, block_size,
+                            cfg.num_kv_heads, cfg.head_dim), kv_dtype),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            c["k_s"] = jnp.zeros((*pre, num_blocks, block_size,
+                                  cfg.num_kv_heads), jnp.float32)
+            c["v_s"] = jnp.zeros((*pre, num_blocks, block_size,
+                                  cfg.num_kv_heads), jnp.float32)
+        return c
+
+    return [one(seg.length) if seg.scanned
+            else [one(None) for _ in seg.specs] for seg in segs]
+
+
+def ring_to_paged(cfg: ModelConfig, caches, block_size: int):
+    """Convert batched prefill ring caches into block planes + tables.
+
+    ``caches`` come from ``prefill(..., max_len=W)`` with ``W`` a multiple
+    of ``block_size`` and batch ``B``; row ``b``'s logical block ``j`` maps
+    to physical block ``b * nb + j`` (identity layout — the offline
+    engine's allocation policy). Returns (paged_caches, tables [B, nb]).
+    """
+    reason = paged_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"paged KV cache unsupported for {cfg.name}: "
+                         f"{reason}")
+    segs = plan_segments(cfg)
+    shape = {}
+
+    def conv(leaf, stacked):
+        if stacked:
+            L, B, W = leaf.shape[:3]
+        else:
+            B, W = leaf.shape[:2]
+        if W % block_size:
+            raise ValueError(f"cache length {W} not a multiple of "
+                             f"block_size {block_size}")
+        shape["B"], shape["W"] = B, W
+        if stacked:
+            return leaf.reshape(L, B * (W // block_size), block_size,
+                                *leaf.shape[3:])
+        return leaf.reshape(B * (W // block_size), block_size,
+                            *leaf.shape[2:])
+
+    out = []
+    for seg, c in zip(segs, caches):
+        if seg.scanned:
+            out.append({k: conv(v, True) for k, v in c.items()
+                        if k != "pos"})
+        else:
+            out.append([{k: conv(v, False) for k, v in cj.items()
+                         if k != "pos"} for cj in c])
+    B, W = shape["B"], shape["W"]
+    nb = W // block_size
+    tables = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    return out, tables
+
+
+def write_paged_blocks(cfg: ModelConfig, pool_caches, req_caches,
+                       block_ids, n_write: int, n_skip: int = 0):
+    """Scatter one prefilled request's cache into pool block planes.
+
+    ``req_caches``: ring caches from ``prefill(..., max_len=nb*bs)`` with
+    batch 1 (entries in logical order — the ring never wraps at prefill).
+    ``block_ids``: [nb] destination block ids; blocks ``[n_skip, n_write)``
+    are written (both static): the caller skips prefix-shared blocks —
+    the full ones already hold byte-identical content (a prefix's K/V is
+    suffix-independent under causal attention), and a shared *mutable*
+    tail must never be rewritten (its sharer may have appended).
+    Jit-able with pool donation.
+    """
+    segs = plan_segments(cfg)
+    if n_write <= n_skip:
+        return pool_caches
+    ids = jnp.asarray(block_ids, jnp.int32)[n_skip:n_write]
+
+    def put(pool_leaf, req_leaf, stacked):
+        if stacked:
+            L = req_leaf.shape[0]
+            bs = pool_leaf.shape[2]
+            blocks = req_leaf.reshape(L, -1, bs,
+                                      *req_leaf.shape[3:])[:,
+                                                           n_skip:n_write]
+            return pool_leaf.at[:, ids].set(blocks.astype(pool_leaf.dtype))
+        bs = pool_leaf.shape[1]
+        blocks = req_leaf.reshape(-1, bs,
+                                  *req_leaf.shape[2:])[n_skip:n_write]
+        return pool_leaf.at[ids].set(blocks.astype(pool_leaf.dtype))
+
+    out = []
+    for seg, pc, rc in zip(segs, pool_caches, req_caches):
+        if seg.scanned:
+            out.append({k: put(pc[k], rc[k], True) for k in pc})
+        else:
+            out.append([{k: put(pcj[k], rcj[k], False) for k in pcj}
+                        for pcj, rcj in zip(pc, rc)])
+    return out
+
+
+def copy_paged_block(cfg: ModelConfig, caches, src, dst):
+    """``dst`` block := ``src`` block across every layer plane (the
+    copy-on-write primitive: a slot about to append into a shared block
+    first duplicates it). Jit-able with donation; src/dst may be traced."""
+    segs = plan_segments(cfg)
+
+    def cp(leaf, stacked):
+        if stacked:
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
+
+    out = []
+    for seg, c in zip(segs, caches):
+        if seg.scanned:
+            out.append({k: cp(v, True) for k, v in c.items()})
+        else:
+            out.append([{k: cp(v, False) for k, v in cj.items()}
+                        for cj in c])
+    return out
+
+
 # exit-decision callback: (h [B, D], exit_idx) -> decision [B] | None.
 # Built by repro.core.exit_policy.as_exit_fn / select_apply — policies are
 # registry data with runtime param pytrees, never hand-rolled closures.
@@ -576,16 +809,25 @@ ExitFn = Callable[[Array, int], Optional[Array]]
 
 
 def decode_step(params, cfg: ModelConfig, tokens: Array, caches, pos: Array,
-                controller: Optional[ExitFn] = None):
+                controller: Optional[ExitFn] = None, *,
+                block_tables: Optional[Array] = None,
+                use_kernel: bool = False):
     """One decode step with dynamic early exit.
 
     tokens: [B] current input token ids; pos: [B] absolute positions.
     ``controller(h2d, exit_idx) -> exit_prob [B] | None`` is consulted at
-    every exit boundary. Returns (logits [B, V], new_caches, info) where
+    every exit boundary. ``block_tables`` [B, nb] switches the attention
+    layers to paged caches (leaves [num_blocks, block_size, ...], built by
+    :func:`init_paged_cache` / :func:`ring_to_paged`); ``use_kernel`` then
+    selects the Pallas paged-attention kernel over the pure-XLA gather
+    reference. Returns (logits [B, V], new_caches, info) where
     info = {exit_layer: [B] layers *used* per token, aux}.
     """
     segs = plan_segments(cfg)
     B = tokens.shape[0]
+    paged = None
+    if block_tables is not None:
+        paged = (jnp.asarray(block_tables, jnp.int32), bool(use_kernel))
     h = embed_inputs(params, cfg, tokens[:, None], pos=pos)
     shared_p = params.get("shared_attn")
     active = jnp.ones((B,), bool)
@@ -594,7 +836,8 @@ def decode_step(params, cfg: ModelConfig, tokens: Array, caches, pos: Array,
     new_caches = []
     for i, seg in enumerate(segs):
         h, nc, a = _apply_segment_decode(params["segments"][i], shared_p, cfg,
-                                         seg, h, caches[i], pos, active)
+                                         seg, h, caches[i], pos, active,
+                                         paged)
         new_caches.append(nc)
         aux = aux + a
         is_last = i == len(segs) - 1

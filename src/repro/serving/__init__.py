@@ -3,5 +3,7 @@ from repro.api import (GenerationRequest, GenerationResult,  # noqa: F401
 from repro.serving.engine import Engine, ServeResult  # noqa: F401
 from repro.serving.metrics import (RequestMetrics, aggregate_metrics,  # noqa
                                    latency_percentiles)
+from repro.serving.kv_pool import (BlockAllocator, PagedKVPool,  # noqa: F401
+                                   chain_hashes)
 from repro.serving.scheduler import (KVSlotPool, Request,  # noqa: F401
                                      Scheduler, SchedulerQueueFull)

@@ -46,11 +46,16 @@ class ServeResult:
 class Engine:
     def __init__(self, params, cfg: ModelConfig, controller=None, *,
                  max_new: int = 15, max_context: int = 512,
-                 agent_params=None, tokenizer=None):
+                 agent_params=None, tokenizer=None,
+                 kv_layout: str = "contiguous", kv_block_size: int = 16,
+                 use_kernel: bool = False):
         """``controller`` may be a legacy callable or anything
         ``exit_policy.as_exit_fn`` accepts (name / PolicySpec /
         PolicyBatch). ``agent_params`` feeds 'policy' specs,
-        ``tokenizer`` enables text prompts and stop sequences."""
+        ``tokenizer`` enables text prompts and stop sequences.
+        ``kv_layout="paged"`` decodes through block-paged KV caches
+        (``kv_block_size`` tokens per block; ``use_kernel`` selects the
+        Pallas paged-attention kernel) — same tokens, paged substrate."""
         self.params = params
         self.cfg = cfg
         self.controller = controller
@@ -58,6 +63,18 @@ class Engine:
         self.tokenizer = tokenizer
         self.max_new = max_new
         self.max_context = max_context
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {kv_layout!r}")
+        if kv_layout == "paged":
+            from repro.models.transformer import paged_unsupported
+            reason = paged_unsupported(cfg)
+            if reason is not None:
+                raise ValueError(f"paged KV cache unsupported for "
+                                 f"{cfg.name}: {reason}")
+        self.kv_layout = kv_layout
+        self.kv_block_size = kv_block_size
+        self.use_kernel = use_kernel
 
     def _ctx(self) -> exit_policy.PolicyContext:
         return exit_policy.PolicyContext(params=self.params, cfg=self.cfg,
@@ -87,7 +104,11 @@ class Engine:
         out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
                        exit_fn, max_len=ctx_len + max_new,
                        sampling=sampling, key=key, seeds=seeds,
-                       seed_offsets=seed_offsets)
+                       seed_offsets=seed_offsets,
+                       kv_block_size=(self.kv_block_size
+                                      if self.kv_layout == "paged"
+                                      else None),
+                       use_kernel=self.use_kernel)
         toks = np.asarray(out["tokens"])
         exits = np.asarray(out["exit_layers"])
         tokens, exit_layers, metrics = [], [], []

@@ -1,0 +1,444 @@
+"""Paged KV-cache subsystem: block allocator, block tables, prefix cache.
+
+The PR-1 ``KVSlotPool`` gives every resident request a contiguous
+``[max_len, ...]`` cache row, so the pool holds ``max_slots x max_len``
+tokens of KV storage whether requests use it or not — memory, not compute,
+caps concurrency. This module replaces that with the vLLM-style substrate
+the related energy-evaluation work assumes as baseline:
+
+``BlockAllocator``
+    Ref-counted physical blocks with O(1) alloc/free/double-free detection
+    (a refcount array, never a membership scan) plus a *cached-free* LRU:
+    blocks whose refcount hits zero but that still carry a prefix hash stay
+    reusable until the allocator actually needs them back.
+
+``PagedKVPool``
+    Owns per-layer block planes ``[num_blocks, block_size, KH, hd]`` (built
+    by ``models.transformer.init_paged_cache``; int8 planes carry f32 scale
+    planes), a block table ``[max_slots, max_blocks_per_slot]`` int32, and
+    the policy around them:
+
+    * token-granularity growth — a slot holds exactly
+      ``ceil(ctx_len / block_size)`` blocks; one more is bound only when
+      decode reaches a block boundary;
+    * prefix sharing — prompt blocks are chain-hashed
+      (``hash(prev_hash, block_tokens)``); an admission that matches an
+      existing chain increfs those blocks instead of allocating, including
+      the partial tail block on an exact-prompt match;
+    * copy-on-write — before a slot appends into a block with
+      ``refcount > 1`` the block is duplicated (``copy_paged_block``) so
+      sharers never observe the write;
+    * reservation accounting — admission reserves the worst-case block
+      count (``ceil((prompt + max_new)/block_size)`` + a possible COW
+      copy) so mid-flight appends can never fail and no preemption logic
+      is needed, while unused reservations return on retirement.
+
+Block 0 is a pinned scratch block: free scheduler rows decode garbage and
+their (masked, overwritten-at-will) K/V writes land there, never in a live
+block.
+
+MoE configs disable prefix *sharing* (expert-capacity routing couples
+tokens at prefill, so a prefix's K/V is not suffix-independent); paging
+itself still works. Mamba/MLA/sliding-window configs are rejected by
+``models.transformer.paged_unsupported`` with a clear reason.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from functools import lru_cache, partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.transformer import (copy_paged_block, init_paged_cache,
+                                      paged_unsupported, write_paged_blocks)
+
+
+def chain_hashes(tokens: Sequence[int], block_size: int) -> list[bytes]:
+    """Per-block chain keys for a prompt.
+
+    Key ``j`` commits to every token in blocks ``0..j`` — two prompts share
+    block ``j`` iff they agree on all of its prefix. The final (possibly
+    partial) block is keyed by its actual tokens, so only an exact-prompt
+    match shares a mutable tail. Stable digests (blake2b), not ``hash()``:
+    the map must not depend on PYTHONHASHSEED.
+    """
+    out: list[bytes] = []
+    h = b"kv-prefix"
+    for i in range(0, len(tokens), block_size):
+        blk = np.asarray(tokens[i:i + block_size], np.int64).tobytes()
+        h = hashlib.blake2b(h + blk, digest_size=16).digest()
+        out.append(h)
+    return out
+
+
+@lru_cache(maxsize=1024)
+def _chain_hashes_cached(tokens: tuple, block_size: int) -> list[bytes]:
+    """A prompt's chain never changes, but the admission gate (and the
+    backfill scan over the whole queue) re-asks for it every decode tick —
+    memoize on the token tuple so blocked queues cost dict lookups, not
+    O(queue x prompt) hashing per tick."""
+    return chain_hashes(tokens, block_size)
+
+
+class BlockAllocator:
+    """Ref-counted block ids with O(1) accounting and cached-free reuse."""
+
+    def __init__(self, num_blocks: int, reserved: int = 0):
+        if num_blocks <= reserved:
+            raise ValueError(f"num_blocks={num_blocks} leaves no "
+                             f"allocatable blocks (reserved={reserved})")
+        self.num_blocks = num_blocks
+        self.reserved = reserved
+        self._refcount = np.zeros(num_blocks, np.int32)
+        self._refcount[:reserved] = 1            # pinned forever
+        self._free = list(range(num_blocks - 1, reserved - 1, -1))  # LIFO
+        self._cached_free: OrderedDict[int, None] = OrderedDict()
+        self._block_hash: dict[int, bytes] = {}
+        self._hash_block: dict[bytes, int] = {}
+        self._in_use = 0
+        self.peak_in_use = 0
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_cached_free(self) -> int:
+        return len(self._cached_free)
+
+    @property
+    def n_available(self) -> int:
+        return len(self._free) + len(self._cached_free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self._in_use
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - self.reserved
+
+    def refcount(self, block: int) -> int:
+        return int(self._refcount[block])
+
+    # -- alloc / ref --------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """A fresh block (refcount 1), evicting the LRU cached-free block
+        (and its hash entry) if the plain free list is empty."""
+        if self._free:
+            b = self._free.pop()
+        elif self._cached_free:
+            b, _ = self._cached_free.popitem(last=False)   # LRU eviction
+            key = self._block_hash.pop(b, None)
+            if key is not None:
+                self._hash_block.pop(key, None)
+        else:
+            return None
+        self._refcount[b] = 1
+        self._in_use += 1
+        self.peak_in_use = max(self.peak_in_use, self._in_use)
+        return b
+
+    def incref(self, block: int) -> None:
+        if self._refcount[block] <= 0:
+            raise ValueError(f"block {block} incref while free")
+        self._refcount[block] += 1
+
+    def decref(self, block: int) -> None:
+        if not self.reserved <= block < self.num_blocks:
+            raise ValueError(f"block {block} out of range")
+        if self._refcount[block] <= 0:
+            raise ValueError(f"block {block} double-freed")
+        self._refcount[block] -= 1
+        if self._refcount[block] == 0:
+            self._in_use -= 1
+            if block in self._block_hash:
+                self._cached_free[block] = None    # reusable until evicted
+            else:
+                self._free.append(block)
+
+    # -- prefix cache -------------------------------------------------------
+    def share(self, key: bytes) -> Optional[int]:
+        """Block registered under ``key``, incref'd (revived from the
+        cached-free list if its last user retired). None on miss."""
+        b = self._hash_block.get(key)
+        if b is None:
+            return None
+        if self._refcount[b] == 0:
+            del self._cached_free[b]
+            self._refcount[b] = 1
+            self._in_use += 1
+            self.peak_in_use = max(self.peak_in_use, self._in_use)
+        else:
+            self._refcount[b] += 1
+        return b
+
+    def register(self, block: int, key: bytes) -> None:
+        """Publish ``block`` under ``key`` (first registration wins)."""
+        if key in self._hash_block or block in self._block_hash:
+            return
+        self._hash_block[key] = block
+        self._block_hash[block] = key
+
+
+class PagedKVPool:
+    """Block-pooled per-layer KV caches + block table + prefix cache.
+
+    Slot-facing surface mirrors ``KVSlotPool`` (``alloc``/``release``/
+    ``n_free``/``n_used``/``caches``/``max_slots``/``max_len``) so the
+    scheduler treats either pool uniformly; the paged-only surface is
+    ``can_admit``/``write_prompt``/``prepare_append``/``device_tables``.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 dtype=jnp.float32, enable_prefix_cache: bool = True):
+        reason = paged_unsupported(cfg)
+        if reason is not None:
+            raise ValueError(f"paged KV cache unsupported for {cfg.name}: "
+                             f"{reason} — use kv_layout='contiguous'")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks_per_slot = -(-max_len // block_size)
+        if num_blocks is None:
+            # parity default: same token capacity the contiguous pool has
+            num_blocks = 1 + max_slots * self.max_blocks_per_slot
+        self.num_blocks = num_blocks
+        self.caches = init_paged_cache(cfg, num_blocks, block_size, dtype)
+        # cache shapes are fixed for the pool's lifetime: size them once
+        # (stats() runs under the scheduler lock on every GET /queue)
+        self.kv_bytes_total = sum(leaf.nbytes
+                                  for leaf in jax.tree.leaves(self.caches))
+        self.bytes_per_block = self.kv_bytes_total // num_blocks
+        self.blocks = BlockAllocator(num_blocks, reserved=1)  # 0 = scratch
+        self.tables = np.zeros((max_slots, self.max_blocks_per_slot),
+                               np.int32)
+        self._n_blocks = np.zeros(max_slots, np.int32)
+        self._reserved = np.zeros(max_slots, np.int32)
+        self._slot_used = np.zeros(max_slots, bool)
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+        # MoE expert-capacity routing couples tokens at prefill: a prefix's
+        # K/V then depends on the co-batched suffix, so sharing is unsound
+        self.enable_prefix_cache = (enable_prefix_cache
+                                    and cfg.moe is None)
+        self._writer = jax.jit(partial(write_paged_blocks, cfg),
+                               static_argnames=("n_write", "n_skip"),
+                               donate_argnums=0)
+        self._copier = jax.jit(partial(copy_paged_block, cfg),
+                               donate_argnums=0)
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
+
+    # -- geometry / accounting ---------------------------------------------
+    @property
+    def kv_bytes_in_use(self) -> int:
+        return self.blocks.n_in_use * self.bytes_per_block
+
+    @property
+    def peak_kv_bytes(self) -> int:
+        return self.blocks.peak_in_use * self.bytes_per_block
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def n_free(self) -> int:          # free *slots* (KVSlotPool parity)
+        return len(self._free_slots)
+
+    @property
+    def n_used(self) -> int:
+        return self.max_slots - len(self._free_slots)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return int(self._reserved.sum())
+
+    def can_admit(self, prompt: Sequence[int], max_new: int) -> bool:
+        """Free slot + worst-case block reservation available.
+
+        The worst case is discounted by prefix-chain blocks that are
+        currently *referenced* (an admission shares them instead of
+        allocating; cached-free matches are not discounted — reviving one
+        consumes availability just like an allocation)."""
+        if not self._free_slots:
+            return False
+        need = (self.need_blocks(len(prompt), max_new)
+                - self._shared_active_blocks(prompt))
+        return (self.blocks.n_available - self.reserved_blocks) >= need
+
+    def need_blocks(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case blocks a request may allocate over its lifetime.
+        A prompt with a partial tail block may share it on an exact-prompt
+        match and then needs one COW copy on its first append; full-block
+        prompts never append into shared blocks."""
+        cow = 1 if (self.enable_prefix_cache
+                    and prompt_len % self.block_size) else 0
+        return self.blocks_for(prompt_len + max_new) + cow
+
+    def _shared_active_blocks(self, prompt: Sequence[int]) -> int:
+        if not self.enable_prefix_cache:
+            return 0
+        n = 0
+        for key in _chain_hashes_cached(tuple(prompt), self.block_size):
+            b = self.blocks._hash_block.get(key)
+            if b is None:
+                break
+            if self.blocks.refcount(b) > 0:
+                n += 1
+        return n
+
+    # -- slots (KVSlotPool-compatible surface) ------------------------------
+    def alloc(self) -> Optional[int]:
+        if not self._free_slots:
+            return None
+        slot = self._free_slots.pop()
+        self._slot_used[slot] = True
+        return slot
+
+    def release(self, slot: int) -> None:
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if not self._slot_used[slot]:                 # O(1), not a scan
+            raise ValueError(f"slot {slot} double-freed")
+        for j in range(int(self._n_blocks[slot])):
+            self.blocks.decref(int(self.tables[slot, j]))
+        self.tables[slot, :] = 0
+        self._n_blocks[slot] = 0
+        self._reserved[slot] = 0
+        self._slot_used[slot] = False
+        self._free_slots.append(slot)
+
+    # -- admission ----------------------------------------------------------
+    def write_prompt(self, slot: int, prompt: Sequence[int], req_caches,
+                     max_new: int) -> int:
+        """Bind the prompt's blocks to ``slot`` and splice the prefilled
+        cache in; returns the number of prefix-cache-shared tokens.
+
+        ``req_caches``: ring caches from
+        ``prefill(..., max_len=blocks_for(len(prompt)) * block_size)``.
+        Shared blocks are incref'd and skipped by the device write (full
+        shared blocks already hold byte-identical content; a shared
+        *mutable* tail must never be rewritten — its sharer may have
+        appended decode tokens past the prompt).
+        """
+        if not self._slot_used[slot]:
+            raise ValueError(f"slot {slot} not allocated")
+        S = len(prompt)
+        n0 = self.blocks_for(S)
+        keys = (_chain_hashes_cached(tuple(prompt), self.block_size)
+                if self.enable_prefix_cache else [])
+        ids: list[int] = []
+        n_shared = 0
+        for key in keys:
+            b = self.blocks.share(key)
+            if b is None:
+                break
+            ids.append(b)
+            n_shared += 1
+        tail_partial = S % self.block_size != 0
+        tail_shared = n_shared == n0 and tail_partial
+        for j in range(n_shared, n0):
+            b = self.blocks.alloc()
+            assert b is not None, "admission outran its block reservation"
+            ids.append(b)
+            if keys:
+                self.blocks.register(b, keys[j])
+        self.tables[slot, :n0] = ids
+        self.tables[slot, n0:] = 0
+        self._n_blocks[slot] = n0
+        # worst-case growth still ahead of this slot: future appends plus
+        # one COW copy for ANY partial tail while the prefix cache is on —
+        # a fresh partial tail gets registered, so a later exact-prompt
+        # sharer can admit and this slot may then be the one that COWs;
+        # charging only shared tails would let that COW steal a unit from
+        # this slot's growth reservation (each slot COWs at most once:
+        # after it, the tail is exclusive and all later blocks are fresh)
+        cow_slack = int(bool(self.enable_prefix_cache) and tail_partial)
+        self._reserved[slot] = (self.blocks_for(S + max_new) - n0
+                                + cow_slack)
+        if self.enable_prefix_cache:
+            self.prefix_queries += 1
+            if n_shared:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += min(n_shared * self.block_size, S)
+        # write only the unshared suffix: shared full blocks already hold
+        # byte-identical content; a shared mutable tail is excluded too
+        n_write = n0 - int(tail_shared)
+        n_skip = n_shared - int(tail_shared)
+        if n_write > n_skip:
+            ids_arr = jnp.asarray(ids, jnp.int32)
+            self.caches = self._writer(self.caches, req_caches, ids_arr,
+                                       n_write=n_write, n_skip=n_skip)
+        return min(n_shared * self.block_size, S)
+
+    # -- decode-time growth --------------------------------------------------
+    def prepare_append(self, slot: int, pos: int) -> None:
+        """Guarantee the block holding ``pos`` exists and is exclusively
+        owned before this tick's K/V write (alloc at a block boundary,
+        copy-on-write when shared)."""
+        j = pos // self.block_size
+        nb = int(self._n_blocks[slot])
+        if j >= self.max_blocks_per_slot:
+            raise ValueError(f"slot {slot} position {pos} exceeds "
+                             f"max_len {self.max_len}")
+        if j == nb:
+            b = self.blocks.alloc()
+            assert b is not None, "append outran its block reservation"
+            self.tables[slot, j] = b
+            self._n_blocks[slot] = nb + 1
+            self._reserved[slot] = max(int(self._reserved[slot]) - 1, 0)
+            return
+        b = int(self.tables[slot, j])
+        if self.blocks.refcount(b) > 1:               # copy-on-write
+            nb_new = self.blocks.alloc()
+            assert nb_new is not None, "COW outran its block reservation"
+            self.caches = self._copier(self.caches,
+                                       jnp.asarray(b, jnp.int32),
+                                       jnp.asarray(nb_new, jnp.int32))
+            self.tables[slot, j] = nb_new
+            self.blocks.decref(b)
+            self._reserved[slot] = max(int(self._reserved[slot]) - 1, 0)
+            self.cow_copies += 1
+
+    def device_tables(self) -> jax.Array:
+        return jnp.asarray(self.tables)
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative counters and high-water marks (used after
+        benchmark warmup so reported stats cover only the timed run)."""
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
+        self.blocks.peak_in_use = self.blocks.n_in_use
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "block_size": self.block_size,
+            "num_blocks": self.num_blocks,
+            "blocks_in_use": self.blocks.n_in_use,
+            "blocks_available": self.blocks.n_available,
+            "blocks_reserved": self.reserved_blocks,
+            "kv_bytes_total": self.kv_bytes_total,
+            "kv_bytes_in_use": self.kv_bytes_in_use,
+            "peak_kv_bytes": self.peak_kv_bytes,
+            "prefix_queries": self.prefix_queries,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hits
+                                / max(self.prefix_queries, 1)),
+            "cow_copies": self.cow_copies,
+        }

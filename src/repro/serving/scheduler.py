@@ -14,6 +14,16 @@ Pieces
     bookkeeping. Slot writes go through ``write_cache_slots`` under one jit
     with donation, so admission never reallocates the pool.
 
+``PagedKVPool`` (``kv_layout="paged"``, serving/kv_pool.py)
+    The vLLM-style substrate: per-layer block planes
+    ``[num_blocks, block_size, ...]`` addressed through a per-slot block
+    table. Requests bind ``ceil(ctx/block_size)`` blocks and grow at block
+    granularity; prompt-prefix blocks are ref-count shared (hash chain,
+    copy-on-write on divergence); admission is gated on free *blocks*, not
+    just free slots. The decode step reads/writes through the table — the
+    reference gather path is bit-identical to the contiguous layout, and
+    ``use_kernel=True`` swaps in the Pallas paged-attention kernel.
+
 ``Scheduler``
     An admission queue + a single decode-loop thread. Each tick it (1)
     admits queued requests into free slots — prefill runs at the request's
@@ -66,6 +76,7 @@ from repro.data.tokenizer import EOS, PAD
 from repro.models.transformer import (decode_step, init_cache, lm_logits,
                                       prefill, write_cache_slots)
 from repro.serving.engine import ServeResult
+from repro.serving.kv_pool import PagedKVPool
 from repro.serving.metrics import (RequestMetrics, latency_percentiles,
                                    request_metrics)
 
@@ -92,7 +103,11 @@ class KVSlotPool:
         self.max_slots = max_slots
         self.max_len = max_len
         self.caches = init_cache(cfg, max_slots, max_len, dtype)
+        # fixed for the pool's lifetime — sized once, read per stats() call
+        self.kv_bytes_total = sum(leaf.nbytes
+                                  for leaf in jax.tree.leaves(self.caches))
         self._free = list(range(max_slots - 1, -1, -1))   # LIFO: reuse warm rows
+        self._used = np.zeros(max_slots, bool)  # O(1) double-free detection
         self._write = jax.jit(partial(write_cache_slots, cfg),
                               donate_argnums=0)
 
@@ -105,13 +120,18 @@ class KVSlotPool:
         return self.max_slots - len(self._free)
 
     def alloc(self) -> Optional[int]:
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used[slot] = True
+        return slot
 
     def release(self, slot: int) -> None:
         if not 0 <= slot < self.max_slots:
             raise ValueError(f"slot {slot} out of range")
-        if slot in self._free:
+        if not self._used[slot]:     # O(1), not an O(n) free-list scan
             raise ValueError(f"slot {slot} double-freed")
+        self._used[slot] = False
         self._free.append(slot)
 
     def write(self, req_caches, slot: int) -> None:
@@ -213,6 +233,9 @@ class Scheduler:
                  power_budget_w: Optional[float] = None,
                  class_energy_budgets_j: Optional[dict] = None,
                  eos_id: int = EOS, pad_id: int = PAD,
+                 kv_layout: str = "contiguous", block_size: int = 16,
+                 num_blocks: Optional[int] = None, use_kernel: bool = False,
+                 enable_prefix_cache: bool = True,
                  dtype=jnp.float32):
         self.params = params
         self.cfg = cfg
@@ -250,7 +273,18 @@ class Scheduler:
             raise ValueError(f"default policy {self.default_kind!r} not in "
                              f"allowed_kinds {sorted(self.allowed_kinds)}")
 
-        self.pool = KVSlotPool(cfg, max_slots, max_len, dtype)
+        if kv_layout == "paged":
+            self.pool = PagedKVPool(cfg, max_slots, max_len,
+                                    block_size=block_size,
+                                    num_blocks=num_blocks, dtype=dtype,
+                                    enable_prefix_cache=enable_prefix_cache)
+        elif kv_layout == "contiguous":
+            self.pool = KVSlotPool(cfg, max_slots, max_len, dtype)
+        else:
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.use_kernel = use_kernel
         S = max_slots
         self._slot_req: list[Optional[Request]] = [None] * S
         self._cur_tok = np.full(S, pad_id, np.int32)
@@ -265,7 +299,8 @@ class Scheduler:
         self._seed = np.zeros(S, np.int32)
 
         self._step = jax.jit(self._make_step(), donate_argnums=2)
-        self._prefill = jax.jit(self._prefill_fn)
+        self._prefill = jax.jit(self._prefill_fn,
+                                static_argnames=("max_len",))
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -282,6 +317,8 @@ class Scheduler:
         self._fleet_tokens = 0
         self._fleet_energy_j = 0.0
         self._deferred_admissions = 0
+        self._blocked_admissions = 0
+        self._peak_active = 0
         self._power_w_ema = 0.0
         self._exit_layer_ema = float(cfg.num_layers)
         self._latencies: list[float] = []
@@ -304,28 +341,33 @@ class Scheduler:
     def _make_step(self):
         """The one fixed-shape decode step: per-slot exit policies selected
         from the stacked param pytree, per-slot sampling — all runtime
-        arrays, so mixed traffic never recompiles."""
+        arrays, so mixed traffic never recompiles. Paged layouts take the
+        block table as one more runtime array (same single compile)."""
         cfg = self.cfg
         agent = self.agent_params
+        paged = self.kv_layout == "paged"
+        use_kernel = self.use_kernel
         policies = tuple(exit_policy.get(k)
                          for k in sorted(self.allowed_kinds))
 
-        def step(params, tokens, caches, pos, ids, pparams, temp, top_k,
-                 top_p, seeds):
+        def step(params, tokens, caches, tables, pos, ids, pparams, temp,
+                 top_k, top_p, seeds):
             ctx = PolicyContext(params=params, cfg=cfg, agent_params=agent)
             ctrl = exit_policy.select_apply(policies, ctx, ids, pparams)
-            logits, new_caches, info = decode_step(params, cfg, tokens,
-                                                   caches, pos, ctrl)
+            logits, new_caches, info = decode_step(
+                params, cfg, tokens, caches, pos, ctrl,
+                block_tables=tables if paged else None,
+                use_kernel=use_kernel)
             keys = request_keys(seeds, pos)
             nxt, _ = pick_tokens(logits, keys, temp, top_k, top_p)
             return nxt.astype(jnp.int32), new_caches, info["exit_layer"]
 
         return step
 
-    def _prefill_fn(self, params, prompt, seed, pos0, temp, top_k, top_p):
+    def _prefill_fn(self, params, prompt, seed, pos0, temp, top_k, top_p,
+                    *, max_len):
         """[1, P] prompt -> (first sampled/greedy token [1], ring caches)."""
-        h, caches, _ = prefill(params, self.cfg, prompt,
-                               max_len=self.pool.max_len)
+        h, caches, _ = prefill(params, self.cfg, prompt, max_len=max_len)
         logits = lm_logits(params, self.cfg, h[:, -1:, :])[:, 0]
         keys = request_keys(seed, pos0)
         t0, _ = pick_tokens(logits, keys, temp, top_k, top_p)
@@ -456,6 +498,16 @@ class Scheduler:
             blen = min((b for b in self.prefill_buckets
                         if b >= len(prompt)), default=keep)
             prompt = [self.pad_id] * (min(blen, keep) - len(prompt)) + prompt
+        if (self.kv_layout == "paged"
+                and (self.pool.need_blocks(len(prompt), max_new)
+                     > self.pool.blocks.capacity)):
+            # checked on the final (bucket-padded) prompt — can_admit sees
+            # this exact length, so anything accepted here always admits
+            raise ValueError(
+                f"request needs "
+                f"{self.pool.need_blocks(len(prompt), max_new)} KV blocks "
+                f"but the pool only has {self.pool.blocks.capacity} "
+                f"(raise num_blocks or lower max_new)")
         if energy_budget_j is None:
             energy_budget_j = self.class_energy_budgets_j.get(request_class)
         with self._work:
@@ -573,6 +625,28 @@ class Scheduler:
                 if not self._queue:
                     return
                 req = self._pick_next(now)
+                if (req is not None and self.kv_layout == "paged"
+                        and not self.pool.can_admit(req.prompt,
+                                                    req.max_new)):
+                    # admission is gated on free *blocks*, not just free
+                    # slots: requeue the pick (submit() bounds requests to
+                    # the pool capacity, so a retirement always unblocks
+                    # it) ...
+                    self._queue.append(req)
+                    self._blocked_admissions += 1
+                    if now - req.submitted_at > self.max_wait_s:
+                        # ... an aged pick holds the line — no younger
+                        # request may jump it indefinitely (the same
+                        # anti-starvation rule _pick_next applies)
+                        return
+                    # ... otherwise backfill: spare blocks go to the best
+                    # request that fits instead of head-of-line blocking
+                    fits = [r for r in self._queue
+                            if self.pool.can_admit(r.prompt, r.max_new)]
+                    if not fits:
+                        return
+                    req = min(fits, key=lambda r: (len(r.prompt), r.req_id))
+                    self._queue.remove(req)
             if req is not None:
                 # referenced while in flight: a crash inside _admit must
                 # still let _drain fail this request (it is neither queued
@@ -583,16 +657,29 @@ class Scheduler:
 
     def _admit(self, req: Request) -> None:
         s = req.sampling
+        paged = self.kv_layout == "paged"
+        if paged:
+            # prefill to the block-rounded prompt length: ring entries land
+            # in logical order and reshape straight into block planes
+            plen = self.pool.block_size * self.pool.blocks_for(
+                len(req.prompt))
+        else:
+            plen = self.pool.max_len
         t0, req_caches = self._prefill(
             self.params, jnp.asarray([req.prompt], jnp.int32),
             jnp.asarray([s.seed], jnp.int32),
             jnp.asarray([len(req.prompt) - 1], jnp.int32),
             jnp.asarray([s.temperature], jnp.float32),
             jnp.asarray([s.top_k], jnp.int32),
-            jnp.asarray([s.top_p], jnp.float32))
+            jnp.asarray([s.top_p], jnp.float32),
+            max_len=plen)
         slot = self.pool.alloc()
         assert slot is not None, "admission with no free slot"
-        self.pool.write(req_caches, slot)
+        if paged:
+            self.pool.write_prompt(slot, req.prompt, req_caches,
+                                   max_new=req.max_new)
+        else:
+            self.pool.write(req_caches, slot)
         req.status = "running"
         req.started_at = time.monotonic()
         req._exits_all.append(self.cfg.num_layers)   # token 0: full prefill
@@ -607,13 +694,23 @@ class Scheduler:
         self._topk[slot] = s.top_k
         self._topp[slot] = s.top_p
         self._seed[slot] = s.seed
+        self._peak_active = max(self._peak_active, self.pool.n_used)
         self._account_token(req, int(t0[0]), slot)
 
     def _tick(self) -> None:
         t_start = time.monotonic()
+        if self.kv_layout == "paged":
+            # bind (or copy-on-write) every resident's write-target block
+            # before the compiled step scatters this tick's K/V
+            for slot, req in enumerate(self._slot_req):
+                if req is not None:
+                    self.pool.prepare_append(slot, int(self._pos[slot]))
+            tables = self.pool.device_tables()
+        else:
+            tables = jnp.zeros((0,), jnp.int32)   # unused by the step
         nxt, new_caches, exitl = self._step(
             self.params, jnp.asarray(self._cur_tok), self.pool.caches,
-            jnp.asarray(self._pos), jnp.asarray(self._ids),
+            tables, jnp.asarray(self._pos), jnp.asarray(self._ids),
             {f: jnp.asarray(v) for f, v in self._pp.items()},
             jnp.asarray(self._temp), jnp.asarray(self._topk),
             jnp.asarray(self._topp), jnp.asarray(self._seed))
@@ -729,17 +826,35 @@ class Scheduler:
                 self._retire(req, slot, reason)
 
     # -- introspection ------------------------------------------------------
+    def reset_peak_stats(self) -> None:
+        """Reset high-water / cumulative admission stats — call between a
+        warmup phase and a timed run so ``stats()`` covers only the run."""
+        with self._lock:
+            self._peak_active = self.pool.n_used
+            self._blocked_admissions = 0
+            self._deferred_admissions = 0
+            if isinstance(self.pool, PagedKVPool):
+                self.pool.reset_stats()
+
     def stats(self) -> dict:
         with self._lock:
             pct = latency_percentiles(self._latencies)
             up = max(time.monotonic() - self._t0, 1e-9)
+            kv = {"kv_layout": self.kv_layout}
+            if self.kv_layout == "paged":
+                kv.update(self.pool.stats())
+            else:
+                kv["kv_bytes_total"] = self.pool.kv_bytes_total
             return {
                 "queue_depth": len(self._queue),
                 "queue_capacity": self.queue_depth,
                 "active_slots": self.pool.n_used,
+                "peak_active_slots": self._peak_active,
                 "free_slots": self.pool.n_free,
                 "max_slots": self.pool.max_slots,
                 "max_len": self.pool.max_len,
+                "blocked_admissions": self._blocked_admissions,
+                **kv,
                 "completed_requests": self._completed,
                 "fleet_tokens": self._fleet_tokens,
                 "fleet_energy_j": self._fleet_energy_j,

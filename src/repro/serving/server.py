@@ -233,14 +233,20 @@ class Handler(BaseHTTPRequestHandler):
                          "num_layers": _State.cfg.num_layers,
                          "scheduler": {
                              "max_slots": _State.scheduler.pool.max_slots,
+                             "kv_layout": _State.scheduler.kv_layout,
                              "controllers":
                                  sorted(_State.scheduler.allowed_kinds)}})
 
 
 def setup_mini(train_steps: int = 60, rl: bool = True, *,
                max_slots: int = 8, max_len: int = 320,
-               power_budget_w: float = None):
-    """Build a mini model + agent and start the scheduler (CPU demo)."""
+               power_budget_w: float = None, kv_layout: str = "paged",
+               block_size: int = 16, num_blocks: int = None):
+    """Build a mini model + agent and start the scheduler (CPU demo).
+
+    Default KV layout is **paged**: admission is gated on free cache
+    *blocks* (plus a slot), not just free slots, and repeated prompt
+    prefixes share ref-counted blocks (GET /queue reports hit rates)."""
     from repro.configs.llama32_3b import paper_mini
     from repro.data import CodeCompletionDataset
     from repro.training import train_model
@@ -267,9 +273,11 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
         allowed_kinds=kinds, tokenizer=ds.tokenizer,
         max_slots=max_slots, max_len=max_len,
         # arbitrary user text: bucket prompt lengths so prefill compiles
-        # O(#buckets) shapes, not one per distinct length
+        # O(#buckets) shapes, not one per distinct length — with paging the
+        # buckets also make shared system-prompt prefixes block-aligned
         prefill_buckets=(16, 32, 64, 96, 128, 192, 256),
-        power_budget_w=power_budget_w).start()
+        power_budget_w=power_budget_w, kv_layout=kv_layout,
+        block_size=block_size, num_blocks=num_blocks).start()
     return cfg, ds
 
 
@@ -282,10 +290,18 @@ def main():
     ap.add_argument("--max-len", type=int, default=320)
     ap.add_argument("--power-budget-w", type=float, default=None,
                     help="defer admission while modeled fleet power exceeds")
+    ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                    default="paged")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (with --kv-layout paged)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool block count (default: slots*max_len worth)")
     args = ap.parse_args()
     print("[server] preparing mini model ...")
     setup_mini(args.train_steps, rl=not args.no_rl, max_slots=args.slots,
-               max_len=args.max_len, power_budget_w=args.power_budget_w)
+               max_len=args.max_len, power_budget_w=args.power_budget_w,
+               kv_layout=args.kv_layout, block_size=args.block_size,
+               num_blocks=args.num_blocks)
     srv = ThreadingHTTPServer(("127.0.0.1", args.port), Handler)
     print(f"[server] listening on :{args.port} — POST /generate, GET /queue")
     try:

@@ -99,6 +99,56 @@ def test_top_p_samples_inside_nucleus(seed, p_pct):
 
 
 @given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_top_p_zero_keeps_exactly_top1(seed):
+    """top_p == 0.0 is the nucleus edge case: the `(csum - probs) < p`
+    prefix is empty and only the `max(keep_p, 1)` clamp keeps the
+    distribution non-empty — the filter must then degenerate to argmax of
+    the temperature-scaled logits, i.e. plain argmax, for every key."""
+    logits = _logits(seed)
+    tok, lp = pick_tokens(logits, _keys(seed), temperature=1.0, top_p=0.0)
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.argmax(np.asarray(logits), -1))
+    assert np.all(np.isfinite(np.asarray(lp)))
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_top_p_one_is_unfiltered(seed):
+    """top_p == 1.0 disables the filter: the draw must match the same
+    temperature-scaled categorical with no nucleus applied."""
+    logits = _logits(seed)
+    tok, _ = pick_tokens(logits, _keys(seed), temperature=1.0, top_p=1.0)
+    ref, _ = pick_tokens(logits, _keys(seed), temperature=1.0)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref))
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=100))
+@settings(max_examples=25, deadline=None)
+def test_tied_logit_rows_survive_top_p_edges(seed, p_pct):
+    """Rows of identical logits (csum hits p on a knife edge for every
+    prefix) must still return a valid token with a finite logprob at any
+    top_p, including the 0.0 / 1.0 endpoints."""
+    B, V = 3, 32
+    logits = jnp.zeros((B, V)) + float(seed % 5)
+    p = p_pct / 100.0
+    tok, lp = pick_tokens(logits, _keys(seed, B=B), temperature=1.0,
+                          top_p=max(p, 0.0))
+    tok = np.asarray(tok)
+    assert ((0 <= tok) & (tok < V)).all()
+    np.testing.assert_allclose(np.asarray(lp), -np.log(V), rtol=1e-5)
+    # top_p=0 on a tied row: the clamp keeps the top-1 *threshold*, and
+    # every tied token shares it — any of them is a valid draw, but the
+    # logprob must still be the exact uniform mass
+    t0, lp0 = pick_tokens(logits, _keys(seed, B=B), temperature=1.0,
+                          top_p=0.0)
+    t0 = np.asarray(t0)
+    assert ((0 <= t0) & (t0 < V)).all()
+    np.testing.assert_allclose(np.asarray(lp0), -np.log(V), rtol=1e-5)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
 @settings(max_examples=15, deadline=None)
 def test_zero_temperature_is_argmax_and_key_independent(seed):
     logits = _logits(seed)
