@@ -27,6 +27,12 @@ pool spends the same bytes on blocks that requests bind per
 Half the workload's prompts start from a small set of shared system
 prefixes, so the prefix cache's hit rate shows up too.
 
+A third phase compares **self-speculative decoding** against the full-depth
+baseline at equal accuracy (greedy speculative tokens are asserted
+identical) and against plain early exit at the same draft boundary (cheaper
+but inexact), reporting acceptance rate, accepted tokens per verify and
+modeled J/token (draft-layer + full-depth FLOPs charged separately).
+
 Both systems are shape-warmed before the timed run so XLA compile time is
 excluded — the comparison isolates steady-state scheduling behavior.
 Results also land in ``BENCH_serving.json`` at the repo root (schema-stable
@@ -75,6 +81,7 @@ class Job:
     tokens: int = 0
     energy_j: float = 0.0
     latency_s: float = 0.0
+    result_tokens: list = None   # generated ids (spec-compare exactness)
 
 
 def make_workload(n: int, rate_hz: float, vocab: int,
@@ -114,8 +121,11 @@ def run_scheduler(sched: Scheduler, jobs: list[Job]) -> dict:
     for job, h in zip(jobs, handles):
         h.result(timeout=300.0)
         job.tokens = len(h.tokens)
-        job.energy_j = h.metrics.energy_j
+        # per-request accumulated energy: for speculative requests this is
+        # the draft+verify accounting, not the per-exit-layer model
+        job.energy_j = h.energy_j
         job.latency_s = h.latency_s
+        job.result_tokens = list(h.tokens)
     wall = time.monotonic() - t0
     return _summarize(jobs, wall)
 
@@ -258,6 +268,95 @@ def run_kv_compare(params, cfg, *, rate: float, n: int, slots: int,
     return out
 
 
+def run_spec_compare(*, rate: float, n: int, slots: int, num_layers: int,
+                     d_model: int, vocab: int, block_size: int = 8,
+                     spec_window: int = 4, train_steps: int = 30,
+                     seed: int = 0) -> dict:
+    """Speculative vs plain decode at EQUAL accuracy (and the early-exit
+    arm that trades accuracy away).
+
+    Three paged schedulers serve the same greedy Poisson workload:
+
+      * ``baseline``    — policy 'none': full-depth decode, exact tokens.
+      * ``speculative`` — draft at the last exit boundary, verify
+        ``spec_window`` drafts full-depth per super-tick: tokens asserted
+        **identical** to the baseline arm, energy charged as draft-layer +
+        full-depth FLOPs (core.energy.speculative_step_energy).
+      * ``early_exit``  — 'fixed' at the same boundary: cheapest J/token
+        but its tokens are the draft head's, not the full model's (the
+        accuracy loss speculation exists to avoid).
+
+    The model is briefly LITE-fine-tuned (``train_steps``) first: the
+    LITE loss trains exit heads to agree with the full model, and the
+    acceptance rate — the whole speculative economy — tracks that
+    agreement (raw-init params accept almost nothing; the exactness
+    guarantee is unconditional either way). Depth is floored at 6 layers
+    so there is a real intermediate exit point.
+    """
+    from repro.core.exit_points import num_exits
+
+    num_layers = max(num_layers, 6)
+    cfg = paper_mini(num_layers=num_layers, d_model=d_model,
+                     vocab_size=vocab)
+    if train_steps:
+        from repro.data import CodeCompletionDataset
+        from repro.training import train_model
+        ds = CodeCompletionDataset(language="java", n_files=60,
+                                   seq_len=128, vocab_size=vocab)
+        params, _ = train_model(cfg, ds, kind="lite", steps=train_steps,
+                                batch_size=4, lr=3e-3, log_every=0)
+    else:
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+    draft_idx = num_exits(cfg) - 1            # deepest draft: best agreement
+    max_len = max(PROMPT_LENS) + max(MAX_NEWS) + spec_window
+    arms = {
+        "baseline": PolicySpec("none"),
+        "speculative": PolicySpec("speculative",
+                                  {"draft_idx": draft_idx,
+                                   "window": spec_window}),
+        "early_exit": PolicySpec("fixed", {"exit_idx": draft_idx}),
+    }
+    out: dict = {}
+    tokens_by_arm = {}
+    for arm, policy in arms.items():
+        sched = Scheduler(params, cfg, default_policy=policy,
+                          allowed_kinds=("none", "fixed", "speculative"),
+                          max_slots=slots, max_len=max_len,
+                          kv_layout="paged", block_size=block_size,
+                          spec_window=spec_window,
+                          queue_depth=max(64, n)).start()
+        rng = np.random.default_rng(123)
+        for plen in PROMPT_LENS:          # warm every shape off the clock —
+            for mn in MAX_NEWS:           # incl. every effective-window
+                sched.serve_batch(        # verify size the budgets induce
+                    [rng.integers(4, vocab, plen).tolist()], max_new=mn)
+        sched.reset_peak_stats()
+        jobs = make_workload(n, rate, vocab, seed=seed)
+        r = run_scheduler(sched, jobs)
+        st = sched.stats()
+        sched.stop()
+        tokens_by_arm[arm] = [j.result_tokens for j in jobs]
+        r.update(policy=arm)
+        if arm == "speculative":
+            r.update(acceptance_rate=st["acceptance_rate"],
+                     tokens_per_verify=st["tokens_per_verify"],
+                     spec_window=spec_window, draft_idx=draft_idx)
+        out[arm] = r
+        extra = (f" acc={r.get('acceptance_rate', 0):.2f}"
+                 f" tok/verify={r.get('tokens_per_verify', 0):.2f}"
+                 if arm == "speculative" else "")
+        print(f"[load] spec-compare {arm:12s} "
+              f"tput={r['throughput_tok_s']:7.1f} tok/s "
+              f"J/tok={r['j_per_token']:.3e}{extra}", flush=True)
+    exact = tokens_by_arm["speculative"] == tokens_by_arm["baseline"]
+    out["speculative_exact"] = bool(exact)
+    print(f"[load] speculative tokens are "
+          f"{'IDENTICAL' if exact else 'NOT IDENTICAL'} to the full-depth "
+          f"baseline (early-exit arm trades accuracy for "
+          f"{out['early_exit']['j_per_token']:.3e} J/tok)")
+    return out
+
+
 def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
         d_model: int = 96, vocab: int = 512, slots: int = 4,
         exit_idx: int = 0, block_size: int = 8, seed: int = 0,
@@ -304,6 +403,10 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
     kv_compare = run_kv_compare(params, cfg, rate=top, n=n, slots=slots,
                                 max_len=max_len, exit_idx=exit_idx,
                                 block_size=block_size, seed=seed)
+    spec_compare = run_spec_compare(rate=top, n=n, slots=slots,
+                                    num_layers=num_layers, d_model=d_model,
+                                    vocab=vocab, block_size=block_size,
+                                    seed=seed)
 
     payload = {
         "bench": "serving_load",
@@ -315,6 +418,7 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
         "results": results,
         "speedup_at_top_rate": speedup,
         "kv_compare": kv_compare,
+        "spec_compare": spec_compare,
     }
     if save:
         wrote = []

@@ -28,6 +28,46 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 # Token picking (runtime-parameterized)
 # ---------------------------------------------------------------------------
+def _filtered_logits(logits: Array, t: Array, k: Array, p: Array) -> Array:
+    """Temperature-scaled logits with top-k / nucleus filters applied
+    (-inf outside the keep set). ``logits`` [B, V] f32; ``t``/``k``/``p``
+    per-row arrays. The single implementation behind :func:`pick_tokens`
+    and :func:`sampling_probs`, so the distribution a draft was sampled
+    from and the one its verifier scores can never drift."""
+    B, V = logits.shape
+    z = logits / jnp.maximum(t, 1e-6)[:, None]
+    z_sorted = jnp.sort(z, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(z_sorted, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # nucleus: smallest prefix whose mass reaches top_p (>= 1 token)
+    keep_p = jnp.sum((csum - probs) < p[:, None], axis=-1)
+    keep_k = jnp.where(k <= 0, V, jnp.clip(k, 1, V))
+    n_keep = jnp.minimum(jnp.maximum(keep_p, 1), keep_k)
+    z_min = jnp.take_along_axis(z_sorted, (n_keep - 1)[:, None], axis=-1)
+    return jnp.where(z >= z_min, z, -jnp.inf)
+
+
+def sampling_probs(logits: Array, temperature=0.0, top_k=0,
+                   top_p=1.0) -> Array:
+    """The exact next-token distribution :func:`pick_tokens` draws from.
+
+    [B, V] probabilities: temperature-scaled, top-k/top-p-filtered softmax;
+    greedy rows (``temperature <= 0``) collapse to a one-hot at the argmax.
+    Speculative rejection-sampling acceptance (core/speculative.py) scores
+    draft and target tokens under this function, which is what makes
+    sampled speculative output distribution-identical to the baseline.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+    p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
+    probs = jax.nn.softmax(_filtered_logits(logits, t, k, p), axis=-1)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), V,
+                            dtype=jnp.float32)
+    return jnp.where((t <= 0.0)[:, None], onehot, probs)
+
+
 def pick_tokens(logits: Array, key: Array, temperature=0.0, top_k=0,
                 top_p=1.0):
     """Pick next tokens from ``logits [B, V]``.
@@ -61,18 +101,7 @@ def pick_tokens(logits: Array, key: Array, temperature=0.0, top_k=0,
     t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
     k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
     p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
-
-    # temperature-scaled logits, sorted descending per row
-    z = logits / jnp.maximum(t, 1e-6)[:, None]
-    z_sorted = jnp.sort(z, axis=-1)[:, ::-1]
-    probs = jax.nn.softmax(z_sorted, axis=-1)
-    csum = jnp.cumsum(probs, axis=-1)
-    # nucleus: smallest prefix whose mass reaches top_p (>= 1 token)
-    keep_p = jnp.sum((csum - probs) < p[:, None], axis=-1)
-    keep_k = jnp.where(k <= 0, V, jnp.clip(k, 1, V))
-    n_keep = jnp.minimum(jnp.maximum(keep_p, 1), keep_k)
-    z_min = jnp.take_along_axis(z_sorted, (n_keep - 1)[:, None], axis=-1)
-    z_filt = jnp.where(z >= z_min, z, -jnp.inf)
+    z_filt = _filtered_logits(logits, t, k, p)
 
     if key.ndim == 2:                   # per-row keys
         sampled = jax.vmap(jax.random.categorical)(key, z_filt)

@@ -153,6 +153,55 @@ def full_token_energy(cfg: ModelConfig, ctx_len: int) -> float:
     return float(decode_token_energy(cfg, ctx_len, cfg.num_layers))
 
 
+def draft_token_energy(cfg: ModelConfig, ctx_len: int,
+                       draft_layer: int) -> float:
+    """Energy (J) of one self-speculative *draft* step.
+
+    The draft pass is the early-exit pass frozen at ``draft_layer``
+    (1-indexed layers used): shallow layers run in full, deeper layers pay
+    only K/V propagation, and the shared LM head is read once as the exit
+    head — exactly :func:`decode_token_energy` at the draft boundary.
+    """
+    return float(decode_token_energy(cfg, ctx_len, draft_layer))
+
+
+def verify_window_energy(cfg: ModelConfig, ctx_len: int, S: int) -> float:
+    """Energy (J) of ONE full-depth pass scoring an S-token window.
+
+    This is where speculation wins: decode is bandwidth-bound, and the
+    verify pass streams each layer's weights and the KV cache **once** for
+    all S queries (the window kernel DMAs every cache block a single time
+    — kernels/verify_attn.py). So FLOPs and per-token cache *writes* scale
+    with S while the dominant weight/cache-read traffic is paid once;
+    at decode batch sizes the roofline stays bytes-bound and verifying
+    S positions costs barely more than one step.
+    """
+    costs = stack_costs(cfg, ctx_len)
+    h_fl, h_by = head_cost(cfg)
+    fl = S * (sum(c.flops for c in costs) + h_fl)
+    per_tok_write = sum(c.kv_bytes for c in costs)
+    by = sum(c.bytes for c in costs) + h_by + (S - 1) * per_tok_write
+    return _energy(fl, by)
+
+
+def speculative_step_energy(cfg: ModelConfig, ctx_len: int,
+                            draft_layer: int, n_draft: int,
+                            n_verify: int) -> dict:
+    """Modeled J of one draft-then-verify super-step at ~``ctx_len``.
+
+    ``n_draft`` sequential shallow draft steps are charged at the draft
+    boundary; the ``n_verify``-position window is charged as one fused
+    full-depth pass (:func:`verify_window_energy`). Keeping the two terms
+    separate is what lets the scheduler report where the joules went: a
+    high acceptance rate amortizes the verify pass over many emitted
+    tokens, a low one pays it for a single correction.
+    """
+    e_draft = draft_token_energy(cfg, ctx_len, draft_layer) * n_draft
+    e_verify = verify_window_energy(cfg, ctx_len, n_verify)
+    return {"draft_j": e_draft, "verify_j": e_verify,
+            "total_j": e_draft + e_verify}
+
+
 def controller_overhead_energy(cfg: ModelConfig, n_checks,
                                hidden: int = 64, n_hidden: int = 2,
                                with_head_check: bool = False,

@@ -369,3 +369,18 @@ def _entropy(ctx, h, exit_idx, p):
 def _fixed(ctx, h, exit_idx, p):
     """Exit every token at exit point >= ``exit_idx`` (segment index)."""
     return _rows(h, jnp.float32(exit_idx) >= p["exit_idx"])
+
+
+@register("speculative", 5, defaults={"draft_idx": 0.0, "window": 4.0,
+                                      "accept_threshold": 1.0})
+def _speculative(ctx, h, exit_idx, p):
+    """Self-speculative draft pass: exit at the draft boundary (like
+    ``fixed`` at ``draft_idx``). Entry points that understand speculation
+    (Scheduler, Engine, core/speculative.py) treat the exited tokens as
+    *drafts* and verify up to ``window`` of them full-depth in one batched
+    step — greedy output is then bit-identical to the full model. Under a
+    plain ``generate`` call the policy degrades to ``fixed`` early exit.
+    ``accept_threshold`` loosens greedy acceptance (a draft also passes
+    when its full-depth probability reaches the threshold); sampled rows
+    always use exact rejection sampling and ignore it."""
+    return _rows(h, jnp.float32(exit_idx) >= p["draft_idx"])

@@ -1,0 +1,352 @@
+"""Self-speculative decoding: early-exit drafts, full-depth verification.
+
+GREEN-CODE's early exit trades accuracy for energy: a token that leaves at
+the draft layer is *emitted* from the draft layer. LayerSkip-style
+self-speculation removes that trade-off with the same machinery: the exit
+head at a configurable draft boundary *proposes* up to ``k`` tokens (a pass
+that is exactly the paper's early-exit decode, frozen at ``draft_idx``),
+then one full-depth pass over the ``[B, k+1]`` window re-scores every
+proposal (``models.transformer.verify_step``). Accepted drafts are
+guaranteed exact:
+
+  * greedy rows accept a draft iff it equals the full model's argmax — the
+    emitted sequence is **bit-identical** to non-speculative full-depth
+    decoding (the reference verify path runs the very same single-token
+    arithmetic, scanned);
+  * sampled rows use standard rejection sampling — accept ``d`` with
+    probability ``min(1, p_target(d) / p_draft(d))``, resample rejects from
+    the normalized residual ``max(p_target - p_draft, 0)`` — so output is
+    **distribution-identical** to sampling the full model, with both
+    distributions produced by the one shared
+    :func:`repro.core.early_exit.sampling_probs` implementation;
+  * ``accept_threshold < 1`` optionally loosens greedy acceptance (a draft
+    also passes when its full-depth probability reaches the threshold),
+    trading exactness for acceptance rate.
+
+Rejected positions roll back: contiguous ring caches invalidate their
+``pos`` entries (``rewind_ring``), paged pools unbind the rejected block
+appends (``PagedKVPool.rollback_append``) — K/V garbage stays where it is,
+masked exactly like never-written slots.
+
+Energy: drafts are charged at the draft boundary, verification at full
+depth (``core.energy.speculative_step_energy``); the win is wall-clock and
+amortized verify cost, not per-layer skipping. Cf. GREEN-CODE
+(arXiv 2501.11006) for the exit-head machinery and the energy-measurement
+framing of Stojkovic et al. (arXiv 2403.20306) for why joules per emitted
+token is the metric that has to come down.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import energy
+from repro.core.early_exit import (_sampling_args, pick_tokens, request_keys,
+                                   sampling_probs)
+from repro.core.exit_points import segment_boundaries
+from repro.models.transformer import (decode_step, lm_logits, prefill,
+                                      rewind_ring, ring_to_paged,
+                                      speculative_unsupported, verify_step)
+
+Array = jax.Array
+
+SPEC_POLICY = "speculative"
+
+
+def draft_boundary_layer(cfg: ModelConfig, draft_idx) -> int:
+    """Layers used by a draft that exits at segment index ``draft_idx``."""
+    bounds = segment_boundaries(cfg)
+    return bounds[int(np.clip(int(draft_idx), 0, len(bounds) - 1))]
+
+
+def draft_exit_fn(draft_idx):
+    """decode_step controller: every row exits at its own draft boundary.
+
+    ``draft_idx`` may be a scalar or a per-row [B] array of segment
+    indices (the same semantics as the ``fixed`` policy's ``exit_idx``).
+    """
+    di = jnp.asarray(draft_idx, jnp.float32)
+
+    def fn(h, exit_idx):
+        return jnp.broadcast_to(
+            (jnp.float32(exit_idx) >= di).astype(jnp.float32),
+            (h.shape[0],))
+
+    return fn
+
+
+def _uniform(seed: int, pos: int, salt: int) -> float:
+    """Deterministic U(0,1) keyed by (request seed, absolute position).
+
+    Independent of batch composition and slot index — the acceptance
+    analogue of :func:`repro.core.early_exit.request_keys`.
+    """
+    rng = np.random.default_rng([int(seed) & 0x7FFFFFFF, int(pos), salt])
+    return float(rng.random())
+
+
+def _residual_sample(seed: int, pos: int, p_t: np.ndarray,
+                     p_d: np.ndarray) -> int:
+    """Sample the rejection-sampling residual ``max(p_t - p_d, 0)``."""
+    resid = np.clip(p_t - p_d, 0.0, None)
+    tot = resid.sum()
+    if tot <= 0.0:                       # p_d covers p_t: fall back to p_t
+        resid, tot = p_t, p_t.sum()
+    rng = np.random.default_rng([int(seed) & 0x7FFFFFFF, int(pos), 2])
+    return int(rng.choice(len(resid), p=resid / tot))
+
+
+def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
+                  windows, temperature=0.0, top_k=0, top_p=1.0, seeds=None,
+                  pos0=None, accept_threshold=1.0,
+                  draft_logits: Optional[np.ndarray] = None):
+    """Accept/reject a draft window against full-depth verify logits.
+
+    draft_tokens: [B, K] proposals; target_logits: [B, K+1, V] full-depth
+    scores (entry j conditions on the window up to and including draft j).
+    ``windows`` [B] caps how many drafts each row may accept (rows ignore
+    drafts beyond their own window). Greedy rows (``temperature <= 0``)
+    accept a draft iff it is the target argmax — or, with
+    ``accept_threshold < 1``, iff its target probability reaches the
+    threshold. Sampled rows run standard rejection sampling against the
+    shared :func:`sampling_probs` distributions (``draft_logits`` [B, K, V]
+    required) with draws keyed by (seed, absolute position).
+
+    Returns ``(n_accept [B], next_token [B], emit_logprobs [B, K+1])`` —
+    row b emits ``draft_tokens[b, :n_accept[b]]`` then ``next_token[b]``
+    (the correction / bonus token), whose log-probs under the full
+    unscaled head sit in ``emit_logprobs[b, :n_accept[b] + 1]``.
+    """
+    draft_tokens = np.asarray(draft_tokens)
+    target_logits = np.asarray(target_logits, np.float32)
+    B, K = draft_tokens.shape
+    windows = np.broadcast_to(np.asarray(windows, np.int64), (B,))
+    temp = np.broadcast_to(np.asarray(temperature, np.float32), (B,))
+    thr = np.broadcast_to(np.asarray(accept_threshold, np.float32), (B,))
+    seeds = np.broadcast_to(np.asarray(0 if seeds is None else seeds,
+                                       np.int64), (B,))
+    pos0 = np.broadcast_to(np.asarray(0 if pos0 is None else pos0,
+                                      np.int64), (B,))
+
+    logp = np.asarray(jax.nn.log_softmax(jnp.asarray(target_logits),
+                                         axis=-1))
+    any_sampled = bool((temp > 0).any())
+    lenient = bool((thr < 1.0).any())
+    if any_sampled:
+        V = target_logits.shape[-1]
+        flat = sampling_probs(
+            jnp.asarray(target_logits).reshape(B * (K + 1), V),
+            jnp.repeat(jnp.asarray(temp), K + 1),
+            jnp.repeat(jnp.broadcast_to(jnp.asarray(top_k, jnp.int32),
+                                        (B,)), K + 1),
+            jnp.repeat(jnp.broadcast_to(jnp.asarray(top_p, jnp.float32),
+                                        (B,)), K + 1))
+        p_t = np.asarray(flat).reshape(B, K + 1, V)
+        if K > 0:                       # K == 0: nothing to accept/reject
+            if draft_logits is None:
+                raise ValueError("sampled rows need draft_logits for "
+                                 "rejection sampling")
+            flat = sampling_probs(
+                jnp.asarray(draft_logits, jnp.float32).reshape(B * K, V),
+                jnp.repeat(jnp.asarray(temp), K),
+                jnp.repeat(jnp.broadcast_to(jnp.asarray(top_k, jnp.int32),
+                                            (B,)), K),
+                jnp.repeat(jnp.broadcast_to(jnp.asarray(top_p, jnp.float32),
+                                            (B,)), K))
+            p_d = np.asarray(flat).reshape(B, K, V)
+
+    n_accept = np.zeros(B, np.int64)
+    next_tok = np.zeros(B, np.int64)
+    emit_lp = np.zeros((B, K + 1), np.float32)
+    for b in range(B):
+        w = int(min(windows[b], K))
+        n = 0
+        forced: Optional[int] = None
+        while n < w:
+            d = int(draft_tokens[b, n])
+            if temp[b] <= 0.0:
+                ok = d == int(np.argmax(target_logits[b, n]))
+                if not ok and lenient and thr[b] < 1.0:
+                    # lenient mode: a near-argmax draft passes on its
+                    # full-precision head probability, trading exactness
+                    # for acceptance rate
+                    ok = bool(np.exp(logp[b, n, d]) >= thr[b])
+            else:
+                ratio = p_t[b, n, d] / max(float(p_d[b, n, d]), 1e-30)
+                ok = _uniform(seeds[b], pos0[b] + n, 1) <= ratio
+                if not ok:
+                    forced = _residual_sample(seeds[b], pos0[b] + n,
+                                              p_t[b, n], p_d[b, n])
+            if not ok:
+                break
+            emit_lp[b, n] = logp[b, n, d]
+            n += 1
+        if forced is not None:
+            t = forced
+        elif temp[b] <= 0.0:
+            t = int(np.argmax(target_logits[b, n]))
+        else:                            # bonus draw from the target dist
+            rng = np.random.default_rng([int(seeds[b]) & 0x7FFFFFFF,
+                                         int(pos0[b] + n), 3])
+            t = int(rng.choice(p_t.shape[-1], p=p_t[b, n]
+                               / max(p_t[b, n].sum(), 1e-30)))
+        n_accept[b] = n
+        next_tok[b] = t
+        emit_lp[b, n] = logp[b, n, t]
+    return n_accept, next_tok, emit_lp
+
+
+def speculative_generate(params, cfg: ModelConfig, prompt: Array,
+                         steps: int, *, draft_idx=0, window=4,
+                         accept_threshold=1.0, sampling=None,
+                         temperature: float = 0.0, seeds=None,
+                         seed_offsets=None, max_len: Optional[int] = None,
+                         kv_block_size: Optional[int] = None,
+                         use_kernel: bool = False):
+    """Draft-then-verify generation (the offline mirror of the scheduler's
+    speculative super-tick; ``Engine.serve`` routes speculative policies
+    here).
+
+    prompt: [B, S0] token ids. ``draft_idx`` / ``window`` /
+    ``accept_threshold`` are scalars or per-row arrays (rows draft the
+    batch-max window; smaller windows just accept fewer). Greedy output is
+    bit-identical to ``generate(..., policy=None)``; sampled rows need
+    ``seeds`` (defaults to ``arange(B)``) and are distribution-identical
+    to the baseline, drawn from a different (deterministic,
+    batch-independent) stream.
+
+    Returns the ``generate`` dict (tokens / exit_layers / logprobs —
+    emitted tokens are full-depth-verified, so their exit layer is
+    ``cfg.num_layers``) plus ``energy_j`` ([B] modeled draft + verify
+    joules per row) and speculation stats: ``n_verifies``, ``n_drafted``,
+    ``n_accepted``, ``acceptance_rate``, ``tokens_per_verify``.
+    """
+    reason = speculative_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"speculative decoding unsupported for "
+                         f"{cfg.name}: {reason}")
+    B, S0 = prompt.shape
+    windows = np.broadcast_to(np.asarray(window, np.int64), (B,)).copy()
+    if (windows < 1).any():
+        raise ValueError("speculative window must be >= 1")
+    K = int(windows.max())
+    temp, top_k, top_p = _sampling_args(sampling, temperature)
+    sampled = bool(np.any(np.asarray(temp, np.float32) > 0))
+    if seeds is None:
+        seeds = np.arange(B) if sampled else np.zeros(B, np.int64)
+    seeds = np.broadcast_to(np.asarray(seeds, np.int64), (B,))
+    off = np.broadcast_to(np.asarray(0 if seed_offsets is None
+                                     else seed_offsets, np.int64), (B,))
+
+    max_len = max(max_len or 0, S0 + steps + K)
+    if kv_block_size:
+        max_len += (-max_len) % kv_block_size
+    h, caches, _ = prefill(params, cfg, prompt, max_len=max_len)
+    logits0 = lm_logits(params, cfg, h[:, -1:, :])[:, 0]
+    tables = None
+    if kv_block_size:
+        caches, tables = ring_to_paged(cfg, caches, kv_block_size)
+
+    k0 = request_keys(jnp.asarray(seeds, jnp.int32),
+                      jnp.full((B,), S0 - 1, jnp.int32)
+                      - jnp.asarray(off, jnp.int32))
+    t0, lp0 = pick_tokens(logits0, k0, temp, top_k, top_p)
+
+    draft_fn = draft_exit_fn(draft_idx)
+
+    def _draft(params, tok, caches, pos, keys):
+        logits, new_caches, _ = decode_step(
+            params, cfg, tok, caches, pos, draft_fn,
+            block_tables=tables, use_kernel=use_kernel)
+        nxt, _ = pick_tokens(logits, keys, temp, top_k, top_p)
+        return nxt.astype(jnp.int32), new_caches, logits.astype(jnp.float32)
+
+    def _verify(params, win, caches, pos0):
+        return verify_step(params, cfg, win, caches, pos0,
+                           block_tables=tables, use_kernel=use_kernel)
+
+    draft_jit = jax.jit(_draft, donate_argnums=2)
+    verify_jit = jax.jit(_verify, donate_argnums=2)
+    rewind_jit = jax.jit(partial(rewind_ring, cfg), donate_argnums=0)
+
+    pos = np.full(B, S0, np.int64)
+    cur = np.asarray(t0, np.int64).copy()
+    toks = np.zeros((B, steps), np.int64)
+    lps = np.zeros((B, steps), np.float32)
+    toks[:, 0] = cur
+    lps[:, 0] = np.asarray(lp0)
+    produced = np.ones(B, np.int64)
+    n_verifies = n_drafted = n_accepted = 0
+    # per-row modeled energy: token 0 is a full-depth pick off prefill,
+    # every super-step charges K drafts at the row's boundary plus one
+    # fused verify pass (core.energy.speculative_step_energy semantics)
+    di = np.broadcast_to(np.asarray(draft_idx, np.int64), (B,))
+    e_draft_row = np.asarray(
+        [energy.draft_token_energy(cfg, S0, draft_boundary_layer(cfg, d))
+         for d in di])
+    e_verify = energy.verify_window_energy(cfg, S0, K + 1)
+    energy_j = np.full(B, energy.full_token_energy(cfg, S0))
+
+    while int(produced.min()) < steps:
+        p0 = pos.copy()
+        win = np.zeros((B, K + 1), np.int64)
+        win[:, 0] = cur
+        dlogits = []
+        tok = jnp.asarray(cur, jnp.int32)
+        for j in range(1, K + 1):
+            pj = jnp.asarray(p0 + j - 1, jnp.int32)
+            keys = request_keys(jnp.asarray(seeds, jnp.int32),
+                                pj - jnp.asarray(off, jnp.int32))
+            tok, caches, dl = draft_jit(params, tok, caches, pj, keys)
+            win[:, j] = np.asarray(tok)
+            if sampled:
+                dlogits.append(np.asarray(dl))
+        if tables is None:
+            # the verify scan must see clean slots: the inclusive cache
+            # mask plus the explicit self term would double-count a
+            # still-valid draft entry at the query's own position
+            caches = rewind_jit(caches, jnp.asarray(p0 - 1, jnp.int32))
+        tlogits, caches = verify_jit(params, jnp.asarray(win, jnp.int32),
+                                     caches, jnp.asarray(p0, jnp.int32))
+        live = produced < steps
+        eff_w = np.minimum(windows, np.maximum(steps - produced - 1, 0))
+        n_acc, nxt, emit_lp = accept_drafts(
+            win[:, 1:], np.asarray(tlogits), windows=np.where(live, eff_w,
+                                                              0),
+            temperature=temp, top_k=top_k, top_p=top_p, seeds=seeds,
+            # draws are keyed by the row's own (unpadded) positions, like
+            # every pick_tokens key above — batch-composition independent
+            pos0=p0 - off, accept_threshold=accept_threshold,
+            draft_logits=np.stack(dlogits, axis=1) if sampled else None)
+        keep = np.where(live, p0 + n_acc, p0 - 1)
+        if tables is None:
+            caches = rewind_jit(caches, jnp.asarray(keep, jnp.int32))
+        for b in np.nonzero(live)[0]:
+            m = int(n_acc[b]) + 1
+            emit = np.concatenate([win[b, 1:1 + n_acc[b]], [nxt[b]]])
+            toks[b, produced[b]:produced[b] + m] = emit
+            lps[b, produced[b]:produced[b] + m] = emit_lp[b, :m]
+            produced[b] += m
+            pos[b] = p0[b] + m
+            cur[b] = nxt[b]
+            energy_j[b] += K * e_draft_row[b] + e_verify
+            n_drafted += int(eff_w[b])
+            n_accepted += int(n_acc[b])
+            n_verifies += 1
+
+    return {
+        "tokens": jnp.asarray(toks[:, :steps], jnp.int32),
+        "exit_layers": jnp.full((B, steps), cfg.num_layers, jnp.int32),
+        "logprobs": jnp.asarray(lps[:, :steps]),
+        "energy_j": energy_j,
+        "n_verifies": n_verifies,
+        "n_drafted": n_drafted,
+        "n_accepted": n_accepted,
+        "acceptance_rate": n_accepted / max(n_drafted, 1),
+        "tokens_per_verify": (int(produced.sum()) - B) / max(n_verifies, 1),
+    }

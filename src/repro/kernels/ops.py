@@ -17,6 +17,8 @@ from repro.kernels.exit_head import exit_check as _exit_check
 from repro.kernels.paged_decode_attn import \
     paged_flash_decode as _paged_flash_decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels.verify_attn import \
+    paged_verify_window as _paged_verify_window
 
 _MODE = os.environ.get("REPRO_KERNELS", "kernel")
 _INTERPRET = jax.default_backend() != "tpu"
@@ -48,6 +50,19 @@ def paged_flash_decode(q, k_pages, v_pages, tables, pos, k_scale=None,
     return _paged_flash_decode(q, k_pages, v_pages, tables, pos,
                                k_scale, v_scale, softcap=softcap,
                                interpret=_INTERPRET)
+
+
+def paged_verify(q, k_pages, v_pages, tables, pos0, k_scale=None,
+                 v_scale=None, *, softcap: float = 0.0):
+    """Multi-token GQA verify window through a block table (query j at
+    position pos0 + j; insert-then-attend; int8 pages dequantize in-kernel
+    when scales are given)."""
+    if _MODE == "ref":
+        return _ref.paged_verify_ref(q, k_pages, v_pages, tables, pos0,
+                                     k_scale, v_scale, softcap)
+    return _paged_verify_window(q, k_pages, v_pages, tables, pos0,
+                                k_scale, v_scale, softcap=softcap,
+                                interpret=_INTERPRET)
 
 
 def ssd_scan(x, dt, A, B, C, chunk: int = 256):

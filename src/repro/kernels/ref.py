@@ -4,6 +4,7 @@ Each function is the semantic ground truth for the matching kernel:
   exit_check_ref   <-> exit_head.py
   flash_decode_ref <-> decode_attn.py
   paged_decode_ref <-> paged_decode_attn.py
+  paged_verify_ref <-> verify_attn.py
   ssd_scan_ref     <-> ssd_scan.py
 """
 from __future__ import annotations
@@ -86,6 +87,51 @@ def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     kv_pos = jnp.where(lpos[None, :] <= pos[:, None], lpos[None, :], -1)
     return flash_decode_ref(q.astype(jnp.float32), k, v, kv_pos, pos,
                             0, softcap).astype(q.dtype)
+
+
+def paged_verify_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, pos0: jax.Array,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None,
+                     softcap: float = 0.0):
+    """Multi-token GQA verify window against a paged (block-table) cache.
+
+    q: [B, S, KH, G, d] — query j sits at absolute position ``pos0 + j``
+    and attends logical positions ``<= pos0 + j`` (the window's K/V is
+    already inserted: insert-then-attend). k_pages/v_pages:
+    [num_blocks, block_size, KH, d] (int8 planes take ``k_scale``/
+    ``v_scale`` [num_blocks, block_size, KH]); tables: [B, nb] block ids;
+    pos0: [B]. Gathers each row's chain into logical order and computes the
+    masked softmax directly. Returns out [B, S, KH, G, d] (q dtype).
+    """
+    B, nb = tables.shape
+    S = q.shape[1]
+    bs = k_pages.shape[1]
+    d = q.shape[-1]
+    tbl = jnp.clip(tables, 0, k_pages.shape[0] - 1)
+
+    def gather(pages):
+        g = pages[tbl]                              # [B, nb, bs, ...]
+        return g.reshape(B, nb * bs, *pages.shape[2:])
+
+    k, v = gather(k_pages), gather(v_pages)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * gather(k_scale)[..., None]
+        v = v.astype(jnp.float32) * gather(v_scale)[..., None]
+    s = jnp.einsum("bskgd,btkd->bksgt",
+                   q.astype(jnp.float32) * d ** -0.5,
+                   k.astype(jnp.float32))           # [B, KH, S, G, T]
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    lpos = jnp.arange(nb * bs)
+    qpos = pos0[:, None] + jnp.arange(S)[None, :]   # [B, S]
+    mask = lpos[None, None, :] <= qpos[:, :, None]  # [B, S, T]
+    s = jnp.where(mask[:, None, :, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bksgt,btkd->bskgd", p, v.astype(jnp.float32))
+    denom = jnp.transpose(p.sum(axis=-1), (0, 2, 1, 3))  # [B, S, KH, G]
+    return (out / denom[..., None]).astype(q.dtype)
 
 
 def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,

@@ -1,0 +1,168 @@
+"""Paged verify-window attention: q_len > 1 flash decode through a block
+table.
+
+Self-speculative verification (core/speculative.py) scores a short draft
+window of S tokens full-depth in one pass. Per layer that means S queries
+per row attending the row's paged KV chain *plus* the window itself —
+query j at absolute position ``pos0 + j`` sees logical positions
+``<= pos0 + j`` (the window's K/V is inserted before the call:
+insert-then-attend, matching paged_decode_attn.py).
+
+Same structure as the single-token paged kernel — the grid walks
+``(batch, block)`` with scalar-prefetched block-table index maps so the
+chain gather never materializes in HBM — but the flash statistics carry an
+extra window dimension: running (max, denom, acc) live in VMEM scratch as
+``[KH, S, G]`` / ``[KH, S, G, d]`` across the sequential block dimension,
+and the causal mask is per query row. int8 caches dequantize in-VMEM from
+their f32 scale planes, exactly like the decode kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_body(q_ref, k, v, pos_ref, o_ref, m_s, l_s, acc_s, *,
+                block_size: int, softcap: float, scale: float):
+    """One (batch row, block) flash step; ``k``/``v`` are already f32."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # [S, KH, G, d]
+    S = q.shape[0]
+    pos0 = pos_ref[b]                               # scalar
+
+    # s[KH, S, G, bs] = sum_d q[s, kh, g, d] * k[t, kh, d]
+    s = jax.lax.dot_general(
+        q, k, (((3,), (2,)), ((1,), (1,))),
+        preferred_element_type=jnp.float32)
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    # query row w sits at absolute position pos0 + w and may attend logical
+    # positions <= pos0 + w (insert-then-attend); entry t of this block is
+    # logical position j*bs + t
+    lpos = (j * block_size
+            + jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, block_size), 3))
+    qpos = pos0 + jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, block_size),
+                                           1)
+    s = jnp.where(lpos <= qpos, s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, s.max(axis=-1))      # [KH, S, G]
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[..., None])               # [KH, S, G, bs]
+    l_s[...] = l_s[...] * alpha + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((3,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)         # [KH, S, G, d]
+    acc_s[...] = acc_s[...] * alpha[..., None] + pv
+    m_s[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        out = acc_s[...] / denom[..., None]         # [KH, S, G, d]
+        o_ref[0] = jnp.transpose(out, (1, 0, 2, 3)).astype(o_ref.dtype)
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_s, l_s, acc_s, **kw):
+    del tbl_ref  # consumed by the BlockSpec index maps
+    _flash_body(q_ref, k_ref[0].astype(jnp.float32),
+                v_ref[0].astype(jnp.float32), pos_ref, o_ref,
+                m_s, l_s, acc_s, **kw)
+
+
+def _kernel_int8(tbl_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                 o_ref, m_s, l_s, acc_s, **kw):
+    """int8 variant: dequantize the gathered block in VMEM, then attend."""
+    del tbl_ref
+    k = (k_ref[0].astype(jnp.float32)
+         * ks_ref[0].astype(jnp.float32)[..., None])
+    v = (v_ref[0].astype(jnp.float32)
+         * vs_ref[0].astype(jnp.float32)[..., None])
+    _flash_body(q_ref, k, v, pos_ref, o_ref, m_s, l_s, acc_s, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_verify_window(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, tables: jax.Array,
+                        pos0: jax.Array,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None, *,
+                        softcap: float = 0.0, interpret: bool = True):
+    """Multi-token GQA verify window against a paged cache.
+
+    q: [B, S, KH, G, d] (query j at absolute position ``pos0 + j``);
+    k_pages/v_pages: [num_blocks, block_size, KH, d] (float or int8 —
+    int8 requires ``k_scale``/``v_scale`` [num_blocks, block_size, KH]
+    f32); tables: [B, nb] int32 block ids (padded rows carry any in-range
+    id — masked by position); pos0: [B] absolute position of the first
+    window token, whose K/V (and the rest of the window's) must already be
+    inserted. See ref.paged_verify_ref.
+    """
+    B, S, KH, G, d = q.shape
+    bs = k_pages.shape[1]
+    nb = tables.shape[1]
+    int8 = k_scale is not None
+
+    def page_map(b, j, tbl, p):
+        del p
+        return (jnp.clip(tbl[b, j], 0, k_pages.shape[0] - 1), 0, 0, 0)
+
+    def scale_map(b, j, tbl, p):
+        del p
+        return (jnp.clip(tbl[b, j], 0, k_pages.shape[0] - 1), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, S, KH, G, d), lambda b, j, tbl, p: (b, 0, 0, 0, 0)),
+        pl.BlockSpec((1, bs, KH, d), page_map),
+        pl.BlockSpec((1, bs, KH, d), page_map),
+    ]
+    if int8:
+        in_specs += [pl.BlockSpec((1, bs, KH), scale_map),
+                     pl.BlockSpec((1, bs, KH), scale_map)]
+    kernel = functools.partial(_kernel_int8 if int8 else _kernel,
+                               block_size=bs, softcap=softcap,
+                               scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, S, KH, G, d),
+                               lambda b, j, tbl, p: (b, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KH, S, G), jnp.float32),
+            pltpu.VMEM((KH, S, G), jnp.float32),
+            pltpu.VMEM((KH, S, G, d), jnp.float32),
+        ],
+    )
+    args = (tables.astype(jnp.int32), pos0.astype(jnp.int32), q,
+            k_pages, v_pages)
+    if int8:
+        args += (k_scale, v_scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, KH, G, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)

@@ -28,13 +28,17 @@ from repro.serving.metrics import aggregate_metrics, codebleu_like, rouge_l
 from repro.training.checkpoint import load_pytree
 
 
-def build_spec(kind: str, threshold: float, exit_idx: int = 0) -> PolicySpec:
+def build_spec(kind: str, threshold: float, exit_idx: int = 0,
+               draft_idx: int = 0, spec_window: int = 4) -> PolicySpec:
     pol = exit_policy.get(kind)
     params = {}
     if "threshold" in pol.defaults:
         params["threshold"] = threshold
     if "exit_idx" in pol.defaults:
         params["exit_idx"] = float(exit_idx)
+    if "draft_idx" in pol.defaults:       # speculative: draft-then-verify
+        params["draft_idx"] = float(draft_idx)
+        params["window"] = float(spec_window)
     return PolicySpec(kind, params)
 
 
@@ -46,6 +50,11 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.9)
     ap.add_argument("--exit-idx", type=int, default=0,
                     help="segment index for --controller fixed")
+    ap.add_argument("--draft-idx", type=int, default=0,
+                    help="draft exit point for --controller speculative")
+    ap.add_argument("--spec-window", type=int, default=4,
+                    help="draft tokens per verify for --controller "
+                         "speculative")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -96,7 +105,8 @@ def main():
                 params, cfg, ds, n_episodes=24, gen_tokens=8,
                 ppo=PPOConfig(total_steps=30_000), log_every=5)
 
-    spec = build_spec(args.controller, args.threshold, args.exit_idx)
+    spec = build_spec(args.controller, args.threshold, args.exit_idx,
+                      args.draft_idx, args.spec_window)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
     tasks = ds.completion_tasks("test", args.requests, max_context=192)
@@ -116,6 +126,7 @@ def main():
                           max_new=args.max_new,
                           kv_layout=args.kv_layout,
                           block_size=args.block_size,
+                          spec_window=args.spec_window,
                           queue_depth=max(64, args.requests)).start()
         try:
             handles = [sched.submit(r) for r in reqs]
@@ -154,6 +165,10 @@ def main():
             print(f"  [kv] paged: {st['blocks_in_use']}/{st['num_blocks']} "
                   f"blocks in use, peak {st['peak_kv_bytes']} B, "
                   f"prefix hit rate {st['prefix_hit_rate']:.2f}")
+        if "acceptance_rate" in st:
+            print(f"  [spec] window={st['spec_window']} "
+                  f"acceptance={st['acceptance_rate']:.2f} "
+                  f"tokens/verify={st['tokens_per_verify']:.2f}")
         print(f"  [scheduler] slots={st['max_slots']} "
               f"throughput={st['throughput_tok_s']:.1f} tok/s "
               f"fleet J/tok={st['fleet_j_per_token']:.3e} "

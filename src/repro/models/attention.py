@@ -210,6 +210,25 @@ def decode_qkv(p, cfg: ModelConfig, x: Array, pos: Array):
     return q, k, v
 
 
+def window_qkv(p, cfg: ModelConfig, x: Array, pos0: Array):
+    """Multi-token q/k/v projection with per-row absolute rope positions.
+
+    x: [B, S, D] (a draft window); pos0: [B] absolute position of x[:, 0].
+    Returns (q [B,S,H,hd], k [B,S,KH,hd], v [B,S,KH,hd]) — rope applied at
+    positions ``pos0 + j`` per window index j. The speculative verify path's
+    window analogue of :func:`decode_qkv`.
+    """
+    S = x.shape[1]
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.positional == "rope":
+        def rot(qb, kb, p0):
+            cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta,
+                                  p0 + jnp.arange(S))
+            return apply_rope(qb, cos, sin), apply_rope(kb, cos, sin)
+        q, k = jax.vmap(rot)(q, k, pos0)
+    return q, k, v
+
+
 def apply_gqa_decode(p, cfg: ModelConfig, x: Array, k_cache: Array,
                      v_cache: Array, kv_pos: Array, pos: Array, *,
                      window: int = 0):

@@ -234,21 +234,29 @@ def _apply_layer_full(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
     return h, cache, aux
 
 
-def _paged_insert(cache, blk: Array, off: Array, k_new: Array, v_new: Array):
-    """Scatter one token's K/V per row into block planes at (blk, off)."""
+def _paged_insert(cache, blk: Array, off: Array, k_new: Array, v_new: Array,
+                  write_mask: Optional[Array] = None):
+    """Scatter one token's K/V per row into block planes at (blk, off).
+
+    ``write_mask`` [B] bool: rows with False never write — their index is
+    pushed out of range and dropped (the speculative verify step shares one
+    fixed-shape batch with rows whose caches it must not touch)."""
+    if write_mask is not None:
+        blk = jnp.where(write_mask, blk, cache["k"].shape[0])
     if "k_s" in cache:
         kq, ks = _quant_kv(k_new[:, 0])
         vq, vs = _quant_kv(v_new[:, 0])
-        return {"k": cache["k"].at[blk, off].set(kq),
-                "v": cache["v"].at[blk, off].set(vq),
-                "k_s": cache["k_s"].at[blk, off].set(ks),
-                "v_s": cache["v_s"].at[blk, off].set(vs)}
-    return {"k": cache["k"].at[blk, off].set(k_new[:, 0]),
-            "v": cache["v"].at[blk, off].set(v_new[:, 0])}
+        return {"k": cache["k"].at[blk, off].set(kq, mode="drop"),
+                "v": cache["v"].at[blk, off].set(vq, mode="drop"),
+                "k_s": cache["k_s"].at[blk, off].set(ks, mode="drop"),
+                "v_s": cache["v_s"].at[blk, off].set(vs, mode="drop")}
+    return {"k": cache["k"].at[blk, off].set(k_new[:, 0], mode="drop"),
+            "v": cache["v"].at[blk, off].set(v_new[:, 0], mode="drop")}
 
 
 def _paged_gqa_decode(mp, cfg: ModelConfig, x: Array, cache, pos: Array,
-                      tables: Array, use_kernel: bool):
+                      tables: Array, use_kernel: bool,
+                      write_mask: Optional[Array] = None):
     """One-token GQA decode against paged cache planes.
 
     cache leaves are [num_blocks, block_size, ...]; ``tables`` [B, nb] maps
@@ -270,7 +278,7 @@ def _paged_gqa_decode(mp, cfg: ModelConfig, x: Array, cache, pos: Array,
         # REPRO_KERNELS=ref forces the oracle
         from repro.kernels.ops import paged_flash_decode
         q, k_new, v_new = decode_qkv(mp, cfg, x, pos)
-        new_cache = _paged_insert(cache, blk, off, k_new, v_new)
+        new_cache = _paged_insert(cache, blk, off, k_new, v_new, write_mask)
         KH = cfg.num_kv_heads
         qr = q.reshape(B, KH, cfg.num_heads // KH, cfg.head_dim)
         scales = ((new_cache["k_s"], new_cache["v_s"]) if int8
@@ -296,12 +304,12 @@ def _paged_gqa_decode(mp, cfg: ModelConfig, x: Array, cache, pos: Array,
     kv_pos = jnp.where(lpos[None, :] < pos[:, None], lpos[None, :], -1)
     out, k_new, v_new = apply_gqa_decode(mp, cfg, x, k_read, v_read,
                                          kv_pos, pos, window=0)
-    return out, _paged_insert(cache, blk, off, k_new, v_new)
+    return out, _paged_insert(cache, blk, off, k_new, v_new, write_mask)
 
 
 def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
                         h: Array, cache, pos: Array, active: Array,
-                        paged=None):
+                        paged=None, write_mask=None):
     """One-token decode layer with cache update.
 
     ``active``: [B] bool — tokens that have NOT exited. For exited tokens the
@@ -309,19 +317,28 @@ def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
     update is discarded.
     ``paged``: None for ring caches, else ``(block_tables [B, nb] int32,
     use_kernel: bool)`` and the cache leaves are block planes.
+    ``write_mask``: [B] bool — rows with False skip every cache write (the
+    speculative verify step batches rows whose caches must stay untouched);
+    only supported for full-attention GQA layers (``speculative_unsupported``
+    gates the rest).
     Returns (h, new_cache, aux).
     """
     window = _window_for(cfg, spec)
     aux = jnp.zeros((), jnp.float32)
     x = apply_norm(lp["norm1"], h)
     B = h.shape[0]
+    if write_mask is not None and (spec.mixer in (MIXER_MAMBA, MIXER_MLA)
+                                   or window):
+        raise NotImplementedError(
+            f"write_mask (speculative verify) unsupported for "
+            f"{spec.mixer} layers: {speculative_unsupported(cfg)}")
     if spec.mixer == MIXER_MAMBA:
         out, new_cache = ssm.apply_mamba_decode(lp["mixer"], cfg, x, cache)
     elif paged is not None:
         # only full-attention GQA layers page (paged_unsupported gates)
         mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
         out, new_cache = _paged_gqa_decode(mp, cfg, x, cache, pos,
-                                           paged[0], paged[1])
+                                           paged[0], paged[1], write_mask)
     elif spec.mixer == MIXER_MLA:
         W = cache["latent"].shape[1]
         out, lat_new, kr_new = apply_mla_decode(
@@ -347,22 +364,26 @@ def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
             mp, cfg, x, k_read, v_read, cache["pos"], pos,
             window=window)
         slot = pos % W
+        if write_mask is not None:
+            slot = jnp.where(write_mask, slot, W)    # OOB -> dropped write
         bidx = jnp.arange(B)
         if int8:
             kq, ks = _quant_kv(k_new[:, 0])
             vq, vs = _quant_kv(v_new[:, 0])
             new_cache = {
-                "k": cache["k"].at[bidx, slot].set(kq),
-                "v": cache["v"].at[bidx, slot].set(vq),
-                "k_s": cache["k_s"].at[bidx, slot].set(ks),
-                "v_s": cache["v_s"].at[bidx, slot].set(vs),
-                "pos": cache["pos"].at[bidx, slot].set(pos),
+                "k": cache["k"].at[bidx, slot].set(kq, mode="drop"),
+                "v": cache["v"].at[bidx, slot].set(vq, mode="drop"),
+                "k_s": cache["k_s"].at[bidx, slot].set(ks, mode="drop"),
+                "v_s": cache["v_s"].at[bidx, slot].set(vs, mode="drop"),
+                "pos": cache["pos"].at[bidx, slot].set(pos, mode="drop"),
             }
         else:
             new_cache = {
-                "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
-                "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
-                "pos": cache["pos"].at[bidx, slot].set(pos),
+                "k": cache["k"].at[bidx, slot].set(k_new[:, 0],
+                                                   mode="drop"),
+                "v": cache["v"].at[bidx, slot].set(v_new[:, 0],
+                                                   mode="drop"),
+                "pos": cache["pos"].at[bidx, slot].set(pos, mode="drop"),
             }
     h_new = h + out
     if spec.ffn != FFN_NONE:
@@ -412,7 +433,7 @@ def _apply_segment_full(sp, shared_p, h, *, cfg, seg: Segment,
 
 
 def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
-                          pos, active, paged=None):
+                          pos, active, paged=None, write_mask=None):
     if seg.scanned:
         spec = seg.specs[0]
 
@@ -420,7 +441,8 @@ def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
             h, aux = carry
             lp, cache = xs
             h, new_cache, a = _apply_layer_decode(lp, shared_p, cfg, spec, h,
-                                                  cache, pos, active, paged)
+                                                  cache, pos, active, paged,
+                                                  write_mask)
             return (h, aux + a), new_cache
 
         (h, aux), new_caches = jax.lax.scan(
@@ -430,7 +452,8 @@ def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
     aux = jnp.zeros((), jnp.float32)
     for j, spec in enumerate(seg.specs):
         h, nc, a = _apply_layer_decode(sp[j], shared_p, cfg, spec, h,
-                                       caches[j], pos, active, paged)
+                                       caches[j], pos, active, paged,
+                                       write_mask)
         new_caches.append(nc)
         aux = aux + a
     return h, new_caches, aux
@@ -442,12 +465,15 @@ def _apply_segment_decode(sp, shared_p, cfg, seg: Segment, h, caches,
 def embed_inputs(params, cfg: ModelConfig, tokens: Array,
                  prefix_embed: Optional[Array] = None,
                  pos: Optional[Array] = None) -> Array:
-    """Embed tokens; ``pos`` [B] gives per-example absolute positions for
-    single-token decode (learned positional embeddings)."""
+    """Embed tokens; ``pos`` [B] gives per-example absolute positions of
+    ``tokens[:, 0]`` (learned positional embeddings) — token j of a
+    multi-token window sits at ``pos + j`` (single-token decode is the
+    S = 1 case, the speculative verify window the S > 1 one)."""
     if pos is not None and cfg.positional == "learned":
         h = jnp.take(params["embed"]["tok"], tokens, axis=0)
-        pidx = jnp.clip(pos, 0, cfg.max_position - 1)
-        h = h + jnp.take(params["embed"]["pos"], pidx, axis=0)[:, None, :]
+        pidx = jnp.clip(pos[:, None] + jnp.arange(tokens.shape[1]),
+                        0, cfg.max_position - 1)
+        h = h + jnp.take(params["embed"]["pos"], pidx, axis=0)
     else:
         h = embed_tokens(params["embed"], cfg, tokens)
     if prefix_embed is not None:
@@ -850,3 +876,203 @@ def decode_step(params, cfg: ModelConfig, tokens: Array, caches, pos: Array,
     logits = lm_logits(params, cfg, h)[:, 0, :]
     info = {"exit_layer": exit_layer, "aux": aux}
     return logits, new_caches, info
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding primitives (draft windows are verified full-depth;
+# core/speculative.py owns the draft-then-verify loop, the scheduler the
+# serving integration)
+# ---------------------------------------------------------------------------
+def speculative_unsupported(cfg: ModelConfig) -> Optional[str]:
+    """Why this config cannot run self-speculative decoding (None = it can).
+
+    Rollback of rejected draft positions relies on cache writes being
+    invertible: a full-attention GQA entry is invalidated by resetting its
+    ring ``pos`` (or unbinding its block-table append). Mamba state updates
+    are destructive, MLA latent rings are not speculative-aware yet, and a
+    sliding-window ring evicts entries a rollback would need.
+    """
+    for spec in cfg.block_pattern:
+        if spec.mixer == MIXER_MAMBA:
+            return "mamba state updates are destructive (no rollback)"
+        if spec.mixer == MIXER_MLA:
+            return "MLA latent caches are not speculative-aware yet"
+        if _window_for(cfg, spec):
+            return "sliding-window rings evict entries a rollback would need"
+    return None
+
+
+def rewind_ring(cfg: ModelConfig, caches, keep_pos: Array):
+    """Invalidate contiguous ring-cache entries past ``keep_pos`` [B].
+
+    The speculative rollback primitive: a rejected position's K/V stays in
+    its slot as garbage but its ``pos`` entry resets to -1, so attention
+    masks it exactly like a never-written slot (``keep_pos = -1`` empties a
+    row; a huge value leaves it untouched). Jit-able with donation.
+    """
+    keep = jnp.asarray(keep_pos, jnp.int32)
+    segs = plan_segments(cfg)
+
+    def cut(pos_leaf, stacked):
+        k = keep[None, :, None] if stacked else keep[:, None]
+        return jnp.where(pos_leaf <= k, pos_leaf, -1)
+
+    out = []
+    for seg, c in zip(segs, caches):
+        if seg.scanned:
+            out.append({k: (cut(v, True) if k == "pos" else v)
+                        for k, v in c.items()})
+        else:
+            out.append([{k: (cut(v, False) if k == "pos" else v)
+                         for k, v in cj.items()} for cj in c])
+    return out
+
+
+def _paged_gqa_verify(mp, cfg: ModelConfig, x: Array, cache, pos0: Array,
+                      tables: Array, write_mask: Optional[Array]):
+    """Window-parallel GQA verify against paged caches (kernel path).
+
+    x: [B, S, D] window hidden; pos0 [B] is the absolute position of
+    x[:, 0]. Inserts the whole window's K/V, then runs the q-window Pallas
+    kernel over each row's block chain (insert-then-attend; query j attends
+    logical positions <= pos0 + j).
+    """
+    from repro.models.attention import window_qkv
+    B, S, _ = x.shape
+    num_blocks, bs = cache["k"].shape[:2]
+    int8 = "k_s" in cache
+    q, k_new, v_new = window_qkv(mp, cfg, x, pos0)
+    tbl = jnp.clip(jnp.asarray(tables, jnp.int32), 0, num_blocks - 1)
+    pos = pos0[:, None] + jnp.arange(S)[None, :]          # [B, S]
+    blk = jnp.take_along_axis(tbl, pos // bs, axis=1)
+    if write_mask is not None:
+        blk = jnp.where(write_mask[:, None], blk, num_blocks)
+    off = pos % bs
+    if int8:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        cache = {"k": cache["k"].at[blk, off].set(kq, mode="drop"),
+                 "v": cache["v"].at[blk, off].set(vq, mode="drop"),
+                 "k_s": cache["k_s"].at[blk, off].set(ks, mode="drop"),
+                 "v_s": cache["v_s"].at[blk, off].set(vs, mode="drop")}
+    else:
+        cache = {"k": cache["k"].at[blk, off].set(k_new, mode="drop"),
+                 "v": cache["v"].at[blk, off].set(v_new, mode="drop")}
+    from repro.kernels.ops import paged_verify
+    KH = cfg.num_kv_heads
+    qr = q.reshape(B, S, KH, cfg.num_heads // KH, cfg.head_dim)
+    scales = (cache["k_s"], cache["v_s"]) if int8 else (None, None)
+    o = paged_verify(qr, cache["k"], cache["v"], tbl, pos0, *scales,
+                     softcap=cfg.attn_logit_softcap)
+    out = o.reshape(B, S, cfg.q_dim) @ mp["wo"]
+    if "bo" in mp:
+        out = out + mp["bo"]
+    return out, cache
+
+
+def _apply_layer_verify(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
+                        h: Array, cache, pos0: Array, tables: Array,
+                        write_mask: Optional[Array]):
+    x = apply_norm(lp["norm1"], h)
+    mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
+    out, new_cache = _paged_gqa_verify(mp, cfg, x, cache, pos0, tables,
+                                       write_mask)
+    h = h + out
+    if spec.ffn != FFN_NONE:
+        x2 = apply_norm(lp["norm2"], h)
+        if spec.ffn == FFN_MOE:
+            y, _ = apply_moe(lp["ffn"]["moe"], cfg, x2,
+                             capacity_factor=_moe_capacity_factor(
+                                 cfg, inference=True))
+        else:
+            y = apply_mlp(lp["ffn"], cfg, x2)
+        h = h + y
+    return h, new_cache
+
+
+def _verify_window_kernel(params, cfg: ModelConfig, tokens: Array, caches,
+                          pos0: Array, tables: Array,
+                          write_mask: Optional[Array]):
+    """Kernel verify path: the whole [B, S] window per layer in one shot."""
+    segs = plan_segments(cfg)
+    B, S = tokens.shape
+    h = embed_inputs(params, cfg, tokens, pos=pos0)
+    shared_p = params.get("shared_attn")
+    new_caches = []
+    for i, seg in enumerate(segs):
+        sp, c = params["segments"][i], caches[i]
+        if seg.scanned:
+            spec = seg.specs[0]
+
+            def body(hh, xs):
+                lp, cache = xs
+                hh, nc = _apply_layer_verify(lp, shared_p, cfg, spec, hh,
+                                             cache, pos0, tables, write_mask)
+                return hh, nc
+
+            h, nc = jax.lax.scan(body, h, (sp, c))
+        else:
+            nc = []
+            for j, spec in enumerate(seg.specs):
+                h, ncj = _apply_layer_verify(sp[j], shared_p, cfg, spec, h,
+                                             c[j], pos0, tables, write_mask)
+                nc.append(ncj)
+        new_caches.append(nc)
+    logits = lm_logits(params, cfg, h).astype(jnp.float32)
+    return logits, new_caches
+
+
+def verify_step(params, cfg: ModelConfig, tokens: Array, caches,
+                pos0: Array, *, write_mask: Optional[Array] = None,
+                block_tables: Optional[Array] = None,
+                use_kernel: bool = False):
+    """Score a [B, S] token window full-depth against the decode caches.
+
+    ``tokens[:, j]`` is consumed at position ``pos0 + j`` and its K/V is
+    written there (rows with ``write_mask`` False never write — they ride
+    along in the fixed-shape batch with untouched caches). The reference
+    path runs the S positions as sequential single-token decode steps under
+    one scan, so its arithmetic — and therefore greedy acceptance — is
+    bit-identical to the non-speculative baseline loop. ``use_kernel`` (with
+    ``block_tables``) switches to the window-parallel Pallas verify kernel
+    (kernels/verify_attn.py): same math, flash-accumulated, parity-tested
+    against the scan path rather than bit-equal to it.
+
+    Contiguous callers must invalidate any draft-phase writes in the window
+    first (``rewind_ring(cfg, caches, pos0 - 1)``): the inclusive
+    ``kv_pos <= pos`` mask plus the explicit self term would otherwise
+    double-count a still-valid entry at the query's own position. Paged
+    caches mask strictly (``lpos < pos``), so stale draft K/V is ignored
+    and overwritten in place.
+
+    Returns (logits [B, S, V] float32, new_caches).
+    """
+    B, S = tokens.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    mask = None if write_mask is None else jnp.asarray(write_mask, bool)
+    paged = None
+    if block_tables is not None:
+        paged = (jnp.asarray(block_tables, jnp.int32), bool(use_kernel))
+        if use_kernel:
+            return _verify_window_kernel(params, cfg, tokens, caches, pos0,
+                                         paged[0], mask)
+    segs = plan_segments(cfg)
+    shared_p = params.get("shared_attn")
+    active = jnp.ones((B,), bool)
+
+    def body(caches, xs):
+        tok, off = xs
+        pos = pos0 + off
+        h = embed_inputs(params, cfg, tok[:, None], pos=pos)
+        new_caches = []
+        for i, seg in enumerate(segs):
+            h, nc, _ = _apply_segment_decode(params["segments"][i], shared_p,
+                                             cfg, seg, h, caches[i], pos,
+                                             active, paged, mask)
+            new_caches.append(nc)
+        logits = lm_logits(params, cfg, h)[:, 0, :].astype(jnp.float32)
+        return new_caches, logits
+
+    caches, logits = jax.lax.scan(
+        body, caches, (tokens.T, jnp.arange(S, dtype=jnp.int32)))
+    return jnp.transpose(logits, (1, 0, 2)), caches

@@ -80,6 +80,34 @@ class Engine:
         return exit_policy.PolicyContext(params=self.params, cfg=self.cfg,
                                          agent_params=self.agent_params)
 
+    @staticmethod
+    def _speculative_params(ctrl):
+        """Speculative kwargs when ``ctrl`` selects the speculative policy
+        (a spec/name, or a PolicyBatch whose rows are all speculative —
+        per-row draft_idx/window arrays), else None."""
+        if ctrl is None or callable(ctrl):
+            return None
+        if isinstance(ctrl, exit_policy.PolicyBatch):
+            if "speculative" not in ctrl.names:
+                return None
+            if set(ctrl.names) != {"speculative"}:
+                raise ValueError(
+                    "the one-shot engine cannot mix speculative with other "
+                    "policies in one batch — serve_requests partitions "
+                    "them, or use the Scheduler for true per-row mixing")
+            return {"draft_idx": np.asarray(ctrl.params["draft_idx"],
+                                            np.int64),
+                    "window": np.asarray(ctrl.params["window"], np.int64),
+                    "accept_threshold": np.asarray(
+                        ctrl.params["accept_threshold"], np.float32)}
+        spec = exit_policy.as_spec(ctrl)
+        if spec.name != "speculative":
+            return None
+        p = spec.resolved()
+        return {"draft_idx": int(p["draft_idx"]),
+                "window": int(p["window"]),
+                "accept_threshold": float(p["accept_threshold"])}
+
     def serve(self, requests: Sequence[Sequence[int]],
               max_new: Optional[int] = None,
               controller=None, policy=None,
@@ -94,21 +122,37 @@ class Engine:
         max_new = max_new or self.max_new
         ctrl = controller if controller is not None else (
             policy if policy is not None else self.controller)
-        exit_fn = exit_policy.as_exit_fn(ctrl, self._ctx())
+        spec_like = self._speculative_params(ctrl)
         B = len(requests)
         ctx_len = min(self.max_context, max(len(r) for r in requests))
         ctx = np.full((B, ctx_len), PAD, np.int32)
         for i, r in enumerate(requests):
             r = list(r)[-ctx_len:]
             ctx[i, ctx_len - len(r):] = r
-        out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
-                       exit_fn, max_len=ctx_len + max_new,
-                       sampling=sampling, key=key, seeds=seeds,
-                       seed_offsets=seed_offsets,
-                       kv_block_size=(self.kv_block_size
-                                      if self.kv_layout == "paged"
-                                      else None),
-                       use_kernel=self.use_kernel)
+        kv_block_size = (self.kv_block_size if self.kv_layout == "paged"
+                         else None)
+        spec_energy = None
+        if spec_like is not None:
+            from repro.core.speculative import speculative_generate
+            if seeds is None and key is not None:
+                # honor the caller's key: speculative draws are keyed by
+                # per-row seeds, so derive them from it
+                seeds = np.asarray(jax.random.randint(
+                    key, (B,), 0, np.iinfo(np.int32).max))
+            out = speculative_generate(
+                self.params, self.cfg, jnp.asarray(ctx), max_new,
+                sampling=sampling, seeds=seeds, seed_offsets=seed_offsets,
+                kv_block_size=kv_block_size, use_kernel=self.use_kernel,
+                **spec_like)
+            spec_energy = np.asarray(out["energy_j"])
+        else:
+            exit_fn = exit_policy.as_exit_fn(ctrl, self._ctx())
+            out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
+                           exit_fn, max_len=ctx_len + max_new,
+                           sampling=sampling, key=key, seeds=seeds,
+                           seed_offsets=seed_offsets,
+                           kv_block_size=kv_block_size,
+                           use_kernel=self.use_kernel)
         toks = np.asarray(out["tokens"])
         exits = np.asarray(out["exit_layers"])
         tokens, exit_layers, metrics = [], [], []
@@ -118,7 +162,13 @@ class Engine:
             tokens.append(row[:n])
             el = exits[i, :max(n, 1)]
             exit_layers.append(el.tolist())
-            metrics.append(request_metrics(self.cfg, el, ctx_len))
+            m = request_metrics(self.cfg, el, ctx_len)
+            if spec_energy is not None:
+                # speculative rows: draft + verify accounting (pro-rated
+                # to the kept tokens), not the exit-layer model — their
+                # exit layers are all num_layers by construction
+                m.energy_j = float(spec_energy[i]) * max(n, 1) / max_new
+            metrics.append(m)
         return ServeResult(tokens, exit_layers, metrics)
 
     def serve_requests(self, requests: Sequence[GenerationRequest],
@@ -167,8 +217,23 @@ class Engine:
                     "which cannot be stacked per-row — give each request "
                     "a policy or configure a PolicySpec default")
             default_policy = None
-        batch = stack_policies(
-            [r.spec(exit_policy.as_spec(default_policy)) for r in reqs])
+        # speculative rows decode in a different loop shape (draft-then-
+        # verify): partition mixed batches and serve each group, keeping
+        # the caller's order and request ids
+        eff = [r.spec(exit_policy.as_spec(default_policy)) for r in reqs]
+        spec_rows = {i for i, s in enumerate(eff) if s.name == "speculative"}
+        if spec_rows and len(spec_rows) < len(reqs):
+            a = [i for i in range(len(reqs)) if i in spec_rows]
+            b = [i for i in range(len(reqs)) if i not in spec_rows]
+            out: list = [None] * len(reqs)
+            for group in (a, b):
+                res = self.serve_requests([reqs[i] for i in group],
+                                          default_policy, key=key)
+                for j, i in enumerate(group):
+                    res[j].request_id = i
+                    out[i] = res[j]
+            return out
+        batch = stack_policies(eff)
         sampling = SamplingParams(
             temperature=np.asarray([r.sampling.temperature for r in reqs],
                                    np.float32),
@@ -209,6 +274,12 @@ class Engine:
                     reason = "stop"
             metrics = request_metrics(self.cfg, np.asarray(exits, np.int32),
                                       ctx_len)
+            if eff[i].name == "speculative":
+                # keep the draft+verify energy serve() attached, pro-rated
+                # to this request's own truncation
+                metrics.energy_j = (res.metrics[i].energy_j
+                                    * len(toks)
+                                    / max(len(res.tokens[i]), 1))
             out.append(GenerationResult(
                 tokens=toks, exit_layers=exits, finish_reason=reason,
                 text=text, energy_j=metrics.energy_j, metrics=metrics,

@@ -412,6 +412,30 @@ class PagedKVPool:
             self._reserved[slot] = max(int(self._reserved[slot]) - 1, 0)
             self.cow_copies += 1
 
+    def rollback_append(self, slot: int, keep_tokens: int) -> None:
+        """Unbind blocks past ``keep_tokens`` valid positions (speculative
+        rollback of rejected draft appends).
+
+        The freed blocks return to the allocator and their units go back
+        into the slot's growth reservation — a rejected draft leaves the
+        slot exactly as reserved as before it drafted. K/V inside the kept
+        tail block needs no scrub: paged attention masks strictly by the
+        row's current position. A block the draft copy-on-wrote stays
+        (the slot now owns its tail exclusively; each slot COWs at most
+        once, so no reservation drifts).
+        """
+        if not self._slot_used[slot]:
+            raise ValueError(f"slot {slot} not allocated")
+        n_keep = max(self.blocks_for(keep_tokens), 1)
+        nb = int(self._n_blocks[slot])
+        if n_keep >= nb:
+            return
+        for j in range(n_keep, nb):
+            self.blocks.decref(int(self.tables[slot, j]))
+            self.tables[slot, j] = 0
+            self._reserved[slot] += 1
+        self._n_blocks[slot] = n_keep
+
     def device_tables(self) -> jax.Array:
         return jnp.asarray(self.tables)
 

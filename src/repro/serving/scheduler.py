@@ -52,6 +52,19 @@ Early-exit awareness
     per-request ``stop_sequences`` (string-level, at detokenize time), and
     gates admission on a fleet power target (fewer layers used -> lower
     modeled power -> more admission).
+
+Self-speculative decoding (``PolicySpec("speculative", ...)``)
+    Rows with the speculative policy decode in draft-then-verify
+    super-ticks (``_spec_tick``): ``spec_window`` ordinary compiled steps
+    draft tokens at the row's ``draft_idx`` exit boundary (co-resident
+    non-speculative rows decode real tokens in the same steps), then one
+    full-depth ``verify_step`` over each row's window accepts or rejects
+    them — greedy rows emit exactly the full model's tokens. Rejected
+    positions roll back (ring ``pos`` rewound / paged block appends
+    unbound; admission reserves the draft-overrun slack so drafting can
+    never fail); ``stats()`` reports ``acceptance_rate`` and
+    ``tokens_per_verify``, and ``core.energy.speculative_step_energy``
+    charges draft-layer vs full-depth joules separately.
 """
 from __future__ import annotations
 
@@ -72,9 +85,13 @@ from repro.config import ModelConfig
 from repro.core import energy, exit_policy
 from repro.core.early_exit import pick_tokens, request_keys
 from repro.core.exit_policy import PolicyContext, PolicySpec
+from repro.core.speculative import (SPEC_POLICY, accept_drafts,
+                                    draft_boundary_layer)
 from repro.data.tokenizer import EOS, PAD
 from repro.models.transformer import (decode_step, init_cache, lm_logits,
-                                      prefill, write_cache_slots)
+                                      prefill, rewind_ring,
+                                      speculative_unsupported, verify_step,
+                                      write_cache_slots)
 from repro.serving.engine import ServeResult
 from repro.serving.kv_pool import PagedKVPool
 from repro.serving.metrics import (RequestMetrics, latency_percentiles,
@@ -161,6 +178,10 @@ class Request:
     exit_layers: list[int] = field(default_factory=list)
     text: Optional[str] = None           # decoded (stop-truncated) output
     energy_j: float = 0.0
+    # speculative accounting (zero for non-speculative requests)
+    spec_verifies: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
     metrics: Optional[RequestMetrics] = None
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
@@ -236,6 +257,7 @@ class Scheduler:
                  kv_layout: str = "contiguous", block_size: int = 16,
                  num_blocks: Optional[int] = None, use_kernel: bool = False,
                  enable_prefix_cache: bool = True,
+                 spec_window: int = 4,
                  dtype=jnp.float32):
         self.params = params
         self.cfg = cfg
@@ -272,6 +294,14 @@ class Scheduler:
         if self.default_kind not in self.allowed_kinds:
             raise ValueError(f"default policy {self.default_kind!r} not in "
                              f"allowed_kinds {sorted(self.allowed_kinds)}")
+        if SPEC_POLICY in self.allowed_kinds:
+            reason = speculative_unsupported(cfg)
+            if reason is not None:
+                raise ValueError(f"speculative policy unavailable for "
+                                 f"{cfg.name}: {reason}")
+            if spec_window < 1:
+                raise ValueError("spec_window must be >= 1")
+        self.spec_window = spec_window
 
         if kv_layout == "paged":
             self.pool = PagedKVPool(cfg, max_slots, max_len,
@@ -301,6 +331,8 @@ class Scheduler:
         self._step = jax.jit(self._make_step(), donate_argnums=2)
         self._prefill = jax.jit(self._prefill_fn,
                                 static_argnames=("max_len",))
+        self._verify = jax.jit(self._make_verify(), donate_argnums=2)
+        self._rewind = jax.jit(partial(rewind_ring, cfg), donate_argnums=0)
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -319,6 +351,10 @@ class Scheduler:
         self._deferred_admissions = 0
         self._blocked_admissions = 0
         self._peak_active = 0
+        self._spec_verifies = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._spec_emitted = 0
         self._power_w_ema = 0.0
         self._exit_layer_ema = float(cfg.num_layers)
         self._latencies: list[float] = []
@@ -360,9 +396,29 @@ class Scheduler:
                 use_kernel=use_kernel)
             keys = request_keys(seeds, pos)
             nxt, _ = pick_tokens(logits, keys, temp, top_k, top_p)
-            return nxt.astype(jnp.int32), new_caches, info["exit_layer"]
+            # logits ride along for speculative draft scoring (rejection
+            # sampling needs the draft distribution); plain ticks leave
+            # them on device unfetched
+            return (nxt.astype(jnp.int32), new_caches, info["exit_layer"],
+                    logits.astype(jnp.float32))
 
         return step
+
+    def _make_verify(self):
+        """The speculative verify step: one full-depth pass over every
+        slot's [spec_window + 1] draft window. ``mask`` rows ride along
+        with untouched caches (non-speculative residents, free slots)."""
+        cfg = self.cfg
+        paged = self.kv_layout == "paged"
+        use_kernel = self.use_kernel
+
+        def vstep(params, win, caches, tables, pos0, mask):
+            return verify_step(params, cfg, win, caches, pos0,
+                               write_mask=mask,
+                               block_tables=tables if paged else None,
+                               use_kernel=use_kernel)
+
+        return vstep
 
     def _prefill_fn(self, params, prompt, seed, pos0, temp, top_k, top_p,
                     *, max_len):
@@ -484,10 +540,16 @@ class Scheduler:
             max_new = self.default_max_new
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        keep = self.pool.max_len - max_new
+        # speculative rows draft up to spec_window positions past their
+        # committed length before rollback — their cache footprint must
+        # reserve that overrun
+        extra = self.spec_window if spec.name == SPEC_POLICY else 0
+        keep = self.pool.max_len - max_new - extra
         if keep < 1:
             raise ValueError(f"max_new={max_new} leaves no room for a prompt "
-                             f"(pool max_len={self.pool.max_len})")
+                             f"(pool max_len={self.pool.max_len}"
+                             + (f", speculative draft slack={extra}"
+                                if extra else "") + ")")
         prompt = list(prompt)[-keep:]
         if not prompt:
             raise ValueError("empty prompt")
@@ -499,14 +561,15 @@ class Scheduler:
                         if b >= len(prompt)), default=keep)
             prompt = [self.pad_id] * (min(blen, keep) - len(prompt)) + prompt
         if (self.kv_layout == "paged"
-                and (self.pool.need_blocks(len(prompt), max_new)
+                and (self.pool.need_blocks(len(prompt), max_new + extra)
                      > self.pool.blocks.capacity)):
             # checked on the final (bucket-padded) prompt — can_admit sees
             # this exact length, so anything accepted here always admits
             raise ValueError(
                 f"request needs "
-                f"{self.pool.need_blocks(len(prompt), max_new)} KV blocks "
-                f"but the pool only has {self.pool.blocks.capacity} "
+                f"{self.pool.need_blocks(len(prompt), max_new + extra)} "
+                f"KV blocks but the pool only has "
+                f"{self.pool.blocks.capacity} "
                 f"(raise num_blocks or lower max_new)")
         if energy_budget_j is None:
             energy_budget_j = self.class_energy_budgets_j.get(request_class)
@@ -599,6 +662,12 @@ class Scheduler:
         self._queue.remove(pick)
         return pick
 
+    def _decode_budget(self, req: Request) -> int:
+        """Worst-case decode positions a request may occupy: ``max_new``
+        plus the speculative draft-overrun slack for speculative rows."""
+        return req.max_new + (self.spec_window
+                              if req.spec.name == SPEC_POLICY else 0)
+
     def _admission_open(self) -> bool:
         if self.power_budget_w is None:
             return True
@@ -626,8 +695,8 @@ class Scheduler:
                     return
                 req = self._pick_next(now)
                 if (req is not None and self.kv_layout == "paged"
-                        and not self.pool.can_admit(req.prompt,
-                                                    req.max_new)):
+                        and not self.pool.can_admit(
+                            req.prompt, self._decode_budget(req))):
                     # admission is gated on free *blocks*, not just free
                     # slots: requeue the pick (submit() bounds requests to
                     # the pool capacity, so a retirement always unblocks
@@ -642,7 +711,8 @@ class Scheduler:
                     # ... otherwise backfill: spare blocks go to the best
                     # request that fits instead of head-of-line blocking
                     fits = [r for r in self._queue
-                            if self.pool.can_admit(r.prompt, r.max_new)]
+                            if self.pool.can_admit(r.prompt,
+                                                   self._decode_budget(r))]
                     if not fits:
                         return
                     req = min(fits, key=lambda r: (len(r.prompt), r.req_id))
@@ -677,7 +747,7 @@ class Scheduler:
         assert slot is not None, "admission with no free slot"
         if paged:
             self.pool.write_prompt(slot, req.prompt, req_caches,
-                                   max_new=req.max_new)
+                                   max_new=self._decode_budget(req))
         else:
             self.pool.write(req_caches, slot)
         req.status = "running"
@@ -698,7 +768,16 @@ class Scheduler:
         self._account_token(req, int(t0[0]), slot)
 
     def _tick(self) -> None:
-        t_start = time.monotonic()
+        if any(req is not None and req.spec.name == SPEC_POLICY
+               for req in self._slot_req):
+            self._spec_tick()
+        else:
+            self._plain_tick()
+
+    def _run_step(self):
+        """One compiled decode step over all slots (shared by plain ticks
+        and the speculative draft phase). Returns (tokens, exit layers,
+        f32 logits) as device arrays."""
         if self.kv_layout == "paged":
             # bind (or copy-on-write) every resident's write-target block
             # before the compiled step scatters this tick's K/V
@@ -708,13 +787,18 @@ class Scheduler:
             tables = self.pool.device_tables()
         else:
             tables = jnp.zeros((0,), jnp.int32)   # unused by the step
-        nxt, new_caches, exitl = self._step(
+        nxt, new_caches, exitl, logits = self._step(
             self.params, jnp.asarray(self._cur_tok), self.pool.caches,
             tables, jnp.asarray(self._pos), jnp.asarray(self._ids),
             {f: jnp.asarray(v) for f, v in self._pp.items()},
             jnp.asarray(self._temp), jnp.asarray(self._topk),
             jnp.asarray(self._topp), jnp.asarray(self._seed))
         self.pool.caches = new_caches
+        return nxt, exitl, logits
+
+    def _plain_tick(self) -> None:
+        t_start = time.monotonic()
+        nxt, exitl, _ = self._run_step()
         nxt = np.asarray(nxt)
         exitl = np.asarray(exitl)
         tick_energy = 0.0
@@ -728,10 +812,147 @@ class Scheduler:
         self._power_w_ema = (0.9 * self._power_w_ema
                              + 0.1 * (tick_energy / dt))
 
-    def _account_token(self, req: Request, token: int, slot: int) -> float:
+    def _spec_tick(self) -> None:
+        """Draft-then-verify super-tick (>= 1 speculative resident).
+
+        Up to ``spec_window`` draft sub-steps run the ordinary compiled
+        step:
+        speculative rows exit at their draft boundary and their tokens are
+        buffered as *drafts*; co-resident non-speculative rows decode real
+        tokens as usual. One full-depth verify pass then scores every
+        speculative row's window (non-speculative rows ride along with
+        cache writes masked off), accepted drafts + the correction token
+        are emitted, and the rejected tail rolls back — ring ``pos``
+        rewound, paged block appends unbound.
+        """
+        t_start = time.monotonic()
+        S = self.pool.max_slots
+        paged = self.kv_layout == "paged"
+        spec = {s: r for s, r in enumerate(self._slot_req)
+                if r is not None and r.spec.name == SPEC_POLICY}
+        # size the super-tick to the largest *effective* window resident:
+        # a row one token from its budget must not drag everyone through
+        # spec_window drafts it would immediately throw away (K may be 0 —
+        # the verify then degenerates to one full-depth step)
+        eff = {s: max(min(int(self._pp["window"][s]), self.spec_window,
+                          r.max_new - len(r.tokens) - 1), 0)
+               for s, r in spec.items()}
+        K = max(eff.values())
+        p0 = {s: int(self._pos[s]) for s in spec}
+        t0 = {s: int(self._cur_tok[s]) for s in spec}
+        slots = sorted(spec)
+        idx = np.asarray(slots)
+        drafts = np.zeros((S, K), np.int64)
+        need_dl = any(self._temp[s] > 0 for s in spec)
+        dlogits: list[np.ndarray] = []
+        tick_energy = 0.0
+
+        for j in range(K):
+            nxt, exitl, logits = self._run_step()
+            nxt = np.asarray(nxt)
+            exitl = np.asarray(exitl)
+            if need_dl:
+                # fetch only the speculative rows — the full [S, V] plane
+                # never crosses to host
+                dlogits.append(np.asarray(logits[jnp.asarray(idx)]))
+            for slot, req in enumerate(self._slot_req):
+                if req is None:
+                    continue
+                if slot in spec:           # buffer the draft, feed it back
+                    drafts[slot, j] = int(nxt[slot])
+                    self._pos[slot] += 1
+                    self._cur_tok[slot] = nxt[slot]
+                else:                      # non-speculative rows: for real
+                    self._pos[slot] += 1
+                    req._exits_all.append(int(exitl[slot]))
+                    tick_energy += self._account_token(req, int(nxt[slot]),
+                                                       slot)
+
+        # full-depth verify over [t0, d1..dK] at positions p0..p0+K
+        win = np.zeros((S, K + 1), np.int64)
+        mask = np.zeros(S, bool)
+        pos0 = np.zeros(S, np.int64)
+        for slot in spec:
+            win[slot, 0] = t0[slot]
+            win[slot, 1:] = drafts[slot]
+            mask[slot] = True
+            pos0[slot] = p0[slot]
+        if paged:
+            for slot in spec:
+                self.pool.prepare_append(slot, p0[slot] + K)
+            tables = self.pool.device_tables()
+        else:
+            tables = jnp.zeros((0,), jnp.int32)
+            # clean the draft writes out of the window first: the ring's
+            # inclusive mask + self term would double-count them
+            keep = np.full(S, np.iinfo(np.int32).max, np.int64)
+            for slot in spec:
+                keep[slot] = p0[slot] - 1
+            self.pool.caches = self._rewind(self.pool.caches,
+                                            jnp.asarray(keep, jnp.int32))
+        tlogits, new_caches = self._verify(
+            self.params, jnp.asarray(win, jnp.int32), self.pool.caches,
+            tables, jnp.asarray(pos0, jnp.int32), jnp.asarray(mask))
+        self.pool.caches = new_caches
+        tlogits = np.asarray(tlogits)
+
+        windows = np.asarray([eff[s] for s in slots])
+        n_acc, nxt_tok, _ = accept_drafts(
+            drafts[idx], tlogits[idx], windows=windows,
+            temperature=self._temp[idx], top_k=self._topk[idx],
+            top_p=self._topp[idx], seeds=self._seed[idx], pos0=pos0[idx],
+            accept_threshold=self._pp["accept_threshold"][idx],
+            draft_logits=(np.stack(dlogits, axis=1)
+                          if need_dl and dlogits else None))
+
+        keep = np.full(S, np.iinfo(np.int32).max, np.int64)
+        for i, slot in enumerate(slots):
+            req = spec[slot]
+            a = int(n_acc[i])
+            keep[slot] = p0[slot] + a
+            dl_layer = draft_boundary_layer(self.cfg,
+                                            self._pp["draft_idx"][slot])
+            e = energy.speculative_step_energy(self.cfg, req.ctx_len,
+                                               dl_layer, K, K + 1)
+            per_tok = e["total_j"] / (a + 1)
+            req.spec_verifies += 1
+            req.spec_drafted += int(windows[i])
+            req.spec_accepted += a
+            self._spec_verifies += 1
+            self._spec_drafted += int(windows[i])
+            self._spec_accepted += a
+            emitted = list(drafts[slot, :a]) + [int(nxt_tok[i])]
+            retired = False
+            for tok in emitted:
+                # verified tokens are exact full-depth output
+                req._exits_all.append(self.cfg.num_layers)
+                tick_energy += self._account_token(req, int(tok), slot,
+                                                   energy_j=per_tok)
+                self._spec_emitted += 1
+                if req.status == "done":
+                    retired = True
+                    break
+            if retired:
+                continue                  # slot released; blocks freed
+            self._pos[slot] = p0[slot] + len(emitted)
+            if paged:
+                self.pool.rollback_append(slot,
+                                          keep_tokens=p0[slot] + a + 1)
+        if not paged:
+            self.pool.caches = self._rewind(self.pool.caches,
+                                            jnp.asarray(keep, jnp.int32))
+        dt = max(time.monotonic() - t_start, 1e-6)
+        self._power_w_ema = (0.9 * self._power_w_ema
+                             + 0.1 * (tick_energy / dt))
+
+    def _account_token(self, req: Request, token: int, slot: int,
+                       energy_j: Optional[float] = None) -> float:
         """Record one produced token; retire the request when finished.
-        Returns the modeled energy of the step that produced it."""
-        e = self._token_energy(req.ctx_len, req._exits_all[-1])
+        Returns the modeled energy of the step that produced it
+        (``energy_j`` overrides the exit-layer model — the speculative
+        path charges amortized draft + verify cost instead)."""
+        e = (energy_j if energy_j is not None
+             else self._token_energy(req.ctx_len, req._exits_all[-1]))
         if token == self.eos_id:
             # EOS is excluded from the response; its producing step is
             # excluded from accounting too (Engine.serve semantics).
@@ -799,7 +1020,10 @@ class Scheduler:
         with self._lock:
             self._completed += 1
             self._fleet_tokens += len(req.tokens)
-            self._fleet_energy_j += req.metrics.energy_j
+            # accumulated per-token charges, NOT metrics.energy_j: for
+            # speculative rows the exit-layer model would miss the draft +
+            # verify cost the super-tick actually charged
+            self._fleet_energy_j += req.energy_j
             self._latencies.append(req.latency_s)
             if len(self._latencies) > 4096:
                 del self._latencies[:2048]
@@ -833,6 +1057,10 @@ class Scheduler:
             self._peak_active = self.pool.n_used
             self._blocked_admissions = 0
             self._deferred_admissions = 0
+            self._spec_verifies = 0
+            self._spec_drafted = 0
+            self._spec_accepted = 0
+            self._spec_emitted = 0
             if isinstance(self.pool, PagedKVPool):
                 self.pool.reset_stats()
 
@@ -845,6 +1073,18 @@ class Scheduler:
                 kv.update(self.pool.stats())
             else:
                 kv["kv_bytes_total"] = self.pool.kv_bytes_total
+            spec = {}
+            if SPEC_POLICY in self.allowed_kinds:
+                spec = {
+                    "spec_window": self.spec_window,
+                    "spec_verifies": self._spec_verifies,
+                    "spec_drafted": self._spec_drafted,
+                    "spec_accepted": self._spec_accepted,
+                    "acceptance_rate": (self._spec_accepted
+                                        / max(self._spec_drafted, 1)),
+                    "tokens_per_verify": (self._spec_emitted
+                                          / max(self._spec_verifies, 1)),
+                }
             return {
                 "queue_depth": len(self._queue),
                 "queue_capacity": self.queue_depth,
@@ -870,4 +1110,5 @@ class Scheduler:
                 "step_compiles": self.step_compiles,
                 "controllers": sorted(self.allowed_kinds),
                 "uptime_s": up,
+                **spec,
             }

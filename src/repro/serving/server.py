@@ -26,6 +26,10 @@ same fixed-shape batch as everyone else's.
   * per-request policy/sampling select behaviour per *slot* inside the one
     compiled step; nothing is mutated on shared state and nothing
     recompiles across mixed traffic.
+  * ``"policy": {"name": "speculative", "draft_idx": 0, "window": 4}``
+    serves the request with self-speculative decoding (early-exit drafts
+    verified full-depth — exact greedy output, GET /queue reports
+    ``acceptance_rate`` and ``tokens_per_verify``).
 
   GET /queue -> scheduler stats (queue depth, slot occupancy, fleet
                 J/token, throughput, latency percentiles, step_compiles)
@@ -241,12 +245,17 @@ class Handler(BaseHTTPRequestHandler):
 def setup_mini(train_steps: int = 60, rl: bool = True, *,
                max_slots: int = 8, max_len: int = 320,
                power_budget_w: float = None, kv_layout: str = "paged",
-               block_size: int = 16, num_blocks: int = None):
+               block_size: int = 16, num_blocks: int = None,
+               spec_window: int = 4):
     """Build a mini model + agent and start the scheduler (CPU demo).
 
     Default KV layout is **paged**: admission is gated on free cache
     *blocks* (plus a slot), not just free slots, and repeated prompt
-    prefixes share ref-counted blocks (GET /queue reports hit rates)."""
+    prefixes share ref-counted blocks (GET /queue reports hit rates).
+    The ``speculative`` policy is compiled in: POST
+    ``{"policy": {"name": "speculative", "draft_idx": 0, "window": 4}}``
+    decodes draft-then-verify (``spec_window`` caps the drafted window;
+    GET /queue reports ``acceptance_rate`` / ``tokens_per_verify``)."""
     from repro.configs.llama32_3b import paper_mini
     from repro.data import CodeCompletionDataset
     from repro.training import train_model
@@ -264,7 +273,7 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
                                   log_every=0)
     _State.cfg, _State.params, _State.agent = cfg, params, agent
     _State.tokenizer = ds.tokenizer
-    kinds = ["none", "confidence", "entropy", "fixed"]
+    kinds = ["none", "confidence", "entropy", "fixed", "speculative"]
     if agent is not None:
         kinds.append("policy")
     _State.scheduler = Scheduler(
@@ -277,7 +286,8 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
         # buckets also make shared system-prompt prefixes block-aligned
         prefill_buckets=(16, 32, 64, 96, 128, 192, 256),
         power_budget_w=power_budget_w, kv_layout=kv_layout,
-        block_size=block_size, num_blocks=num_blocks).start()
+        block_size=block_size, num_blocks=num_blocks,
+        spec_window=spec_window).start()
     return cfg, ds
 
 
@@ -296,12 +306,15 @@ def main():
                     help="tokens per KV block (with --kv-layout paged)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV pool block count (default: slots*max_len worth)")
+    ap.add_argument("--spec-window", type=int, default=4,
+                    help="speculative draft window (tokens drafted per "
+                         "verify for 'speculative'-policy requests)")
     args = ap.parse_args()
     print("[server] preparing mini model ...")
     setup_mini(args.train_steps, rl=not args.no_rl, max_slots=args.slots,
                max_len=args.max_len, power_budget_w=args.power_budget_w,
                kv_layout=args.kv_layout, block_size=args.block_size,
-               num_blocks=args.num_blocks)
+               num_blocks=args.num_blocks, spec_window=args.spec_window)
     srv = ThreadingHTTPServer(("127.0.0.1", args.port), Handler)
     print(f"[server] listening on :{args.port} — POST /generate, GET /queue")
     try:

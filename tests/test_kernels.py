@@ -9,6 +9,7 @@ from repro.kernels.decode_attn import flash_decode
 from repro.kernels.exit_head import exit_check
 from repro.kernels.paged_decode_attn import paged_flash_decode
 from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.verify_attn import paged_verify_window
 
 
 @pytest.mark.parametrize("B,D,V,cap", [
@@ -102,6 +103,61 @@ def test_paged_flash_decode_int8_dequant_in_kernel():
     o1 = paged_flash_decode(q, kq, vq, tables, pos, ksc, vsc)
     o2 = ref.paged_decode_ref(q, kq, vq, tables, pos, ksc, vsc)
     assert float(jnp.abs(o1 - o2).max()) < 1e-4
+
+
+def _verify_case(seed, B, S, KH, G, d, bs, NB, nb, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, KH, G, d), dtype)
+    kp = jax.random.normal(ks[1], (NB, bs, KH, d), dtype)
+    vp = jax.random.normal(ks[2], (NB, bs, KH, d), dtype)
+    rng = np.random.default_rng(seed)
+    tables = jnp.asarray(np.stack([rng.permutation(NB)[:nb]
+                                   for _ in range(B)]).astype(np.int32))
+    pos0 = jnp.asarray(rng.integers(0, nb * bs - S, B), jnp.int32)
+    return q, kp, vp, tables, pos0
+
+
+@pytest.mark.parametrize("B,S,KH,G,d,bs,NB,nb,cap", [
+    (2, 4, 2, 4, 32, 8, 11, 4, 0.0), (3, 5, 4, 1, 64, 16, 9, 3, 0.0),
+    (1, 3, 1, 8, 16, 4, 20, 7, 50.0), (4, 2, 2, 2, 32, 8, 8, 2, 0.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_verify_window(B, S, KH, G, d, bs, NB, nb, cap, dtype):
+    q, kp, vp, tables, pos0 = _verify_case(B * nb + d + S, B, S, KH, G, d,
+                                           bs, NB, nb, dtype)
+    o1 = paged_verify_window(q, kp, vp, tables, pos0, softcap=cap)
+    o2 = ref.paged_verify_ref(q, kp, vp, tables, pos0, softcap=cap)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.abs(o1.astype(jnp.float32)
+                         - o2.astype(jnp.float32)).max()) < tol
+
+
+def test_paged_verify_window_int8_dequant_in_kernel():
+    q, kp, vp, tables, pos0 = _verify_case(5, B=3, S=4, KH=2, G=4, d=32,
+                                           bs=8, NB=13, nb=5)
+
+    def quant(x):
+        sc = jnp.max(jnp.abs(x), axis=-1) / 127.0
+        qv = jnp.round(x / jnp.maximum(sc[..., None], 1e-8)).astype(jnp.int8)
+        return qv, sc
+
+    kq, ksc = quant(kp)
+    vq, vsc = quant(vp)
+    o1 = paged_verify_window(q, kq, vq, tables, pos0, ksc, vsc)
+    o2 = ref.paged_verify_ref(q, kq, vq, tables, pos0, ksc, vsc)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4
+
+
+def test_paged_verify_ref_matches_per_token_decode():
+    """A window of S queries equals S successive single-token paged decodes
+    (each query one position deeper) — the q_len>1 kernel's semantic
+    anchor to the decode kernel's."""
+    B, S, KH, G, d, bs, NB, nb = 2, 3, 2, 2, 16, 8, 10, 4
+    q, kp, vp, tables, pos0 = _verify_case(7, B, S, KH, G, d, bs, NB, nb)
+    win = ref.paged_verify_ref(q, kp, vp, tables, pos0)
+    for j in range(S):
+        one = ref.paged_decode_ref(q[:, j], kp, vp, tables, pos0 + j)
+        assert float(jnp.abs(win[:, j] - one).max()) < 1e-5
 
 
 def test_paged_decode_ref_matches_contiguous_gather():

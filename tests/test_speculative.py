@@ -1,0 +1,492 @@
+"""Self-speculative decoding: greedy bit-parity with the non-speculative
+baseline (offline + under the scheduler, both KV layouts, incl. a
+mid-flight admission), acceptance-rule unit tests, paged rollback
+invariants, energy split, and verify-kernel parity with the scan path."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from _propcheck import given, settings, strategies as st
+from repro.api import PolicySpec, SamplingParams
+from repro.core import energy
+from repro.core.early_exit import generate
+from repro.core.speculative import (accept_drafts, draft_boundary_layer,
+                                    speculative_generate)
+from repro.models import transformer as T
+from repro.serving import Engine, PagedKVPool, Scheduler
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, vocab, n).tolist() for n in lens]
+
+
+SPEC = PolicySpec("speculative", {"draft_idx": 0, "window": 3})
+
+
+@pytest.fixture(scope="module")
+def sched_pair(mini_cfg, mini_params):
+    """One scheduler per KV layout, with none/fixed/speculative compiled."""
+    scheds = {}
+    for layout in ("contiguous", "paged"):
+        scheds[layout] = Scheduler(
+            mini_params, mini_cfg, default_policy=PolicySpec("none"),
+            allowed_kinds=("none", "fixed", "speculative"),
+            max_slots=3, max_len=64, max_new=10, queue_depth=16,
+            kv_layout=layout, block_size=8, spec_window=3).start()
+    yield scheds
+    for s in scheds.values():
+        s.stop()
+
+
+# ---------------------------------------------------------------------------
+# offline draft-then-verify loop
+# ---------------------------------------------------------------------------
+def test_offline_greedy_bit_identical_both_layouts(mini_cfg, mini_params):
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(4, mini_cfg.vocab_size, (2, 14)),
+                         jnp.int32)
+    base = generate(mini_params, mini_cfg, prompt, 10)
+    spec = speculative_generate(mini_params, mini_cfg, prompt, 10,
+                                draft_idx=0, window=3)
+    np.testing.assert_array_equal(np.asarray(base["tokens"]),
+                                  np.asarray(spec["tokens"]))
+    np.testing.assert_allclose(np.asarray(base["logprobs"]),
+                               np.asarray(spec["logprobs"]), atol=1e-5)
+    assert spec["n_verifies"] >= 1
+    assert (np.asarray(spec["exit_layers"]) == mini_cfg.num_layers).all()
+    paged = speculative_generate(mini_params, mini_cfg, prompt, 10,
+                                 draft_idx=0, window=3, kv_block_size=8)
+    np.testing.assert_array_equal(np.asarray(base["tokens"]),
+                                  np.asarray(paged["tokens"]))
+
+
+def test_offline_kernel_path_matches_scan_path(mini_cfg, mini_params):
+    """use_kernel flips verification to the window-parallel Pallas kernel;
+    tokens still match the baseline (flash order, same math)."""
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(4, mini_cfg.vocab_size, (2, 11)),
+                         jnp.int32)
+    base = generate(mini_params, mini_cfg, prompt, 8)
+    spec = speculative_generate(mini_params, mini_cfg, prompt, 8,
+                                draft_idx=0, window=3, kv_block_size=8,
+                                use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(base["tokens"]),
+                                  np.asarray(spec["tokens"]))
+
+
+def test_offline_sampled_is_deterministic_and_batch_independent(
+        mini_cfg, mini_params):
+    rng = np.random.default_rng(9)
+    prompts = rng.integers(4, mini_cfg.vocab_size, (2, 12))
+    kw = dict(draft_idx=0, window=3, sampling=SamplingParams(
+        temperature=0.9, top_k=40), seeds=np.array([7, 8]))
+    a = speculative_generate(mini_params, mini_cfg, jnp.asarray(prompts),
+                             8, **kw)
+    b = speculative_generate(mini_params, mini_cfg, jnp.asarray(prompts),
+                             8, **kw)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    solo = speculative_generate(
+        mini_params, mini_cfg, jnp.asarray(prompts[:1]), 8, draft_idx=0,
+        window=3, sampling=SamplingParams(temperature=0.9, top_k=40),
+        seeds=np.array([7]))
+    np.testing.assert_array_equal(np.asarray(a["tokens"])[0],
+                                  np.asarray(solo["tokens"])[0])
+
+
+def test_speculative_unsupported_configs_fail_eagerly(mini_params):
+    from repro.configs.gemma2_9b import smoke as gemma_smoke
+    cfg = gemma_smoke()
+    with pytest.raises(ValueError, match="unsupported"):
+        speculative_generate(mini_params, cfg,
+                             jnp.zeros((1, 4), jnp.int32), 2)
+
+
+def test_scheduler_rejects_speculative_for_unsupported_cfg():
+    from repro.configs.gemma2_9b import smoke as gemma_smoke
+    cfg = gemma_smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="speculative"):
+        Scheduler(params, cfg, allowed_kinds=("none", "speculative"),
+                  max_slots=2, max_len=32)
+
+
+# ---------------------------------------------------------------------------
+# property: greedy speculative == non-speculative, both layouts
+# ---------------------------------------------------------------------------
+_PROP_STATE: dict = {}
+
+
+def _prop_model():
+    """A 6-layer mini (one real intermediate exit) built once per session —
+    the property decorators cannot consume pytest fixtures under the
+    hypothesis-less fallback."""
+    if not _PROP_STATE:
+        from repro.configs.llama32_3b import paper_mini
+        cfg = paper_mini(num_layers=6, d_model=64, vocab_size=256)
+        _PROP_STATE["cfg"] = cfg
+        _PROP_STATE["params"] = T.init_params(jax.random.PRNGKey(0), cfg)
+    return _PROP_STATE["cfg"], _PROP_STATE["params"]
+
+
+@given(st.integers(min_value=0, max_value=2 ** 20),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=5, deadline=None)
+def test_property_greedy_spec_bit_identical(seed, window):
+    cfg, params = _prop_model()
+    rng = np.random.default_rng(seed)
+    prompt = jnp.asarray(rng.integers(4, cfg.vocab_size, (2, 10)),
+                         jnp.int32)
+    base = generate(params, cfg, prompt, 8)
+    for kvb in (None, 8):                     # contiguous and paged
+        spec = speculative_generate(params, cfg, prompt, 8, draft_idx=0,
+                                    window=window, kv_block_size=kvb)
+        np.testing.assert_array_equal(np.asarray(base["tokens"]),
+                                      np.asarray(spec["tokens"]))
+
+
+def test_scheduler_greedy_spec_bit_identical(sched_pair, mini_cfg):
+    for seed in (0, 7, 19):
+        prompts = _prompts(mini_cfg.vocab_size, [8, 14], seed=seed)
+        for layout, sched in sched_pair.items():
+            for prompt in prompts:
+                base = sched.submit(prompt, max_new=8, policy="none")
+                base.result(180.0)
+                spec = sched.submit(prompt, max_new=8, policy=SPEC)
+                spec.result(180.0)
+                assert spec.tokens == base.tokens, (layout, seed)
+                assert spec.finish_reason == base.finish_reason
+                # verified tokens are full-depth; the energy split is
+                # charged through the speculative model instead
+                assert all(e == mini_cfg.num_layers
+                           for e in spec.exit_layers)
+                assert spec.spec_verifies >= 1
+
+
+def test_mid_flight_spec_admission_is_byte_identical(sched_pair, mini_cfg):
+    """A speculative request joining a running speculative batch matches
+    its solo run (and therefore the non-speculative baseline) exactly."""
+    a, b = _prompts(mini_cfg.vocab_size, [20, 14], seed=21)
+    for layout, sched in sched_pair.items():
+        base = sched.submit(b, max_new=8, policy="none")
+        base.result(180.0)
+        ha = sched.submit(a, max_new=16, policy=SPEC)
+        it = ha.stream(timeout=120.0)
+        for _ in range(3):
+            next(it)                    # A is mid-decode...
+        hb = sched.submit(b, max_new=8, policy=SPEC)
+        ha.result(180.0), hb.result(180.0)
+        assert hb.started_at < ha.finished_at, "B never overlapped A"
+        assert hb.tokens == base.tokens, layout
+
+
+def test_spec_mixes_with_other_policies_per_row(sched_pair, mini_cfg):
+    """speculative + fixed + none share one batch; every row matches its
+    solo run and the step never recompiles."""
+    p = _prompts(mini_cfg.vocab_size, [16, 12, 9], seed=4)
+    for layout, sched in sched_pair.items():
+        solos = [sched.submit(p[0], max_new=6, policy=SPEC),
+                 sched.submit(p[1], max_new=6, policy="fixed"),
+                 sched.submit(p[2], max_new=6, policy="none")]
+        for h in solos:
+            h.result(180.0)
+        mixed = [sched.submit(p[0], max_new=6, policy=SPEC),
+                 sched.submit(p[1], max_new=6, policy="fixed"),
+                 sched.submit(p[2], max_new=6, policy="none")]
+        for h in mixed:
+            h.result(180.0)
+        for solo, mix in zip(solos, mixed):
+            assert mix.tokens == solo.tokens, layout
+        assert sched.step_compiles == 1
+
+
+def test_scheduler_sampled_spec_join_matches_solo(sched_pair, mini_cfg):
+    """Rejection sampling is keyed by (seed, position): a sampled
+    speculative request reproduces its solo run when joining mid-flight."""
+    a, b = _prompts(mini_cfg.vocab_size, [15, 11], seed=31)
+    samp = SamplingParams(temperature=0.8, top_k=50, seed=123)
+    for layout, sched in sched_pair.items():
+        solo = sched.submit(b, max_new=8, policy=SPEC, sampling=samp)
+        solo.result(180.0)
+        ha = sched.submit(a, max_new=14, policy=SPEC)
+        it = ha.stream(timeout=120.0)
+        for _ in range(2):
+            next(it)
+        hb = sched.submit(b, max_new=8, policy=SPEC, sampling=samp)
+        ha.result(180.0), hb.result(180.0)
+        assert hb.tokens == solo.tokens, layout
+
+
+def test_spec_stats_and_energy_split(sched_pair, mini_cfg):
+    sched = sched_pair["paged"]
+    h = sched.submit(_prompts(mini_cfg.vocab_size, [12], seed=8)[0],
+                     max_new=8, policy=SPEC)
+    h.result(180.0)
+    st = sched.stats()
+    assert st["spec_window"] == 3
+    assert st["spec_verifies"] >= h.spec_verifies >= 1
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert st["tokens_per_verify"] >= 1.0
+    # the speculative energy model charges draft + verify separately; the
+    # fused verify window costs more than one full-depth step but far
+    # less than scoring its positions sequentially (bandwidth-bound)
+    dl = draft_boundary_layer(mini_cfg, 0)
+    e = energy.speculative_step_energy(mini_cfg, 12, dl, 3, 4)
+    assert e["draft_j"] > 0 and e["verify_j"] > 0
+    assert e["total_j"] == pytest.approx(e["draft_j"] + e["verify_j"])
+    full = energy.full_token_energy(mini_cfg, 12)
+    assert full <= e["verify_j"] < 4 * full
+    assert e["draft_j"] == pytest.approx(
+        3 * energy.draft_token_energy(mini_cfg, 12, dl))
+    assert h.energy_j > 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule
+# ---------------------------------------------------------------------------
+def _logits_for(chain, V=32, peak=8.0):
+    """[K+1, V] logits whose argmax follows ``chain``."""
+    out = np.zeros((len(chain), V), np.float32)
+    for j, t in enumerate(chain):
+        out[j, t] = peak
+    return out
+
+
+def test_accept_greedy_prefix_and_correction():
+    tl = _logits_for([5, 6, 9, 4])[None]          # argmax chain
+    drafts = np.array([[5, 6, 7]])                # third draft mismatches
+    n, nxt, lp = accept_drafts(drafts, tl, windows=3)
+    assert n[0] == 2 and nxt[0] == 9
+    assert lp[0, :3].shape == (3,)
+    # all accepted -> bonus token from the last window position
+    n, nxt, _ = accept_drafts(np.array([[5, 6, 9]]), tl, windows=3)
+    assert n[0] == 3 and nxt[0] == 4
+    # window caps acceptance even when every draft matches
+    n, nxt, _ = accept_drafts(np.array([[5, 6, 9]]), tl, windows=1)
+    assert n[0] == 1 and nxt[0] == 6
+
+
+def test_accept_greedy_lenient_threshold():
+    tl = _logits_for([5, 6, 9])[None].copy()
+    tl[0, 0, 7] = 7.5                             # near-argmax alternative
+    drafts = np.array([[7, 6]])
+    n, _, _ = accept_drafts(drafts, tl, windows=2)
+    assert n[0] == 0                              # exact mode rejects
+    n, _, _ = accept_drafts(drafts, tl, windows=2, accept_threshold=0.2)
+    assert n[0] == 2                              # lenient mode accepts
+
+
+def test_accept_rejection_sampling_limits():
+    V = 16
+    tl = np.zeros((1, 3, V), np.float32)
+    tl[0, :, 3] = 50.0                            # target mass on 3
+    dl = np.zeros((1, 2, V), np.float32)
+    # draft distribution == target distribution -> ratio 1, always accept
+    dl[0, :, 3] = 50.0
+    drafts = np.array([[3, 3]])
+    n, nxt, _ = accept_drafts(drafts, tl, windows=2, temperature=1.0,
+                              seeds=[5], pos0=[10], draft_logits=dl)
+    assert n[0] == 2
+    # draft token carries ~zero target mass -> reject, residual ~= target
+    dl2 = np.zeros((1, 2, V), np.float32)
+    dl2[0, :, 9] = 50.0
+    n, nxt, _ = accept_drafts(np.array([[9, 9]]), tl, windows=2,
+                              temperature=1.0, seeds=[5], pos0=[10],
+                              draft_logits=dl2)
+    assert n[0] == 0 and nxt[0] == 3
+    with pytest.raises(ValueError, match="draft_logits"):
+        accept_drafts(drafts, tl, windows=2, temperature=1.0)
+
+
+def test_accept_is_deterministic():
+    rng = np.random.default_rng(0)
+    tl = rng.normal(size=(2, 4, 24)).astype(np.float32)
+    dl = rng.normal(size=(2, 3, 24)).astype(np.float32)
+    drafts = rng.integers(0, 24, (2, 3))
+    kw = dict(windows=[3, 2], temperature=[0.0, 1.2], seeds=[1, 2],
+              pos0=[4, 9], draft_logits=dl)
+    a = accept_drafts(drafts, tl, **kw)
+    b = accept_drafts(drafts, tl, **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# paged rollback
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_cfg():
+    from repro.configs.llama32_3b import paper_mini
+    return paper_mini(num_layers=4, d_model=64, vocab_size=256)
+
+
+def test_rollback_append_restores_allocator_state(small_cfg):
+    pool = PagedKVPool(small_cfg, max_slots=2, max_len=32, block_size=4,
+                       num_blocks=16)
+    pool._writer = lambda c, *a, **k: c        # accounting-only test
+    pool._copier = lambda c, *a, **k: c
+    s = pool.alloc()
+    pool.write_prompt(s, list(range(6)), None, max_new=4)
+    in_use0 = pool.blocks.n_in_use
+    reserved0 = int(pool._reserved[s])
+    tables0 = pool.tables[s].copy()
+    nb0 = int(pool._n_blocks[s])
+    for pos in range(6, 6 + 6):                # draft overrun: 2 new blocks
+        pool.prepare_append(s, pos)
+    assert pool.blocks.n_in_use > in_use0
+    pool.rollback_append(s, keep_tokens=6)     # reject everything
+    assert pool.blocks.n_in_use == in_use0
+    assert int(pool._reserved[s]) == reserved0
+    assert int(pool._n_blocks[s]) == nb0
+    np.testing.assert_array_equal(pool.tables[s], tables0)
+    refs = [pool.blocks.refcount(int(b)) for b in tables0[:nb0]]
+    assert refs == [1, 1]
+    pool.release(s)
+    assert pool.blocks.n_in_use == 0 and pool.reserved_blocks == 0
+
+
+def test_rollback_after_cow_keeps_refcounts_consistent(small_cfg):
+    """A draft that COWs a shared tail and then fully rejects must leave
+    the sharer's block intact, the COW copy exclusively owned, and no
+    refcount drift (no COW leaks)."""
+    pool = PagedKVPool(small_cfg, max_slots=2, max_len=32, block_size=4,
+                       num_blocks=16)
+    pool._writer = lambda c, *a, **k: c
+    pool._copier = lambda c, *a, **k: c
+    sa = pool.alloc()
+    pool.write_prompt(sa, list(range(6)), None, max_new=6)
+    sb = pool.alloc()
+    pool.write_prompt(sb, list(range(6)), None, max_new=6)  # shares tail
+    tail = int(pool.tables[sb, 1])
+    assert pool.blocks.refcount(tail) == 2
+    in_use0 = pool.blocks.n_in_use
+    for pos in range(6, 12):                   # B drafts: COW + growth
+        pool.prepare_append(sb, pos)
+    assert pool.cow_copies == 1
+    pool.rollback_append(sb, keep_tokens=6)    # everything rejected
+    # A's tail untouched; B owns its COW copy alone; growth blocks freed
+    assert pool.blocks.refcount(tail) == 1
+    new_tail = int(pool.tables[sb, 1])
+    assert new_tail != tail and pool.blocks.refcount(new_tail) == 1
+    assert pool.blocks.n_in_use == in_use0 + 1  # only the COW copy remains
+    pool.release(sa)
+    pool.release(sb)
+    assert pool.blocks.n_in_use == 0 and pool.reserved_blocks == 0
+
+
+def test_spec_traffic_releases_all_blocks(sched_pair, mini_cfg):
+    sched = sched_pair["paged"]
+    handles = [sched.submit(p, max_new=8, policy=SPEC)
+               for p in _prompts(mini_cfg.vocab_size, [9, 13, 17, 11],
+                                 seed=40)]
+    for h in handles:
+        h.result(180.0)
+    st = sched.stats()
+    assert st["blocks_in_use"] == 0
+    assert st["blocks_reserved"] == 0
+    refs = sched.pool.blocks._refcount
+    assert int(refs[1:].sum()) == 0            # only scratch block pinned
+
+
+# ---------------------------------------------------------------------------
+# verify step: kernel vs scan parity on the full model
+# ---------------------------------------------------------------------------
+def test_verify_step_kernel_matches_scan(mini_cfg, mini_params):
+    from repro.models.transformer import (init_paged_cache, prefill,
+                                          ring_to_paged, verify_step)
+    rng = np.random.default_rng(11)
+    B, S0, S = 2, 8, 4
+    bs = 8
+    prompt = jnp.asarray(rng.integers(4, mini_cfg.vocab_size, (B, S0)),
+                         jnp.int32)
+    _, caches, _ = prefill(mini_params, mini_cfg, prompt, max_len=32)
+    caches, tables = ring_to_paged(mini_cfg, caches, bs)
+    win = jnp.asarray(rng.integers(4, mini_cfg.vocab_size, (B, S)),
+                      jnp.int32)
+    pos0 = jnp.full((B,), S0, jnp.int32)
+    l_ref, c_ref = verify_step(mini_params, mini_cfg, win, caches, pos0,
+                               block_tables=tables, use_kernel=False)
+    l_ker, c_ker = verify_step(mini_params, mini_cfg, win, caches, pos0,
+                               block_tables=tables, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_ker),
+                               atol=2e-4, rtol=2e-4)
+    for a, b in zip(jax.tree.leaves(c_ref), jax.tree.leaves(c_ker)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=2e-4)
+    del init_paged_cache
+
+
+def test_verify_write_mask_blocks_all_writes(mini_cfg, mini_params):
+    """Masked rows ride through verify with bit-unchanged caches (the
+    invariant that protects non-speculative residents)."""
+    from repro.models.transformer import prefill, rewind_ring, verify_step
+    rng = np.random.default_rng(13)
+    B, S0 = 2, 8
+    prompt = jnp.asarray(rng.integers(4, mini_cfg.vocab_size, (B, S0)),
+                         jnp.int32)
+    _, caches, _ = prefill(mini_params, mini_cfg, prompt, max_len=24)
+    win = jnp.asarray(rng.integers(4, mini_cfg.vocab_size, (B, 3)),
+                      jnp.int32)
+    pos0 = jnp.full((B,), S0, jnp.int32)
+    mask = jnp.asarray([True, False])
+    _, new_caches = verify_step(mini_params, mini_cfg, win, caches, pos0,
+                                write_mask=mask)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(new_caches)):
+        a, b = np.asarray(a), np.asarray(b)
+        # row 1 (masked) must be bit-identical; row 0 must have changed
+        batch_ax = 1 if a.ndim >= 3 and a.shape[0] != B else 0
+        np.testing.assert_array_equal(np.take(a, 1, axis=batch_ax),
+                                      np.take(b, 1, axis=batch_ax))
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(new_caches)))
+    assert changed
+    del rewind_ring
+
+
+def test_verify_kernel_learned_positions(mini_params):
+    """Regression: the window-parallel kernel path must embed window token
+    j at position pos0 + j — learned-positional configs (OPT family) get
+    per-window-offset embeddings, not S copies of pos0's."""
+    from repro.configs.opt_2_7b import paper_mini as opt_mini
+    from repro.core.speculative import speculative_generate
+    cfg = opt_mini(num_layers=6, d_model=64, vocab_size=256)
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(23)
+    prompt = jnp.asarray(rng.integers(4, 256, (2, 10)), jnp.int32)
+    base = generate(params, cfg, prompt, 8)
+    spec = speculative_generate(params, cfg, prompt, 8, draft_idx=0,
+                                window=3, kv_block_size=8, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(base["tokens"]),
+                                  np.asarray(spec["tokens"]))
+    del mini_params
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+def test_engine_speculative_matches_plain(mini_cfg, mini_params):
+    from repro.api import GenerationRequest
+    eng = Engine(mini_params, mini_cfg, max_new=8)
+    prompts = _prompts(mini_cfg.vocab_size, [12, 12], seed=17)
+    base = eng.serve(prompts, max_new=8)
+    spec = eng.serve(prompts, max_new=8, policy=SPEC)
+    assert spec.tokens == base.tokens
+    # mixed speculative / plain requests partition and keep order + ids
+    reqs = [GenerationRequest(prompt=prompts[0], max_new_tokens=8,
+                              policy=SPEC),
+            GenerationRequest(prompt=prompts[1], max_new_tokens=8,
+                              policy=PolicySpec("none"))]
+    res = eng.serve_requests(reqs)
+    assert [r.request_id for r in res] == [0, 1]
+    assert res[0].tokens == base.tokens[0]
+    assert res[1].tokens == base.tokens[1]
+    # the speculative row carries draft+verify energy, not the exit-layer
+    # model's full-depth-per-token number the plain row reports
+    full_e = energy.full_token_energy(mini_cfg, 12)
+    assert res[0].energy_j == pytest.approx(res[0].metrics.energy_j)
+    assert res[0].energy_j != pytest.approx(full_e * len(res[0].tokens))
+    assert res[1].energy_j == pytest.approx(full_e * len(res[1].tokens))
