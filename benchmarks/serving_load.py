@@ -33,6 +33,17 @@ identical) and against plain early exit at the same draft boundary (cheaper
 but inexact), reporting acceptance rate, accepted tokens per verify and
 modeled J/token (draft-layer + full-depth FLOPs charged separately).
 
+A fourth phase replays one workload through both pools' admission
+bookkeeping on a **virtual clock** (``run_admission_trace``): the
+admit/retire event log and peak concurrent residents are deterministic
+functions of the workload, so ``paged_admits_more_concurrent`` hard-gates
+in CI instead of the old warn-only wall-clock race.
+
+A fifth phase (``run_prefill_compare``) measures prompt-ingestion TTFT
+and XLA compile counts across many distinct prompt lengths for chunked
+vs bucketed vs per-length prefill — chunked compiles exactly ONE shape;
+CI gates on ``chunked_compiles <= bucketed_compiles``.
+
 Both systems are shape-warmed before the timed run so XLA compile time is
 excluded — the comparison isolates steady-state scheduling behavior.
 Results also land in ``BENCH_serving.json`` at the repo root (schema-stable
@@ -52,6 +63,7 @@ import time
 from dataclasses import dataclass
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.llama32_3b import paper_mini
@@ -268,6 +280,187 @@ def run_kv_compare(params, cfg, *, rate: float, n: int, slots: int,
     return out
 
 
+def run_admission_trace(cfg, *, slots: int, max_len: int,
+                        block_size: int = 8, n: int = 24,
+                        seed: int = 0) -> dict:
+    """Deterministic admission trace: paged vs contiguous at an equal
+    KV-byte budget on a VIRTUAL clock.
+
+    One workload replays through the two pools' real admission / growth /
+    retirement bookkeeping — no decode thread, no device compute, no wall
+    clock. One tick = one decode step; job ``i`` arrives at tick ``i``;
+    a resident emits one token per tick and retires at its own
+    ``max_new``. The admit/retire event log and the peak number of
+    concurrent residents are therefore pure functions of (workload, pool
+    geometry): two replays produce structurally identical logs, so CI can
+    hard-gate ``paged_admits_more_concurrent`` instead of warn-only
+    racing on shared runners (the old wall-clock formulation).
+    """
+    from repro.serving.kv_pool import PagedKVPool
+    from repro.serving.scheduler import KVSlotPool
+
+    jobs = make_workload(n, 1.0, cfg.vocab_size, seed=seed)
+    # one pool per layout, reused for budget math AND the replay — the
+    # trace drives bookkeeping only (device writers stubbed), so no other
+    # device allocation is needed
+    cont_pool = KVSlotPool(cfg, slots, max_len)
+    probe = PagedKVPool(cfg, 1, block_size, block_size=block_size,
+                        num_blocks=2)
+    num_blocks = max(cont_pool.kv_bytes_total // probe.bytes_per_block, 2)
+    del probe
+    paged_pool = PagedKVPool(cfg, 4 * slots, max_len,
+                             block_size=block_size, num_blocks=num_blocks)
+    paged_pool._writer = lambda c, *a, **k: c       # accounting only
+    paged_pool._copier = lambda c, *a, **k: c
+
+    def trace(paged: bool) -> dict:
+        pool = paged_pool if paged else cont_pool
+        pending = list(range(len(jobs)))            # job i arrives at tick i
+        queue: list[int] = []
+        resident: dict[int, list] = {}              # slot -> [i, pos, left]
+        events: list[tuple] = []
+        peak = 0
+        t = 0
+        while (pending or queue or resident) and t < 100_000:
+            while pending and pending[0] <= t:
+                queue.append(pending.pop(0))
+            # shortest-prompt-first, submit-order tiebreak (the
+            # scheduler's _pick_next rule; its aging clause is wall-clock
+            # and has no virtual-time analogue here)
+            while pool.n_free and queue:
+                order = sorted(queue,
+                               key=lambda i: (len(jobs[i].prompt), i))
+                pick = None
+                for i in order:
+                    if not paged or pool.can_admit(jobs[i].prompt,
+                                                   jobs[i].max_new):
+                        pick = i
+                        break
+                if pick is None:
+                    break                           # block-starved
+                queue.remove(pick)
+                slot = pool.alloc()
+                if paged:
+                    pool.write_prompt(slot, jobs[pick].prompt, None,
+                                      max_new=jobs[pick].max_new)
+                resident[slot] = [pick, len(jobs[pick].prompt),
+                                  jobs[pick].max_new]
+                events.append((t, "admit", pick))
+            peak = max(peak, len(resident))
+            for slot in sorted(resident):
+                i, pos, left = resident[slot]
+                if paged:
+                    pool.prepare_append(slot, pos)  # real block growth
+                resident[slot] = [i, pos + 1, left - 1]
+                if left - 1 == 0:
+                    pool.release(slot)
+                    del resident[slot]
+                    events.append((t, "retire", i))
+            t += 1
+        assert not (pending or queue or resident), \
+            "admission trace failed to drain"
+        return {"peak_residents": peak, "ticks": t,
+                "events": [list(e) for e in events]}
+
+    out = {"contiguous": trace(False), "paged": trace(True)}
+    more = (out["paged"]["peak_residents"]
+            > out["contiguous"]["peak_residents"])
+    out["paged_admits_more_concurrent"] = bool(more)
+    print(f"[load] admission-trace (virtual clock): paged peak residents "
+          f"{out['paged']['peak_residents']} vs contiguous "
+          f"{out['contiguous']['peak_residents']} — "
+          f"{'STRICTLY MORE' if more else 'NO MORE'} (deterministic)")
+    return out
+
+
+def run_prefill_compare(params, cfg, *, chunk: int = 16,
+                        lens=(9, 11, 14, 18, 21, 24, 27, 31, 35, 39, 44,
+                              52),
+                        max_new: int = 8, buckets=(16, 32, 64),
+                        seed: int = 0) -> dict:
+    """TTFT / compile-count phase: chunked vs bucketed vs per-length
+    prefill over a workload of many DISTINCT prompt lengths.
+
+    * ``per_length`` — the seed behavior: one XLA compile per distinct
+      prompt length (jit cache size == #lengths).
+    * ``bucketed``  — the deleted ``prefill_buckets`` knob: prompts
+      left-pad to the next bucket, one compile per bucket used.
+    * ``chunked``   — ``transformer.prefill_chunk``: every prompt runs
+      the SAME [1, chunk] compiled step against a fixed ring — exactly
+      one compile, for any length, ever.
+
+    TTFT proxy: wall time from prompt arrival to prefill completion at
+    zero load (the first occurrence of a shape pays its compile — the
+    cost the per-length/bucketed modes re-pay per new shape while
+    chunked pays once). Emitted into BENCH_serving.json; CI gates on
+    ``chunked_compiles <= bucketed_compiles``.
+    """
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(4, cfg.vocab_size, n).tolist() for n in lens]
+    W = max(lens) + max_new
+    W += (-W) % chunk
+    out: dict = {}
+
+    def arm(name, fn, compiles):
+        ttfts = []
+        for p in prompts:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(p))
+            ttfts.append(time.perf_counter() - t0)
+        out[name] = {
+            "compiles": int(compiles()),
+            "ttft_mean_s": float(np.mean(ttfts)),
+            "ttft_max_s": float(np.max(ttfts)),
+            "ttft_first_s": float(ttfts[0]),
+        }
+        print(f"[load] prefill-compare {name:10s} "
+              f"compiles={out[name]['compiles']:3d} "
+              f"ttft mean={out[name]['ttft_mean_s']*1e3:7.1f}ms "
+              f"max={out[name]['ttft_max_s']*1e3:7.1f}ms", flush=True)
+
+    pf_len = jax.jit(lambda pr, toks: T.prefill(pr, cfg, toks,
+                                                max_len=W)[0])
+    arm("per_length",
+        lambda p: pf_len(params, jnp.asarray([p], jnp.int32)),
+        pf_len._cache_size)
+
+    pf_bkt = jax.jit(lambda pr, toks: T.prefill(pr, cfg, toks,
+                                                max_len=W)[0])
+
+    def bucketed(p):
+        blen = min((b for b in buckets if b >= len(p)),
+                   default=max(lens))
+        padded = [0] * (max(blen, len(p)) - len(p)) + list(p)
+        return pf_bkt(params, jnp.asarray([padded], jnp.int32))
+
+    arm("bucketed", bucketed, pf_bkt._cache_size)
+
+    cj = jax.jit(lambda pr, toks, ring, pos0, nv: T.prefill_chunk(
+        pr, cfg, toks, ring, pos0, nv))
+
+    def chunked(p):
+        ring = T.init_prefill_ring(cfg, 1, W)
+        lg = None
+        grid = np.asarray(list(p) + [0] * ((-len(p)) % chunk), np.int32)
+        for pos0 in range(0, len(p), chunk):
+            lg, ring = cj(params, jnp.asarray(grid[None, pos0:pos0 + chunk]),
+                          ring, jnp.asarray([pos0], jnp.int32),
+                          jnp.asarray([len(p)], jnp.int32))
+        return lg
+
+    arm("chunked", chunked, cj._cache_size)
+    out["chunk"] = chunk
+    out["buckets"] = list(buckets)
+    out["lens"] = list(lens)
+    ok = out["chunked"]["compiles"] <= out["bucketed"]["compiles"]
+    out["chunked_compiles_leq_bucketed"] = bool(ok)
+    print(f"[load] chunked prefill: {out['chunked']['compiles']} compile "
+          f"for {len(set(lens))} distinct lengths (bucketed "
+          f"{out['bucketed']['compiles']}, per-length "
+          f"{out['per_length']['compiles']})")
+    return out
+
+
 def run_spec_compare(*, rate: float, n: int, slots: int, num_layers: int,
                      d_model: int, vocab: int, block_size: int = 8,
                      spec_window: int = 4, train_steps: int = 30,
@@ -407,10 +600,14 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
                                     num_layers=num_layers, d_model=d_model,
                                     vocab=vocab, block_size=block_size,
                                     seed=seed)
+    admission_trace = run_admission_trace(cfg, slots=slots, max_len=max_len,
+                                          block_size=block_size, n=n,
+                                          seed=seed)
+    prefill_compare = run_prefill_compare(params, cfg, seed=seed)
 
     payload = {
         "bench": "serving_load",
-        "schema_version": 1,
+        "schema_version": 2,
         "smoke": smoke,
         "config": {"num_layers": num_layers, "d_model": d_model,
                    "vocab": vocab, "slots": slots, "n": n,
@@ -419,6 +616,8 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
         "speedup_at_top_rate": speedup,
         "kv_compare": kv_compare,
         "spec_compare": spec_compare,
+        "admission_trace": admission_trace,
+        "prefill_compare": prefill_compare,
     }
     if save:
         wrote = []

@@ -133,6 +133,14 @@ class GenerationResult:
     metrics: Any = None                # serving.metrics.RequestMetrics
     request_id: Optional[int] = None
     latency_s: Optional[float] = None
+    # the serving layer silently kept only the tail of an over-long prompt
+    # (pool geometry / max_context bound) — surfaced, never swallowed
+    truncated: bool = False
+    # per-token log-probs of the emitted tokens under the distribution
+    # that PICKED them — for early-exit rows that is the exited layer's
+    # head, not the full-depth model. None when the producing path does
+    # not record them (e.g. speculative super-ticks).
+    logprobs: Optional[list[float]] = None
 
     @property
     def n_tokens(self) -> int:

@@ -184,6 +184,22 @@ def verify_window_energy(cfg: ModelConfig, ctx_len: int, S: int) -> float:
     return _energy(fl, by)
 
 
+def prefill_chunk_energy(cfg: ModelConfig, ctx_len: int,
+                         n_tokens: int) -> float:
+    """Modeled J of one ``n_tokens``-position prefill chunk at context
+    ``ctx_len`` (the chunk's end position).
+
+    A chunk is a fused full-depth pass: per-position FLOPs scale with the
+    chunk length while each layer's weights and the attended cache stream
+    once — the same roofline shape as the speculative verify window
+    (:func:`verify_window_energy`). The serving scheduler charges one of
+    these per admitted chunk, so fleet accounting sees prompt-ingestion
+    joules per request instead of silently attributing prefill to the
+    first decode token.
+    """
+    return verify_window_energy(cfg, ctx_len, n_tokens)
+
+
 def speculative_step_energy(cfg: ModelConfig, ctx_len: int,
                             draft_layer: int, n_draft: int,
                             n_verify: int) -> dict:

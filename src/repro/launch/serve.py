@@ -76,6 +76,10 @@ def main():
                          "prefix sharing)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (with --kv-layout paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens ingested per scheduler tick (one "
+                         "compiled prefill shape for every prompt length; "
+                         "with --scheduler)")
     args = ap.parse_args()
 
     mod = __import__(f"repro.configs."
@@ -127,6 +131,7 @@ def main():
                           kv_layout=args.kv_layout,
                           block_size=args.block_size,
                           spec_window=args.spec_window,
+                          prefill_chunk=args.prefill_chunk,
                           queue_depth=max(64, args.requests)).start()
         try:
             handles = [sched.submit(r) for r in reqs]
@@ -172,8 +177,10 @@ def main():
         print(f"  [scheduler] slots={st['max_slots']} "
               f"throughput={st['throughput_tok_s']:.1f} tok/s "
               f"fleet J/tok={st['fleet_j_per_token']:.3e} "
+              f"prefill J={st['fleet_prefill_energy_j']:.3e} "
               f"p95 latency={st['latency_p95_s']:.3f}s "
-              f"step compiles={st['step_compiles']}")
+              f"step compiles={st['step_compiles']} "
+              f"prefill compiles={st['prefill_compiles']}")
         sched.stop()
 
 

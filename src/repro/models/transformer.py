@@ -35,9 +35,10 @@ from repro.config import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_GQA,
                           MIXER_SHARED_GQA, LayerSpec, ModelConfig)
 from repro.core.exit_points import segment_boundaries
 from repro.models import ssm
-from repro.models.attention import (apply_gqa_decode, apply_gqa_train,
-                                    apply_mla_decode, apply_mla_train,
-                                    decode_qkv, init_gqa, init_mla)
+from repro.models.attention import (NEG_INF, apply_gqa_decode,
+                                    apply_gqa_train, apply_mla_decode,
+                                    apply_mla_train, decode_qkv, init_gqa,
+                                    init_mla, window_qkv)
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
                                  init_embed, init_mlp, init_norm,
                                  padded_vocab, softcap)
@@ -825,6 +826,272 @@ def copy_paged_block(cfg: ModelConfig, caches, src, dst):
         else:
             out.append([{k: cp(v, False) for k, v in cj.items()}
                         for cj in c])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (one compiled shape for arbitrary prompt lengths; the
+# serving scheduler feeds prompts through these chunk-by-chunk while decode
+# ticks keep running — serving/scheduler.py owns the interleaving policy)
+# ---------------------------------------------------------------------------
+def chunked_prefill_unsupported(cfg: ModelConfig) -> Optional[str]:
+    """Why this config cannot use chunked prefill (None = it can).
+
+    Chunking covers full-attention GQA layers (incl. shared-weight and int8
+    variants) — the class whose prefix K/V is an exact function of the
+    prefix tokens. Mamba prefill carries recurrent state through a
+    different (train-path) scan, MLA latent rings are not chunk-aware yet,
+    sliding-window rings evict prefix entries later chunks must re-read,
+    and MoE expert-capacity routing couples tokens at prefill, so the
+    chunk grid would change the routing (and therefore the output). The
+    scheduler falls back to whole-prompt prefill for these configs.
+    """
+    for spec in cfg.block_pattern:
+        if spec.mixer == MIXER_MAMBA:
+            return "mamba prefill carries recurrent state, not a KV ring"
+        if spec.mixer == MIXER_MLA:
+            return "MLA latent rings are not chunk-aware yet"
+        if _window_for(cfg, spec):
+            return ("sliding-window rings evict prefix entries later "
+                    "chunks must re-read")
+        if spec.ffn == FFN_MOE:
+            return ("MoE expert-capacity routing couples tokens, so the "
+                    "chunk grid would change prefill routing")
+    return None
+
+
+def init_prefill_ring(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.float32):
+    """Empty full-precision prompt-ingestion rings (pos = -1 everywhere).
+
+    Unlike :func:`init_cache`, K/V stay in ``dtype`` even for int8 configs:
+    chunk attention must read the exact values whole-prompt prefill would
+    have attended over; :func:`finalize_prefill_ring` quantizes once at
+    splice time (the same one-shot quantization ``_ring_one`` applies).
+    """
+    reason = chunked_prefill_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"chunked prefill unsupported for {cfg.name}: "
+                         f"{reason}")
+    segs = plan_segments(cfg)
+
+    def one(n: int | None):
+        pre = (n,) if n is not None else ()
+        return {
+            "k": jnp.zeros((*pre, batch, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((*pre, batch, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dtype),
+            "pos": jnp.full((*pre, batch, max_len), -1, jnp.int32),
+        }
+
+    return [one(seg.length) if seg.scanned
+            else [one(None) for _ in seg.specs] for seg in segs]
+
+
+def _apply_layer_chunk(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
+                       h: Array, cache, pos0: Array, n_valid: Array):
+    """One prompt chunk through one full-attention GQA layer.
+
+    Insert-then-attend against the fixed-length ring: the chunk's K/V is
+    written at its absolute positions first, then every query attends over
+    the whole ring under a ``kv_pos <= q_pos`` mask. The softmax max and
+    denominator therefore always reduce over the same ``W`` entries —
+    reductions are the one place XLA's rounding depends on extent, so the
+    fixed extent is what makes the result invariant to the chunk split
+    (dot-generals are exact under zero padding already).
+    """
+    mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
+    B, C, _ = h.shape
+    x = apply_norm(lp["norm1"], h)
+    q, k, v = window_qkv(mp, cfg, x, pos0)
+    idx = pos0[:, None] + jnp.arange(C)[None, :]            # [B, C]
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bidx, idx].set(k, mode="drop")
+    cv = cache["v"].at[bidx, idx].set(v, mode="drop")
+    # grid-padding positions past the prompt keep pos = -1: their K/V lands
+    # in the ring as inert garbage nothing ever attends to
+    newpos = jnp.where(idx < n_valid[:, None], idx, -1)
+    cpos = cache["pos"].at[bidx, idx].set(newpos, mode="drop")
+    KH = cfg.num_kv_heads
+    G = cfg.num_heads // KH
+    scale = cfg.head_dim ** -0.5
+    qr = q.reshape(B, C, KH, G, cfg.head_dim) * scale
+    s = jnp.einsum("bckgd,btkd->bkgct", qr, ck,
+                   preferred_element_type=jnp.float32)
+    s = softcap(s, cfg.attn_logit_softcap)
+    mask = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= idx[..., None])
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1)
+    pr = jnp.exp(s - m[..., None])
+    denom = pr.sum(axis=-1)
+    o = jnp.einsum("bkgct,btkd->bkgcd", pr, cv,
+                   preferred_element_type=jnp.float32)
+    o = (o / denom[..., None]).astype(x.dtype)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, C, cfg.q_dim)
+    out = o @ mp["wo"]
+    if "bo" in mp:
+        out = out + mp["bo"]
+    h = h + out
+    if spec.ffn != FFN_NONE:
+        x2 = apply_norm(lp["norm2"], h)
+        h = h + apply_mlp(lp["ffn"], cfg, x2)
+    return h, {"k": ck, "v": cv, "pos": cpos}
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens: Array, caches,
+                  pos0: Array, n_valid: Array):
+    """Run one prompt chunk against (and into) prefill ring caches.
+
+    tokens: [B, C] prompt tokens at absolute positions ``pos0 + j``
+    (entries at positions >= ``n_valid`` are grid padding — computed but
+    never attended). caches: rings from :func:`init_prefill_ring` in
+    logical order (the ring never wraps: W >= prompt). Because every
+    reduction runs at the fixed ring length, any chunk split of a prompt —
+    including one whole-prompt chunk — produces bit-identical hidden
+    states, K/V and logits (tests/test_chunked_prefill.py pins this), so
+    one compiled shape serves arbitrary prompt lengths.
+
+    Returns (logits [B, C, V] float32, new_caches).
+    """
+    reason = chunked_prefill_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"chunked prefill unsupported for {cfg.name}: "
+                         f"{reason}")
+    segs = plan_segments(cfg)
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    h = embed_inputs(params, cfg, tokens, pos=pos0)
+    shared_p = params.get("shared_attn")
+    new_caches = []
+    for i, seg in enumerate(segs):
+        sp, c = params["segments"][i], caches[i]
+        if seg.scanned:
+            spec = seg.specs[0]
+
+            def body(hh, xs):
+                lp, cache = xs
+                return _apply_layer_chunk(lp, shared_p, cfg, spec, hh,
+                                          cache, pos0, n_valid)
+
+            h, nc = jax.lax.scan(body, h, (sp, c))
+        else:
+            nc = []
+            for j, spec in enumerate(seg.specs):
+                h, ncj = _apply_layer_chunk(sp[j], shared_p, cfg, spec, h,
+                                            c[j], pos0, n_valid)
+                nc.append(ncj)
+        new_caches.append(nc)
+    logits = lm_logits(params, cfg, h).astype(jnp.float32)
+    return logits, new_caches
+
+
+def finalize_prefill_ring(cfg: ModelConfig, caches):
+    """Convert a finished full-precision prefill ring into pool-layout
+    caches: int8 configs quantize K/V once (the same per-entry scheme
+    ``_ring_one`` applies after whole-prompt prefill), f32 configs pass
+    through unchanged. The result feeds ``write_cache_slots`` /
+    ``write_paged_ring`` directly."""
+    if cfg.kv_cache_dtype != "int8":
+        return caches
+
+    def conv(c):
+        out = dict(c)
+        out["k"], out["k_s"] = _quant_kv(c["k"])
+        out["v"], out["v_s"] = _quant_kv(c["v"])
+        return out
+
+    segs = plan_segments(cfg)
+    return [conv(c) if seg.scanned else [conv(cj) for cj in c]
+            for seg, c in zip(segs, caches)]
+
+
+def paged_prefix_to_ring(cfg: ModelConfig, pool_caches, ring_caches,
+                         block_ids: Array, n_tokens: Array):
+    """Copy ``n_tokens`` of prefix-shared block content into a (batch-1)
+    prefill ring, dequantized for int8 pools so chunk attention reads
+    exactly what decode would read. ``block_ids`` [nb] spans the ring
+    (``nb * block_size == ring length``); entries past the shared chain
+    may be arbitrary — everything at position >= ``n_tokens`` is masked.
+    Jit-able with ring donation; ``n_tokens`` may be traced.
+    """
+    segs = plan_segments(cfg)
+    ids = jnp.asarray(block_ids, jnp.int32)
+    n_tokens = jnp.asarray(n_tokens, jnp.int32)
+
+    def conv(pool_c, ring_c, stacked):
+        int8 = "k_s" in pool_c
+        W = ring_c["k"].shape[2 if stacked else 1]
+        valid = jnp.arange(W) < n_tokens
+
+        def gather(name):
+            plane = pool_c[name]
+            if stacked:
+                g = plane[:, ids]                     # [L, nb, bs, ...]
+                return g.reshape(g.shape[0], 1, W, *g.shape[3:])
+            g = plane[ids]
+            return g.reshape(1, W, *g.shape[2:])
+
+        out = {}
+        for name in ("k", "v"):
+            g = gather(name)
+            if int8:
+                g = _dequant_kv(g, gather(name + "_s"),
+                                ring_c[name].dtype)
+            vmask = valid.reshape((1,) * (g.ndim - 3) + (W, 1, 1))
+            out[name] = jnp.where(vmask, g.astype(ring_c[name].dtype),
+                                  ring_c[name])
+        pos = jnp.where(valid, jnp.arange(W), -1)
+        out["pos"] = jnp.broadcast_to(pos, ring_c["pos"].shape)
+        return out
+
+    out = []
+    for seg, pc, rc in zip(segs, pool_caches, ring_caches):
+        if seg.scanned:
+            out.append(conv(pc, rc, True))
+        else:
+            out.append([conv(pcj, rcj, False)
+                        for pcj, rcj in zip(pc, rc)])
+    return out
+
+
+def write_paged_ring(cfg: ModelConfig, pool_caches, ring_caches,
+                     block_ids: Array, n_skip: Array, n_write: Array):
+    """Fixed-shape scatter of a finalized prefill ring into pool block
+    planes: ring blocks ``[n_skip, n_write)`` land at ``block_ids[j]``.
+
+    Unlike :func:`write_paged_blocks` (static slice bounds — one compile
+    per (n_write, n_skip) pair), the bounds here are traced: excluded
+    blocks scatter out of range and drop, so every admission shares ONE
+    compiled splice. Jit-able with pool donation.
+    """
+    segs = plan_segments(cfg)
+    ids = jnp.asarray(block_ids, jnp.int32)
+    nb = ids.shape[0]
+    j = jnp.arange(nb)
+    keep = (j >= jnp.asarray(n_skip)) & (j < jnp.asarray(n_write))
+
+    def put(pool_leaf, ring_leaf, stacked):
+        oob = pool_leaf.shape[1 if stacked else 0]
+        ids_eff = jnp.where(keep, ids, oob)
+        if stacked:
+            bs = pool_leaf.shape[2]
+            blocks = ring_leaf.reshape(ring_leaf.shape[0], nb, bs,
+                                       *ring_leaf.shape[3:])
+            return pool_leaf.at[:, ids_eff].set(
+                blocks.astype(pool_leaf.dtype), mode="drop")
+        bs = pool_leaf.shape[1]
+        blocks = ring_leaf.reshape(nb, bs, *ring_leaf.shape[2:])
+        return pool_leaf.at[ids_eff].set(blocks.astype(pool_leaf.dtype),
+                                         mode="drop")
+
+    out = []
+    for seg, pc, rc in zip(segs, pool_caches, ring_caches):
+        if seg.scanned:
+            out.append({k: put(pc[k], rc[k], True) for k in pc})
+        else:
+            out.append([{k: put(pcj[k], rcj[k], False) for k in pcj}
+                        for pcj, rcj in zip(pc, rc)])
     return out
 
 

@@ -283,7 +283,10 @@ class Engine:
             out.append(GenerationResult(
                 tokens=toks, exit_layers=exits, finish_reason=reason,
                 text=text, energy_j=metrics.energy_j, metrics=metrics,
-                request_id=i))
+                request_id=i,
+                # serve() kept only the last max_context tokens — the same
+                # silent tail clip the scheduler now surfaces
+                truncated=len(prompts[i]) > ctx_len))
         return out
 
 

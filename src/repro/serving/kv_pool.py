@@ -55,7 +55,9 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.transformer import (copy_paged_block, init_paged_cache,
-                                      paged_unsupported, write_paged_blocks)
+                                      paged_prefix_to_ring,
+                                      paged_unsupported, write_paged_blocks,
+                                      write_paged_ring)
 
 
 def chain_hashes(tokens: Sequence[int], block_size: int) -> list[bytes]:
@@ -234,6 +236,13 @@ class PagedKVPool:
         self._writer = jax.jit(partial(write_paged_blocks, cfg),
                                static_argnames=("n_write", "n_skip"),
                                donate_argnums=0)
+        # chunked-prefill splice/gather: traced bounds, so every admission
+        # shares ONE compile each (the legacy _writer's static slice
+        # compiles per (n_write, n_skip) pair)
+        self._ring_writer = jax.jit(partial(write_paged_ring, cfg),
+                                    donate_argnums=0)
+        self._prefix_gather = jax.jit(partial(paged_prefix_to_ring, cfg),
+                                      donate_argnums=1)
         self._copier = jax.jit(partial(copy_paged_block, cfg),
                                donate_argnums=0)
         self.prefix_queries = 0
@@ -321,20 +330,20 @@ class PagedKVPool:
         self._free_slots.append(slot)
 
     # -- admission ----------------------------------------------------------
-    def write_prompt(self, slot: int, prompt: Sequence[int], req_caches,
-                     max_new: int) -> int:
-        """Bind the prompt's blocks to ``slot`` and splice the prefilled
-        cache in; returns the number of prefix-cache-shared tokens.
+    def bind_prompt(self, prompt: Sequence[int]
+                    ) -> tuple[list[int], int, bool]:
+        """Allocate/share the prompt's blocks WITHOUT touching a slot's
+        table or the device planes. Chunked admission binds early — so the
+        blocks are owned while the prompt streams in chunk-by-chunk over
+        several decode ticks — and installs on the last chunk
+        (:meth:`install_prompt`); an aborted admission hands the blocks
+        back via :meth:`abort_bind`.
 
-        ``req_caches``: ring caches from
-        ``prefill(..., max_len=blocks_for(len(prompt)) * block_size)``.
-        Shared blocks are incref'd and skipped by the device write (full
-        shared blocks already hold byte-identical content; a shared
-        *mutable* tail must never be rewritten — its sharer may have
-        appended decode tokens past the prompt).
+        Returns ``(block_ids, n_shared, tail_shared)``: the bound chain,
+        how many leading blocks were prefix-cache shares, and whether the
+        final (partial) block is a shared mutable tail (exact-prompt
+        match — must never be rewritten, its sharer may have appended).
         """
-        if not self._slot_used[slot]:
-            raise ValueError(f"slot {slot} not allocated")
         S = len(prompt)
         n0 = self.blocks_for(S)
         keys = (_chain_hashes_cached(tuple(prompt), self.block_size)
@@ -355,6 +364,27 @@ class PagedKVPool:
             ids.append(b)
             if keys:
                 self.blocks.register(b, keys[j])
+        return ids, n_shared, tail_shared
+
+    def abort_bind(self, ids: Sequence[int]) -> None:
+        """Return bound-but-never-installed blocks (admission aborted
+        mid-prefill — scheduler drain/crash)."""
+        for b in ids:
+            self.blocks.decref(int(b))
+
+    def install_prompt(self, slot: int, prompt_len: int, ids: Sequence[int],
+                       n_shared: int, tail_shared: bool, max_new: int
+                       ) -> tuple[int, int]:
+        """Install bound blocks into ``slot``'s table row and account the
+        growth reservation + prefix stats. Returns the device-write bounds
+        ``(n_skip, n_write)``: shared full blocks already hold
+        byte-identical content and a shared mutable tail must never be
+        rewritten, so only ring blocks in ``[n_skip, n_write)`` are
+        spliced."""
+        if not self._slot_used[slot]:
+            raise ValueError(f"slot {slot} not allocated")
+        S = prompt_len
+        n0 = len(ids)
         self.tables[slot, :n0] = ids
         self.tables[slot, n0:] = 0
         self._n_blocks[slot] = n0
@@ -365,6 +395,7 @@ class PagedKVPool:
         # charging only shared tails would let that COW steal a unit from
         # this slot's growth reservation (each slot COWs at most once:
         # after it, the tail is exclusive and all later blocks are fresh)
+        tail_partial = S % self.block_size != 0
         cow_slack = int(bool(self.enable_prefix_cache) and tail_partial)
         self._reserved[slot] = (self.blocks_for(S + max_new) - n0
                                 + cow_slack)
@@ -373,15 +404,55 @@ class PagedKVPool:
             if n_shared:
                 self.prefix_hits += 1
                 self.prefix_hit_tokens += min(n_shared * self.block_size, S)
-        # write only the unshared suffix: shared full blocks already hold
-        # byte-identical content; a shared mutable tail is excluded too
-        n_write = n0 - int(tail_shared)
-        n_skip = n_shared - int(tail_shared)
+        return n_shared - int(tail_shared), n0 - int(tail_shared)
+
+    def write_prompt(self, slot: int, prompt: Sequence[int], req_caches,
+                     max_new: int) -> int:
+        """Bind the prompt's blocks to ``slot`` and splice the prefilled
+        cache in; returns the number of prefix-cache-shared tokens.
+
+        ``req_caches``: ring caches from
+        ``prefill(..., max_len=blocks_for(len(prompt)) * block_size)``.
+        The whole-prompt admission path (and the offline engine); chunked
+        admission uses bind_prompt / install_prompt / write_ring instead.
+        """
+        if not self._slot_used[slot]:
+            raise ValueError(f"slot {slot} not allocated")
+        S = len(prompt)
+        ids, n_shared, tail_shared = self.bind_prompt(prompt)
+        n_skip, n_write = self.install_prompt(slot, S, ids, n_shared,
+                                              tail_shared, max_new)
         if n_write > n_skip:
             ids_arr = jnp.asarray(ids, jnp.int32)
             self.caches = self._writer(self.caches, req_caches, ids_arr,
                                        n_write=n_write, n_skip=n_skip)
         return min(n_shared * self.block_size, S)
+
+    def write_ring(self, slot: int, ring_caches, n_skip: int,
+                   n_write: int) -> None:
+        """Splice a finalized prefill ring (length
+        ``max_blocks_per_slot * block_size``, batch 1) into this slot's
+        installed blocks — one compiled scatter for every admission
+        (bounds are traced)."""
+        ids = np.zeros(self.max_blocks_per_slot, np.int32)
+        nb = int(self._n_blocks[slot])
+        ids[:nb] = self.tables[slot, :nb]
+        self.caches = self._ring_writer(self.caches, ring_caches,
+                                        jnp.asarray(ids),
+                                        jnp.asarray(n_skip, jnp.int32),
+                                        jnp.asarray(n_write, jnp.int32))
+
+    def gather_prefix(self, ring_caches, ids: Sequence[int],
+                      n_tokens: int):
+        """Prefix-shared block content -> prefill ring positions
+        ``[0, n_tokens)`` (dequantized for int8 pools), so chunked prefill
+        can skip already-shared leading chunks and still attend the
+        prefix. Returns the updated ring."""
+        padded = np.zeros(self.max_blocks_per_slot, np.int32)
+        padded[:len(ids)] = ids
+        return self._prefix_gather(self.caches, ring_caches,
+                                   jnp.asarray(padded),
+                                   jnp.asarray(n_tokens, jnp.int32))
 
     # -- decode-time growth --------------------------------------------------
     def prepare_append(self, slot: int, pos: int) -> None:

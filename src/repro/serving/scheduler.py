@@ -26,13 +26,35 @@ Pieces
 
 ``Scheduler``
     An admission queue + a single decode-loop thread. Each tick it (1)
-    admits queued requests into free slots — prefill runs at the request's
-    exact prompt length, then its ring cache is spliced into the pool row —
-    and (2) runs ONE jitted fixed-shape decode step over all ``max_slots``
-    rows. Free rows decode garbage that is masked out of accounting and
-    overwritten at the next admission; per-row attention masks (``kv_pos``)
-    make every row's math independent of its neighbours, which is what makes
-    a mid-flight join byte-identical to a solo run (tests/test_scheduler.py).
+    advances the in-flight admission by ONE prompt chunk (chunked prefill,
+    below), and (2) runs ONE jitted fixed-shape decode step over all
+    ``max_slots`` rows. Free rows decode garbage that is masked out of
+    accounting and overwritten at the next admission; per-row attention
+    masks (``kv_pos``) make every row's math independent of its
+    neighbours, which is what makes a mid-flight join byte-identical to a
+    solo run (tests/test_scheduler.py).
+
+Chunked prefill (one compiled shape, decode-interleaved admission)
+    Prompts are never prefilled whole: admission streams each prompt
+    through ``models.transformer.prefill_chunk`` in fixed-size
+    ``prefill_chunk``-token chunks against a private full-precision ring,
+    one chunk per scheduler tick, while co-resident rows keep emitting
+    tokens in the same ticks — admission never stops the decode world.
+    Every prompt length shares ONE compiled chunk shape
+    (``prefill_compiles`` counts it; the deleted ``prefill_buckets`` knob
+    is a deprecation shim that warns and ignores), and because every
+    chunk-step reduction runs at the fixed ring length, the result is
+    bit-identical for ANY chunk split of the same prompt — tokens, exits
+    and logprobs (tests/test_chunked_prefill.py). On the last chunk the
+    ring is spliced into the pool (contiguous row / paged blocks; prefix-
+    cache hits skip already-shared leading chunks) and the request joins
+    the decode batch. Chunk FLOPs are charged through
+    ``core.energy.prefill_chunk_energy`` into per-request
+    ``prefill_energy_j`` and the fleet power EMA, so the power-gated
+    admission sees prompt ingestion too. Configs whose prefill cannot
+    chunk (mamba / MLA / sliding-window / MoE —
+    ``transformer.chunked_prefill_unsupported`` names the reason) fall
+    back to whole-prompt admission.
 
 Policies and sampling as data
     Exit policies come from the first-class registry
@@ -71,9 +93,10 @@ from __future__ import annotations
 import queue as _queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional, Sequence, Union
+from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -88,8 +111,11 @@ from repro.core.exit_policy import PolicyContext, PolicySpec
 from repro.core.speculative import (SPEC_POLICY, accept_drafts,
                                     draft_boundary_layer)
 from repro.data.tokenizer import EOS, PAD
-from repro.models.transformer import (decode_step, init_cache, lm_logits,
-                                      prefill, rewind_ring,
+from repro.models.transformer import (chunked_prefill_unsupported,
+                                      decode_step, finalize_prefill_ring,
+                                      init_cache, init_prefill_ring,
+                                      lm_logits, prefill, prefill_chunk,
+                                      rewind_ring,
                                       speculative_unsupported, verify_step,
                                       write_cache_slots)
 from repro.serving.engine import ServeResult
@@ -172,12 +198,15 @@ class Request:
     energy_budget_j: Optional[float] = None
     submitted_at: float = field(default_factory=time.monotonic)
 
+    truncated: bool = False              # prompt tail-clipped at submit
     status: str = "queued"               # queued | running | done
     finish_reason: Optional[str] = None  # eos | length | stop | energy_budget
     tokens: list[int] = field(default_factory=list)
     exit_layers: list[int] = field(default_factory=list)
+    logprobs: list[float] = field(default_factory=list, repr=False)
     text: Optional[str] = None           # decoded (stop-truncated) output
     energy_j: float = 0.0
+    prefill_energy_j: float = 0.0        # modeled J of this prompt's chunks
     # speculative accounting (zero for non-speculative requests)
     spec_verifies: int = 0
     spec_drafted: int = 0
@@ -231,7 +260,28 @@ class Request:
             tokens=list(self.tokens), exit_layers=list(self.exit_layers),
             finish_reason=self.finish_reason or "unknown", text=text,
             energy_j=self.energy_j, metrics=self.metrics,
-            request_id=self.req_id, latency_s=self.latency_s)
+            request_id=self.req_id, latency_s=self.latency_s,
+            truncated=self.truncated,
+            # speculative super-ticks emit verified tokens without picker
+            # logprobs — surface the trace only when it is complete
+            logprobs=(list(self.logprobs)
+                      if len(self.logprobs) == len(self.tokens) else None))
+
+
+@dataclass
+class _PrefillJob:
+    """One in-flight chunked admission: the prompt streams into a private
+    full-precision ring, one ``prefill_chunk``-token step per scheduler
+    tick, then splices into the pool on the last chunk."""
+    req: Request
+    slot: int
+    ring: Any                       # per-request prefill ring (device)
+    grid: np.ndarray                # prompt padded to the chunk grid
+    next_pos: int                   # next chunk's start position
+    plen: int                       # true prompt length
+    ids: Optional[list] = None      # paged: blocks bound at job start
+    n_shared: int = 0               # paged: leading prefix-cache shares
+    tail_shared: bool = False       # paged: exact-prompt mutable tail
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +300,7 @@ class Scheduler:
                  tokenizer=None,
                  max_slots: int = 8, max_len: int = 512, max_new: int = 15,
                  queue_depth: int = 64, max_wait_s: float = 2.0,
+                 prefill_chunk: int = 32,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  power_budget_w: Optional[float] = None,
                  class_energy_budgets_j: Optional[dict] = None,
@@ -275,8 +326,27 @@ class Scheduler:
         self.default_sampling = default_sampling or SamplingParams()
         self.queue_depth = queue_depth
         self.max_wait_s = max_wait_s
-        self.prefill_buckets = (tuple(sorted(prefill_buckets))
-                                if prefill_buckets is not None else None)
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.prefill_chunk = int(prefill_chunk)
+        self.chunked = chunked_prefill_unsupported(cfg) is None
+        self.prefill_buckets = None
+        if prefill_buckets is not None:
+            if self.chunked:
+                # the bucketing knob is moot here: chunked prefill serves
+                # arbitrary prompt lengths with one compiled shape, so
+                # there is nothing left to bucket — warn and ignore
+                # (migration: docs/api.md)
+                warnings.warn(
+                    "prefill_buckets is deprecated and ignored: chunked "
+                    "prefill compiles one shape for every prompt length "
+                    "(tune prefill_chunk= instead)",
+                    DeprecationWarning, stacklevel=2)
+            else:
+                # whole-prompt fallback configs (mamba/MLA/sliding-window/
+                # MoE) still compile per distinct prompt length — buckets
+                # remain their only compile-count mitigation
+                self.prefill_buckets = tuple(sorted(prefill_buckets))
         self.power_budget_w = power_budget_w
         self.class_energy_budgets_j = dict(class_energy_budgets_j or {})
         self.eos_id = eos_id
@@ -333,11 +403,27 @@ class Scheduler:
                                 static_argnames=("max_len",))
         self._verify = jax.jit(self._make_verify(), donate_argnums=2)
         self._rewind = jax.jit(partial(rewind_ring, cfg), donate_argnums=0)
+        # chunked-prefill machinery: the prompt-ingestion ring is sized so
+        # paged splices land on the block grid; every chunk runs the same
+        # compiled [1, prefill_chunk] step (prefill_compiles pins this)
+        if kv_layout == "paged":
+            self._ring_len = (self.pool.max_blocks_per_slot
+                              * self.pool.block_size)
+        else:
+            self._ring_len = max_len
+        self._chunk = jax.jit(self._make_chunk(), donate_argnums=2)
+        self._pick0 = jax.jit(self._make_pick0())
+        if cfg.kv_cache_dtype == "int8":
+            # no donation: the f32 ring cannot back the int8 output buffers
+            self._finalize = jax.jit(partial(finalize_prefill_ring, cfg))
+        else:
+            self._finalize = lambda ring: ring   # f32 rings splice as-is
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._queue: list[Request] = []
         self._admitting: Optional[Request] = None
+        self._prefill_job: Optional[_PrefillJob] = None
         self._seq = 0
         self._running = False
         self._stopped = False     # set once, by stop() or a loop crash
@@ -348,6 +434,7 @@ class Scheduler:
         self._completed = 0
         self._fleet_tokens = 0
         self._fleet_energy_j = 0.0
+        self._fleet_prefill_j = 0.0
         self._deferred_admissions = 0
         self._blocked_admissions = 0
         self._peak_active = 0
@@ -395,12 +482,12 @@ class Scheduler:
                 block_tables=tables if paged else None,
                 use_kernel=use_kernel)
             keys = request_keys(seeds, pos)
-            nxt, _ = pick_tokens(logits, keys, temp, top_k, top_p)
+            nxt, lp = pick_tokens(logits, keys, temp, top_k, top_p)
             # logits ride along for speculative draft scoring (rejection
             # sampling needs the draft distribution); plain ticks leave
             # them on device unfetched
             return (nxt.astype(jnp.int32), new_caches, info["exit_layer"],
-                    logits.astype(jnp.float32))
+                    lp, logits.astype(jnp.float32))
 
         return step
 
@@ -420,20 +507,52 @@ class Scheduler:
 
         return vstep
 
+    def _make_chunk(self):
+        """The one compiled prefill-chunk step: a fixed [1, prefill_chunk]
+        token window against the fixed-length ingestion ring — every
+        prompt length shares this single shape."""
+        cfg = self.cfg
+
+        def cstep(params, tokens, ring, pos0, n_valid):
+            return prefill_chunk(params, cfg, tokens, ring, pos0, n_valid)
+
+        return cstep
+
+    def _make_pick0(self):
+        """First-token picker for a freshly prefilled prompt: same
+        (seed, position)-keyed draw the whole-prompt path used."""
+
+        def pick0(logits, seeds, pos, temp, top_k, top_p):
+            keys = request_keys(seeds, pos)
+            t0, lp = pick_tokens(logits, keys, temp, top_k, top_p)
+            return t0.astype(jnp.int32), lp
+
+        return pick0
+
     def _prefill_fn(self, params, prompt, seed, pos0, temp, top_k, top_p,
                     *, max_len):
-        """[1, P] prompt -> (first sampled/greedy token [1], ring caches)."""
+        """[1, P] prompt -> (first token [1], its logprob, ring caches).
+        Whole-prompt fallback for configs chunked prefill cannot serve."""
         h, caches, _ = prefill(params, self.cfg, prompt, max_len=max_len)
         logits = lm_logits(params, self.cfg, h[:, -1:, :])[:, 0]
         keys = request_keys(seed, pos0)
-        t0, _ = pick_tokens(logits, keys, temp, top_k, top_p)
-        return t0.astype(jnp.int32), caches
+        t0, lp = pick_tokens(logits, keys, temp, top_k, top_p)
+        return t0.astype(jnp.int32), lp, caches
 
     @property
     def step_compiles(self) -> int:
         """Decode-step jit-cache size — a compile counter. Heterogeneous
         policies/sampling must keep this at 1 (tests assert it)."""
         return int(self._step._cache_size())
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Prefill-path jit-cache size: stays at 1 under chunked prefill
+        (arbitrary prompt lengths share the one chunk shape); the
+        whole-prompt fallback compiles one shape per distinct length."""
+        if self.chunked:
+            return int(self._chunk._cache_size())
+        return int(self._prefill._cache_size())
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "Scheduler":
@@ -550,20 +669,22 @@ class Scheduler:
                              f"(pool max_len={self.pool.max_len}"
                              + (f", speculative draft slack={extra}"
                                 if extra else "") + ")")
-        prompt = list(prompt)[-keep:]
+        prompt = list(prompt)
+        truncated = len(prompt) > keep
+        prompt = prompt[-keep:]
         if not prompt:
             raise ValueError("empty prompt")
         if self.prefill_buckets is not None:
-            # left-pad to the smallest bucket >= len(prompt): prefill then
-            # compiles O(#buckets) shapes instead of one per distinct
-            # length (Engine.serve pads the same way)
+            # whole-prompt fallback only: left-pad to the smallest bucket
+            # >= len(prompt) so prefill compiles O(#buckets) shapes
+            # instead of one per distinct length
             blen = min((b for b in self.prefill_buckets
                         if b >= len(prompt)), default=keep)
             prompt = [self.pad_id] * (min(blen, keep) - len(prompt)) + prompt
         if (self.kv_layout == "paged"
                 and (self.pool.need_blocks(len(prompt), max_new + extra)
                      > self.pool.blocks.capacity)):
-            # checked on the final (bucket-padded) prompt — can_admit sees
+            # checked on the final (tail-clipped) prompt — can_admit sees
             # this exact length, so anything accepted here always admits
             raise ValueError(
                 f"request needs "
@@ -585,7 +706,8 @@ class Scheduler:
                           spec=spec, sampling=sampling,
                           stop_sequences=tuple(stop_sequences),
                           request_class=request_class,
-                          energy_budget_j=energy_budget_j)
+                          energy_budget_j=energy_budget_j,
+                          truncated=truncated)
             self._seq += 1
             self._queue.append(req)
             self._work.notify_all()
@@ -633,9 +755,16 @@ class Scheduler:
                     if not self._running:
                         break
                 self._admit_ready()
-                if self.pool.n_used:
+                busy = False
+                if self._prefill_job is not None:
+                    # one prompt chunk per tick: admission shares the step
+                    # cadence with decode instead of stopping the world
+                    self._prefill_tick()
+                    busy = True
+                if any(r is not None for r in self._slot_req):
                     self._tick()
-                else:
+                    busy = True
+                if not busy:
                     time.sleep(0.002)   # queued but gated: don't busy-spin
         except Exception:  # noqa: BLE001
             # a dead decode thread must not leave waiters blocked and the
@@ -675,7 +804,7 @@ class Scheduler:
 
     def _admit_ready(self) -> None:
         now = time.monotonic()
-        while self.pool.n_free:
+        while self.pool.n_free and self._prefill_job is None:
             if not self._admission_open():
                 # _power_w_ema is only touched by this thread, so the
                 # deferred-gate bookkeeping needs no lock — and must not
@@ -718,13 +847,106 @@ class Scheduler:
                     req = min(fits, key=lambda r: (len(r.prompt), r.req_id))
                     self._queue.remove(req)
             if req is not None:
-                # referenced while in flight: a crash inside _admit must
-                # still let _drain fail this request (it is neither queued
-                # nor resident at that point)
+                # referenced while in flight: a crash inside _admit /
+                # _start_prefill must still let _drain fail this request
+                # (it is neither queued nor resident at that point)
                 self._admitting = req
-                self._admit(req)
+                if self.chunked:
+                    self._start_prefill(req)
+                else:
+                    self._admit(req)
                 self._admitting = None
 
+    # -- chunked admission ---------------------------------------------------
+    def _start_prefill(self, req: Request) -> None:
+        """Open a chunked admission: claim the slot (and bind paged blocks)
+        up front so nothing can steal them mid-stream, then let the decode
+        loop advance the prompt one chunk per tick. The request joins the
+        decode batch only when its last chunk lands (_finish_prefill)."""
+        slot = self.pool.alloc()
+        assert slot is not None, "admission with no free slot"
+        C = self.prefill_chunk
+        plen = len(req.prompt)
+        grid = np.asarray(req.prompt + [self.pad_id] * ((-plen) % C),
+                          np.int32)
+        ring = init_prefill_ring(self.cfg, 1, self._ring_len)
+        ids = None
+        n_shared = 0
+        tail_shared = False
+        shared_tokens = 0
+        if self.kv_layout == "paged":
+            ids, n_shared, tail_shared = self.pool.bind_prompt(req.prompt)
+            shared_tokens = min(n_shared * self.pool.block_size, plen)
+            if n_shared:
+                # shared prefix K/V into the ring, so skipped chunks are
+                # still attendable by the ones that do run
+                ring = self.pool.gather_prefix(ring, ids, shared_tokens)
+        # skip chunks fully covered by shared prefix content; the final
+        # chunk always runs — its logits carry the first sampled token
+        start = (min(shared_tokens, plen - 1) // C) * C
+        req.status = "running"
+        req.started_at = time.monotonic()
+        self._prefill_job = _PrefillJob(req=req, slot=slot, ring=ring,
+                                        grid=grid, next_pos=start,
+                                        plen=plen, ids=ids,
+                                        n_shared=n_shared,
+                                        tail_shared=tail_shared)
+
+    def _prefill_tick(self) -> None:
+        """Advance the in-flight admission by ONE compiled chunk step."""
+        job = self._prefill_job
+        t_start = time.monotonic()
+        c0 = job.next_pos
+        C = self.prefill_chunk
+        logits, job.ring = self._chunk(
+            self.params, jnp.asarray(job.grid[None, c0:c0 + C]), job.ring,
+            jnp.asarray([c0], jnp.int32),
+            jnp.asarray([job.plen], jnp.int32))
+        # sync before timing: jit returns at dispatch, and an async dt
+        # would inflate the modeled watts by the dispatch/compute gap and
+        # spuriously close the power gate (_plain_tick syncs via its
+        # np.asarray fetch; the chunk result is otherwise unfetched)
+        logits.block_until_ready()
+        # prompt ingestion is not free: charge the chunk's modeled joules
+        # to the request and the fleet power EMA (the power gate defers
+        # admission under prefill load exactly like decode load)
+        e = energy.prefill_chunk_energy(self.cfg, min(c0 + C, job.plen),
+                                        min(C, job.plen - c0))
+        job.req.prefill_energy_j += e
+        with self._lock:
+            self._fleet_prefill_j += e
+        dt = max(time.monotonic() - t_start, 1e-6)
+        self._power_w_ema = 0.9 * self._power_w_ema + 0.1 * (e / dt)
+        job.next_pos = c0 + C
+        if job.next_pos >= job.plen:
+            self._prefill_job = None
+            self._finish_prefill(job, logits, c0)
+
+    def _finish_prefill(self, job: _PrefillJob, logits, c0: int) -> None:
+        """Last chunk landed: sample the first token from its logits,
+        splice the ring into the pool, and seat the request in its slot."""
+        req, slot = job.req, job.slot
+        s = req.sampling
+        t0, lp0 = self._pick0(
+            logits[:, (job.plen - 1) - c0],
+            jnp.asarray([s.seed], jnp.int32),
+            jnp.asarray([job.plen - 1], jnp.int32),
+            jnp.asarray([s.temperature], jnp.float32),
+            jnp.asarray([s.top_k], jnp.int32),
+            jnp.asarray([s.top_p], jnp.float32))
+        ring = self._finalize(job.ring)
+        if self.kv_layout == "paged":
+            n_skip, n_write = self.pool.install_prompt(
+                slot, job.plen, job.ids, job.n_shared, job.tail_shared,
+                max_new=self._decode_budget(req))
+            if n_write > n_skip:
+                self.pool.write_ring(slot, ring, n_skip, n_write)
+        else:
+            self.pool.write(ring, slot)
+        self._bind_slot(req, slot)
+        self._account_token(req, int(t0[0]), slot, logprob=float(lp0[0]))
+
+    # -- whole-prompt admission (chunked_prefill_unsupported fallback) ------
     def _admit(self, req: Request) -> None:
         s = req.sampling
         paged = self.kv_layout == "paged"
@@ -735,7 +957,7 @@ class Scheduler:
                 len(req.prompt))
         else:
             plen = self.pool.max_len
-        t0, req_caches = self._prefill(
+        t0, lp0, req_caches = self._prefill(
             self.params, jnp.asarray([req.prompt], jnp.int32),
             jnp.asarray([s.seed], jnp.int32),
             jnp.asarray([len(req.prompt) - 1], jnp.int32),
@@ -752,10 +974,16 @@ class Scheduler:
             self.pool.write(req_caches, slot)
         req.status = "running"
         req.started_at = time.monotonic()
+        self._bind_slot(req, slot)
+        self._account_token(req, int(t0[0]), slot, logprob=float(lp0[0]))
+
+    def _bind_slot(self, req: Request, slot: int) -> None:
+        """Seat a freshly prefilled request in its slot's runtime arrays."""
+        s = req.sampling
         req._exits_all.append(self.cfg.num_layers)   # token 0: full prefill
         self._slot_req[slot] = req
         self._cur_tok[slot] = 0
-        self._pos[slot] = len(req.prompt)
+        self._pos[slot] = req.ctx_len
         self._ids[slot] = exit_policy.get(req.spec.name).id
         resolved = req.spec.resolved()
         for f in self._pp:
@@ -765,7 +993,6 @@ class Scheduler:
         self._topp[slot] = s.top_p
         self._seed[slot] = s.seed
         self._peak_active = max(self._peak_active, self.pool.n_used)
-        self._account_token(req, int(t0[0]), slot)
 
     def _tick(self) -> None:
         if any(req is not None and req.spec.name == SPEC_POLICY
@@ -777,7 +1004,7 @@ class Scheduler:
     def _run_step(self):
         """One compiled decode step over all slots (shared by plain ticks
         and the speculative draft phase). Returns (tokens, exit layers,
-        f32 logits) as device arrays."""
+        logprobs, f32 logits) as device arrays."""
         if self.kv_layout == "paged":
             # bind (or copy-on-write) every resident's write-target block
             # before the compiled step scatters this tick's K/V
@@ -787,27 +1014,29 @@ class Scheduler:
             tables = self.pool.device_tables()
         else:
             tables = jnp.zeros((0,), jnp.int32)   # unused by the step
-        nxt, new_caches, exitl, logits = self._step(
+        nxt, new_caches, exitl, lp, logits = self._step(
             self.params, jnp.asarray(self._cur_tok), self.pool.caches,
             tables, jnp.asarray(self._pos), jnp.asarray(self._ids),
             {f: jnp.asarray(v) for f, v in self._pp.items()},
             jnp.asarray(self._temp), jnp.asarray(self._topk),
             jnp.asarray(self._topp), jnp.asarray(self._seed))
         self.pool.caches = new_caches
-        return nxt, exitl, logits
+        return nxt, exitl, lp, logits
 
     def _plain_tick(self) -> None:
         t_start = time.monotonic()
-        nxt, exitl, _ = self._run_step()
+        nxt, exitl, lp, _ = self._run_step()
         nxt = np.asarray(nxt)
         exitl = np.asarray(exitl)
+        lp = np.asarray(lp)
         tick_energy = 0.0
         for slot, req in enumerate(self._slot_req):
             if req is None:
                 continue
             self._pos[slot] += 1
             req._exits_all.append(int(exitl[slot]))
-            tick_energy += self._account_token(req, int(nxt[slot]), slot)
+            tick_energy += self._account_token(req, int(nxt[slot]), slot,
+                                               logprob=float(lp[slot]))
         dt = max(time.monotonic() - t_start, 1e-6)
         self._power_w_ema = (0.9 * self._power_w_ema
                              + 0.1 * (tick_energy / dt))
@@ -848,9 +1077,10 @@ class Scheduler:
         tick_energy = 0.0
 
         for j in range(K):
-            nxt, exitl, logits = self._run_step()
+            nxt, exitl, lp, logits = self._run_step()
             nxt = np.asarray(nxt)
             exitl = np.asarray(exitl)
+            lp = np.asarray(lp)
             if need_dl:
                 # fetch only the speculative rows — the full [S, V] plane
                 # never crosses to host
@@ -865,8 +1095,8 @@ class Scheduler:
                 else:                      # non-speculative rows: for real
                     self._pos[slot] += 1
                     req._exits_all.append(int(exitl[slot]))
-                    tick_energy += self._account_token(req, int(nxt[slot]),
-                                                       slot)
+                    tick_energy += self._account_token(
+                        req, int(nxt[slot]), slot, logprob=float(lp[slot]))
 
         # full-depth verify over [t0, d1..dK] at positions p0..p0+K
         win = np.zeros((S, K + 1), np.int64)
@@ -946,11 +1176,13 @@ class Scheduler:
                              + 0.1 * (tick_energy / dt))
 
     def _account_token(self, req: Request, token: int, slot: int,
-                       energy_j: Optional[float] = None) -> float:
+                       energy_j: Optional[float] = None,
+                       logprob: Optional[float] = None) -> float:
         """Record one produced token; retire the request when finished.
         Returns the modeled energy of the step that produced it
         (``energy_j`` overrides the exit-layer model — the speculative
-        path charges amortized draft + verify cost instead)."""
+        path charges amortized draft + verify cost instead, and emits its
+        verified tokens without picker ``logprob``s)."""
         e = (energy_j if energy_j is not None
              else self._token_energy(req.ctx_len, req._exits_all[-1]))
         if token == self.eos_id:
@@ -959,6 +1191,8 @@ class Scheduler:
             self._retire(req, slot, "eos")
             return 0.0
         req.tokens.append(token)
+        if logprob is not None:
+            req.logprobs.append(logprob)
         req.energy_j += e
         req._stream.put(token)
         self._exit_layer_ema = (0.95 * self._exit_layer_ema
@@ -1039,6 +1273,15 @@ class Scheduler:
                 and self._admitting.status != "done"):
             dropped.append(self._admitting)
         self._admitting = None
+        job, self._prefill_job = self._prefill_job, None
+        if job is not None:
+            # mid-stream admission: hand back the claimed slot and any
+            # bound-but-never-installed blocks, fail the request
+            if job.ids is not None:
+                self.pool.abort_bind(job.ids)
+            self.pool.release(job.slot)
+            if job.req.status != "done" and job.req not in dropped:
+                dropped.append(job.req)
         for req in dropped:
             req.status = "done"
             req.finish_reason = reason
@@ -1095,6 +1338,11 @@ class Scheduler:
                 "max_len": self.pool.max_len,
                 "blocked_admissions": self._blocked_admissions,
                 **kv,
+                "chunked_prefill": self.chunked,
+                "prefill_chunk": self.prefill_chunk,
+                "prefill_compiles": self.prefill_compiles,
+                "prefilling": self._prefill_job is not None,
+                "fleet_prefill_energy_j": self._fleet_prefill_j,
                 "completed_requests": self._completed,
                 "fleet_tokens": self._fleet_tokens,
                 "fleet_energy_j": self._fleet_energy_j,

@@ -10,7 +10,8 @@ same fixed-shape batch as everyone else's.
                   "temperature": 0.7, "top_k": 40, "top_p": 0.95,
                   "stop": ["\n\n"], "seed": 1}}
   -> {"generated_text": ..., "exit_layers": [...], "energy_j": ...,
-      "energy_saving_frac": ..., "finish_reason": "length|eos|stop|..."}
+      "energy_saving_frac": ..., "finish_reason": "length|eos|stop|...",
+      "truncated": false}   # true when the prompt tail-clipped to fit
 
   * payloads parse straight into ``repro.api.GenerationRequest`` /
     ``SamplingParams`` / ``PolicySpec`` — the same dataclasses the
@@ -135,6 +136,7 @@ def _req_json(req) -> dict:
         "energy_j": agg["energy_j"],
         "energy_saving_frac": agg["energy_saving_frac"],
         "finish_reason": res.finish_reason,
+        "truncated": res.truncated,
         "latency_s": res.latency_s,
         "request_id": res.request_id,
     }
@@ -246,7 +248,7 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
                max_slots: int = 8, max_len: int = 320,
                power_budget_w: float = None, kv_layout: str = "paged",
                block_size: int = 16, num_blocks: int = None,
-               spec_window: int = 4):
+               spec_window: int = 4, prefill_chunk: int = 32):
     """Build a mini model + agent and start the scheduler (CPU demo).
 
     Default KV layout is **paged**: admission is gated on free cache
@@ -281,10 +283,11 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
         controller_kind="policy" if agent is not None else "none",
         allowed_kinds=kinds, tokenizer=ds.tokenizer,
         max_slots=max_slots, max_len=max_len,
-        # arbitrary user text: bucket prompt lengths so prefill compiles
-        # O(#buckets) shapes, not one per distinct length — with paging the
-        # buckets also make shared system-prompt prefixes block-aligned
-        prefill_buckets=(16, 32, 64, 96, 128, 192, 256),
+        # arbitrary user text: chunked prefill compiles ONE prompt shape
+        # for every length and interleaves prompt chunks with decode
+        # ticks (prefill_chunk is the TTFT-vs-overhead dial; the old
+        # prefill_buckets knob is a deprecation shim)
+        prefill_chunk=prefill_chunk,
         power_budget_w=power_budget_w, kv_layout=kv_layout,
         block_size=block_size, num_blocks=num_blocks,
         spec_window=spec_window).start()
@@ -309,12 +312,17 @@ def main():
     ap.add_argument("--spec-window", type=int, default=4,
                     help="speculative draft window (tokens drafted per "
                          "verify for 'speculative'-policy requests)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens ingested per decode tick (one "
+                         "compiled prefill shape; smaller = fairer "
+                         "interleaving, larger = lower TTFT per prompt)")
     args = ap.parse_args()
     print("[server] preparing mini model ...")
     setup_mini(args.train_steps, rl=not args.no_rl, max_slots=args.slots,
                max_len=args.max_len, power_budget_w=args.power_budget_w,
                kv_layout=args.kv_layout, block_size=args.block_size,
-               num_blocks=args.num_blocks, spec_window=args.spec_window)
+               num_blocks=args.num_blocks, spec_window=args.spec_window,
+               prefill_chunk=args.prefill_chunk)
     srv = ThreadingHTTPServer(("127.0.0.1", args.port), Handler)
     print(f"[server] listening on :{args.port} — POST /generate, GET /queue")
     try:

@@ -1,0 +1,234 @@
+"""Chunked prefill: bit-identical to whole-prompt prefill (tokens, exits,
+logprobs) for arbitrary prompt lengths x chunk sizes x KV layouts, one
+compiled prefill shape for all prompt lengths, decode-interleaved admission.
+
+The "whole-prompt" arm is the same compiled chunk step with a chunk that
+covers the entire prompt in one pass — every reduction in the chunk step
+runs at the fixed ring length, which is what makes the result invariant to
+the chunk split (the transformer-level test pins this at the K/V level).
+Parity of the chunked scheduler against the legacy ``prefill``-based stack
+is held at token level by tests/test_scheduler.py's engine-parity test.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _propcheck import given, settings, strategies as st  # noqa: E402
+
+from repro.api import GenerationRequest, SamplingParams  # noqa: E402
+from repro.configs.llama32_3b import paper_mini  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.serving import Scheduler  # noqa: E402
+
+MAX_LEN = 48
+MAX_NEW = 6
+BLOCK = 8
+CHUNKS = (5, MAX_LEN)          # 5: misaligned splits; MAX_LEN: one chunk
+MAX_PLEN = MAX_LEN - MAX_NEW - 2
+
+_STATE: dict = {}
+
+
+def _arms():
+    """Lazily built (layout, chunk) scheduler grid shared by the property
+    tests (module-level, not a fixture: the hypothesis fallback shim
+    cannot inject fixtures into @given tests)."""
+    if not _STATE:
+        cfg = paper_mini(num_layers=4, d_model=64, vocab_size=256)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        arms = {}
+        for layout in ("contiguous", "paged"):
+            for chunk in CHUNKS:
+                kw = dict(kv_layout="paged", block_size=BLOCK) \
+                    if layout == "paged" else {}
+                arms[(layout, chunk)] = Scheduler(
+                    params, cfg, controller_kind="fixed", fixed_exit_idx=0,
+                    allowed_kinds=("none", "fixed"), max_slots=3,
+                    max_len=MAX_LEN, max_new=MAX_NEW, queue_depth=32,
+                    prefill_chunk=chunk, **kw).start()
+        _STATE.update(cfg=cfg, params=params, arms=arms)
+    return _STATE
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _teardown_arms():
+    yield
+    for s in _STATE.get("arms", {}).values():
+        s.stop()
+
+
+def _prompt(plen: int, seed: int) -> list:
+    rng = np.random.default_rng(seed)
+    return rng.integers(4, 256, plen).tolist()
+
+
+def _run(sched, prompt, seed):
+    sampled = seed % 2 == 1
+    req = GenerationRequest(
+        prompt=prompt, max_new_tokens=MAX_NEW,
+        policy=("fixed" if seed % 3 else "none"),
+        sampling=(SamplingParams(temperature=0.8, top_k=12, seed=seed)
+                  if sampled else SamplingParams()))
+    r = sched.submit(req).result(120.0)
+    return r.tokens, r.exit_layers, list(r.logprobs)
+
+
+# ---------------------------------------------------------------------------
+# transformer level: the chunk step is split-invariant bit-for-bit
+# ---------------------------------------------------------------------------
+def test_prefill_chunk_split_invariant_bitwise():
+    """Any chunking of a prompt — including one whole-prompt chunk —
+    produces bit-identical ring K/V, positions and logits: reductions all
+    run at the fixed ring length, and dot-generals are exact under zero
+    padding."""
+    st_ = _arms()
+    cfg, params = st_["cfg"], st_["params"]
+    S, W = 23, MAX_LEN
+    toks = np.asarray(_prompt(S, 0), np.int32)
+
+    def run(C):
+        ring = T.init_prefill_ring(cfg, 1, W)
+        last = None
+        for pos0 in range(0, S, C):
+            grid = toks[pos0:pos0 + C]
+            if len(grid) < C:
+                grid = np.pad(grid, (0, C - len(grid)))
+            lg, ring = T.prefill_chunk(params, cfg, jnp.asarray(grid[None]),
+                                       ring, jnp.asarray([pos0]),
+                                       jnp.asarray([S]))
+            if pos0 + C >= S:
+                last = np.asarray(lg[:, (S - 1) - pos0])
+        return last, ring
+
+    ref_log, ref_ring = run(S)                      # whole prompt, 1 chunk
+    for C in (3, 7, 16):
+        lg, ring = run(C)
+        np.testing.assert_array_equal(ref_log, lg)
+        for a, b in zip(jax.tree.leaves(ref_ring), jax.tree.leaves(ring)):
+            aa, bb = np.asarray(a), np.asarray(b)
+            if aa.dtype == np.int32:                # pos plane: exact
+                np.testing.assert_array_equal(aa, bb)
+            else:                                   # K/V: only positions < S
+                w_ax = aa.ndim - 3                  # [..., W, KH, hd]
+                np.testing.assert_array_equal(
+                    np.take(aa, range(S), axis=w_ax),
+                    np.take(bb, range(S), axis=w_ax))
+
+
+# ---------------------------------------------------------------------------
+# property: chunked == whole-prompt, across layouts, arbitrary lengths
+# ---------------------------------------------------------------------------
+@given(st.integers(min_value=1, max_value=MAX_PLEN),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=8, deadline=None, derandomize=True)
+def test_chunked_prefill_matches_whole_prompt(plen, seed):
+    """Serving the same request through a chunk-5 and a one-chunk
+    (whole-prompt) scheduler, on both KV layouts, yields bit-identical
+    tokens, exit layers AND logprobs — greedy and sampled rows alike."""
+    arms = _arms()["arms"]
+    prompt = _prompt(plen, seed)
+    results = {key: _run(s, prompt, seed) for key, s in arms.items()}
+    ref = results[("contiguous", MAX_LEN)]          # whole-prompt arm
+    assert len(ref[0]) >= 1
+    for key, got in results.items():
+        assert got[0] == ref[0], f"tokens diverged on {key}"
+        assert got[1] == ref[1], f"exit layers diverged on {key}"
+        assert got[2] == ref[2], f"logprobs diverged on {key}"
+
+
+def test_mid_flight_admission_interleaves_and_stays_identical():
+    """A request whose prompt chunks interleave with a decoding row's
+    ticks produces exactly its solo output — and so does the row it
+    interleaved with (both layouts, chunked admission)."""
+    arms = _arms()["arms"]
+    a = _prompt(30, 7)
+    b = _prompt(23, 8)                 # 5 chunks at chunk=5
+    for layout in ("contiguous", "paged"):
+        s = arms[(layout, 5)]
+        solo_a = s.serve_batch([a], max_new=10)
+        solo_b = s.serve_batch([b], max_new=MAX_NEW)
+        ha = s.submit(a, max_new=10)
+        it = ha.stream(timeout=60.0)
+        next(it), next(it)             # A mid-decode when B's chunks start
+        hb = s.submit(b, max_new=MAX_NEW)
+        ha.result(60.0), hb.result(60.0)
+        assert hb.started_at < ha.finished_at, "B never overlapped A"
+        assert ha.tokens == solo_a.tokens[0]
+        assert ha.exit_layers == solo_a.exit_layers[0]
+        assert hb.tokens == solo_b.tokens[0]
+        assert hb.exit_layers == solo_b.exit_layers[0]
+
+
+# ---------------------------------------------------------------------------
+# one compiled shape for the whole admission path
+# ---------------------------------------------------------------------------
+def test_many_prompt_lengths_one_prefill_shape_one_decode_shape():
+    """A mixed batch of 10+ distinct prompt lengths must compile exactly
+    ONE prefill-chunk shape and ONE decode shape (extends the PR-2
+    no-recompile assert to the admission path — this is what deleted the
+    prefill_buckets knob)."""
+    st_ = _arms()
+    s = Scheduler(st_["params"], st_["cfg"], controller_kind="fixed",
+                  fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                  max_slots=3, max_len=MAX_LEN, max_new=4, queue_depth=32,
+                  prefill_chunk=5).start()
+    try:
+        lens = list(range(7, 18)) + [27, 33]       # 13 distinct lengths
+        reqs = [_prompt(n, 100 + n) for n in lens]
+        res = s.serve_batch(reqs, max_new=4)
+        assert all(len(t) >= 1 for t in res.tokens)
+        assert s.step_compiles == 1, \
+            f"decode recompiled {s.step_compiles}x across prompt lengths"
+        assert s.prefill_compiles == 1, \
+            f"prefill compiled {s.prefill_compiles} shapes (want 1 chunk)"
+        stats = s.stats()
+        assert stats["chunked_prefill"] is True
+        assert stats["prefill_compiles"] == 1
+        assert stats["fleet_prefill_energy_j"] > 0
+    finally:
+        s.stop()
+
+
+def test_prefill_energy_charged_per_request():
+    """Chunk FLOPs are charged through core.energy: a longer prompt pays
+    more prefill joules, and the fleet counter sees them."""
+    arms = _arms()["arms"]
+    s = arms[("contiguous", 5)]
+    before = s.stats()["fleet_prefill_energy_j"]
+    h_short = s.submit(_prompt(6, 40), max_new=2).result(60.0)
+    h_long = s.submit(_prompt(36, 41), max_new=2).result(60.0)
+    assert 0 < h_short.prefill_energy_j < h_long.prefill_energy_j
+    assert s.stats()["fleet_prefill_energy_j"] >= (
+        before + h_short.prefill_energy_j + h_long.prefill_energy_j)
+
+
+def test_chunked_prefill_unsupported_falls_back():
+    """Configs whose prefill cannot chunk (sliding-window here) keep the
+    whole-prompt admission path and still serve."""
+    from repro.configs.gemma2_9b import smoke as gemma_smoke
+    cfg = gemma_smoke()
+    reason = T.chunked_prefill_unsupported(cfg)
+    assert reason is not None and "window" in reason
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    s = Scheduler(params, cfg, max_slots=2, max_len=48, max_new=3,
+                  queue_depth=8).start()
+    try:
+        assert not s.chunked
+        r = s.serve_batch([_prompt(9, 50)], max_new=3)
+        assert len(r.tokens[0]) >= 1
+    finally:
+        s.stop()
+    # fallback configs still compile per prompt length, so the bucketing
+    # knob keeps working there (no deprecation warning, prompts padded)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        s2 = Scheduler(params, cfg, max_slots=2, max_len=48, max_new=3,
+                       prefill_buckets=(16, 32))
+    h = s2.submit(_prompt(9, 51), max_new=3)
+    assert len(h.prompt) == 16 and h.prompt[0] == s2.pad_id

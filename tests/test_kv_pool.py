@@ -344,18 +344,19 @@ def test_partial_tail_reservation_covers_cow(small_cfg):
     assert pool.blocks.n_in_use == 0 and pool.reserved_blocks == 0
 
 
-def test_submit_checks_capacity_on_padded_prompt(small_cfg, small_params):
-    """Regression: the capacity check must run on the bucket-padded prompt
-    — can_admit sees that exact length, so a request accepted by submit
-    must always be admittable (no permanent requeue/head-of-line hang)."""
+def test_submit_checks_capacity_on_final_prompt(small_cfg, small_params):
+    """Regression: the capacity check must run on the exact prompt submit
+    will hand to admission — can_admit sees that same length, so a request
+    accepted by submit must always be admittable (no permanent requeue /
+    head-of-line hang). Bucket padding no longer exists to inflate it."""
     s = _sched(small_params, small_cfg, kv_layout="paged", block_size=8,
-               num_blocks=6, max_len=48, prefill_buckets=(32,))
+               num_blocks=6, max_len=48)
     prompt = _prompts(small_cfg.vocab_size, [20], seed=13)[0]
-    # unpadded: blocks_for(30)+1 = 5 <= capacity 5, but the 32-bucket pad
-    # pushes it to blocks_for(42) = 6 > 5 — must be rejected up front
+    # blocks_for(20 + 20) + 1 COW = 6 > capacity 5: rejected up front
     with pytest.raises(ValueError, match="KV blocks"):
-        s.submit(prompt, max_new=10)
-    s.submit(prompt, max_new=2)                # padded need 5 <= 5: fine
+        s.submit(prompt, max_new=20)
+    h = s.submit(prompt, max_new=10)           # need 5 <= 5: fine
+    assert len(h.prompt) == 20                 # exact length, no padding
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,16 @@
 """Continuous-batching scheduler: slot-pool invariants, mid-flight join
 determinism, EOS retirement, per-slot policies + sampling, energy accounting
-parity with the one-shot Engine, zero recompiles across mixed traffic."""
+parity with the one-shot Engine, zero recompiles across mixed traffic,
+deterministic (virtual-clock) paged-concurrency admission trace."""
 import re
+import sys
 import time
+from pathlib import Path
 
 import numpy as np
 import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from repro.api import GenerationRequest, PolicySpec, SamplingParams
 from repro.core.controller import make_controller
@@ -184,13 +189,34 @@ def test_max_new_zero_rejected(sched, mini_cfg):
         sched.submit(_prompts(mini_cfg.vocab_size, [8])[0], max_new=0)
 
 
-def test_prefill_buckets_pad_prompt(mini_cfg, mini_params):
-    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=48,
-                  max_new=4, prefill_buckets=(16, 32))
+def test_prefill_buckets_shim_warns_and_ignores(mini_cfg, mini_params):
+    """The bucketing knob is gone: chunked prefill serves every prompt
+    length with one compiled shape. The deprecated kwarg warns and is
+    ignored — prompts keep their exact length (no PAD bucketing)."""
+    with pytest.warns(DeprecationWarning, match="prefill_buckets"):
+        s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=48,
+                      max_new=4, prefill_buckets=(16, 32))
     h = s.submit(_prompts(mini_cfg.vocab_size, [10])[0])
-    assert len(h.prompt) == 16 and h.prompt[0] == s.pad_id
-    h2 = s.submit(_prompts(mini_cfg.vocab_size, [40])[0])
-    assert len(h2.prompt) == 44          # over the top bucket: keep-limit
+    assert len(h.prompt) == 10 and not h.truncated
+    h2 = s.submit(_prompts(mini_cfg.vocab_size, [60])[0])
+    assert len(h2.prompt) == 44          # keep-limit tail clip ...
+    assert h2.truncated                  # ... is surfaced, not silent
+
+
+def test_truncated_prompt_flag_roundtrips(mini_cfg, mini_params):
+    """scheduler.py's `prompt[-keep:]` tail clip must surface on the
+    result object (satellite: silent truncation fix)."""
+    s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=32,
+                  max_new=4).start()
+    try:
+        long = _prompts(mini_cfg.vocab_size, [64], seed=20)[0]
+        short = _prompts(mini_cfg.vocab_size, [8], seed=20)[0]
+        r_long = s.submit(long).result(60.0)
+        r_short = s.submit(short).result(60.0)
+    finally:
+        s.stop()
+    assert r_long.truncated and r_long.to_result().truncated
+    assert not r_short.truncated and not r_short.to_result().truncated
 
 
 def test_shutdown_drops_queued_requests_cleanly(mini_cfg, mini_params):
@@ -204,10 +230,11 @@ def test_shutdown_drops_queued_requests_cleanly(mini_cfg, mini_params):
 def test_decode_loop_crash_fails_waiters(mini_cfg, mini_params, capsys):
     s = Scheduler(mini_params, mini_cfg, max_slots=1, max_len=32, max_new=4)
 
-    def boom(params, prompt):
+    def boom(*a, **k):
         raise RuntimeError("injected prefill failure")
 
-    s._prefill = boom
+    s._chunk = boom          # chunked admission path
+    s._prefill = boom        # whole-prompt fallback path
     s.start()
     h = s.submit(_prompts(mini_cfg.vocab_size, [8])[0])
     with pytest.raises(RuntimeError, match="aborted: error"):
@@ -342,6 +369,29 @@ def test_raw_submit_validates_stop_sequences(sched, mini_cfg):
         sched.submit(p, stop_sequences=("",))
     with pytest.raises(ValueError, match="single string"):
         sched.submit(p, stop_sequences="ab")
+
+
+def test_admission_trace_deterministic_and_paged_wins(mini_cfg):
+    """The paged-concurrency claim, formulated so CI can hard-gate it: a
+    virtual-clock replay of one workload through both pools' admission
+    bookkeeping. Two replays must produce structurally identical
+    admit/retire event logs (no wall-clock race), and at an equal KV-byte
+    budget the paged pool must admit strictly more concurrent residents
+    (closes the ROADMAP warn-only gate item)."""
+    from benchmarks.serving_load import run_admission_trace
+    kw = dict(slots=3, max_len=68, block_size=8, n=24, seed=0)
+    a = run_admission_trace(mini_cfg, **kw)
+    b = run_admission_trace(mini_cfg, **kw)
+    for layout in ("contiguous", "paged"):
+        assert a[layout]["events"] == b[layout]["events"], \
+            f"{layout} admission trace is not deterministic"
+        assert a[layout]["events"][0][1] == "admit"
+        n_admit = sum(1 for e in a[layout]["events"] if e[1] == "admit")
+        n_retire = sum(1 for e in a[layout]["events"] if e[1] == "retire")
+        assert n_admit == n_retire == 24          # every job served
+    assert a["paged_admits_more_concurrent"]
+    assert (a["paged"]["peak_residents"]
+            > a["contiguous"]["peak_residents"])
 
 
 def test_legacy_threshold_override_keeps_default_spec_params(mini_cfg,

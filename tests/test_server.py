@@ -24,7 +24,7 @@ def server(mini_cfg, mini_params, mini_dataset):
         allowed_kinds=("none", "fixed", "confidence"),
         tokenizer=mini_dataset.tokenizer,
         max_slots=2, max_len=96, max_new=8,
-        prefill_buckets=(16, 32, 64)).start()
+        prefill_chunk=16).start()
     srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
     t = threading.Thread(target=srv.serve_forever, daemon=True)
     t.start()
@@ -149,6 +149,16 @@ def test_stream_ndjson(server):
     final = lines[-1]
     assert final["finish_reason"] in ("length", "eos")
     assert len(lines) - 1 == len(final["exit_layers"])
+    assert final["truncated"] is False       # surfaced in the final record
     joined = "".join(ln["text"] for ln in lines[:-1])
     # the stream holds back trailing in-progress byte-fallback sequences
     assert final["generated_text"].startswith(joined)
+
+
+def test_truncated_prompt_surfaces_in_response(server):
+    """An over-long prompt is tail-clipped to the pool geometry; the
+    response (and the NDJSON final record, same _req_json payload) must
+    say so instead of silently dropping context."""
+    out = _gen(server, PROMPT * 80, max_new_tokens=2)
+    assert out["truncated"] is True
+    assert _gen(server, PROMPT, max_new_tokens=2)["truncated"] is False
