@@ -44,6 +44,12 @@ and XLA compile counts across many distinct prompt lengths for chunked
 vs bucketed vs per-length prefill — chunked compiles exactly ONE shape;
 CI gates on ``chunked_compiles <= bucketed_compiles``.
 
+A sixth phase (``run_phase_breakdown``) serves the workload through
+traced schedulers (contiguous / paged / speculative) and reports where
+each tick's time goes — per tick phase, count / total / device-wait vs
+host split plus dispatch and sync-point counters (``repro.obs`` spans;
+the drained Chrome trace is structurally validated first).
+
 Both systems are shape-warmed before the timed run so XLA compile time is
 excluded — the comparison isolates steady-state scheduling behavior.
 Results also land in ``BENCH_serving.json`` at the repo root (schema-stable
@@ -280,9 +286,93 @@ def run_kv_compare(params, cfg, *, rate: float, n: int, slots: int,
     return out
 
 
+def run_phase_breakdown(params, cfg, *, rate: float, n: int, slots: int,
+                        max_len: int, exit_idx: int, block_size: int = 8,
+                        spec_window: int = 4, seed: int = 0) -> dict:
+    """Where does a tick go? Per-system tick-phase time breakdown.
+
+    Serves one Poisson workload through three traced schedulers —
+    contiguous, paged, and speculative (paged, draft-then-verify) — and
+    reports, per system, each phase's count / total / device-wait / host
+    split (``repro.obs`` spans), plus dispatch and sync-point counters
+    for the timed window only (warmup spans are drained away first).
+    The drained trace is structurally validated (every B has an E,
+    phases nest under ticks) before it is summarized.
+    """
+    from repro.core.exit_points import num_exits
+    from repro.obs import Tracer, summarize_spans, validate_chrome_trace
+
+    # speculative needs a real intermediate exit point to draft at
+    spec_cfg = (cfg if cfg.num_layers >= 6 else
+                paper_mini(num_layers=6, d_model=cfg.d_model,
+                           vocab_size=cfg.vocab_size))
+    spec_params = (params if spec_cfg is cfg
+                   else T.init_params(jax.random.PRNGKey(0), spec_cfg))
+    fixed = dict(controller_kind="fixed", fixed_exit_idx=exit_idx,
+                 allowed_kinds=("none", "fixed"), max_slots=slots,
+                 max_len=max_len)
+    systems = {
+        "contiguous": (params, cfg, dict(fixed)),
+        "paged": (params, cfg,
+                  dict(fixed, kv_layout="paged", block_size=block_size)),
+        "speculative": (spec_params, spec_cfg, dict(
+            default_policy=PolicySpec(
+                "speculative", {"draft_idx": num_exits(spec_cfg) - 1,
+                                "window": spec_window}),
+            allowed_kinds=("none", "speculative"), max_slots=slots,
+            max_len=max_len + spec_window, kv_layout="paged",
+            block_size=block_size, spec_window=spec_window)),
+    }
+    out: dict = {}
+    for system, (p, c, kw) in systems.items():
+        tracer = Tracer()
+        sched = Scheduler(p, c, queue_depth=max(64, n),
+                          tracer=tracer, **kw).start()
+        rng = np.random.default_rng(123)
+        for plen in PROMPT_LENS:              # warm every shape off-trace
+            for mn in MAX_NEWS:
+                sched.serve_batch(
+                    [rng.integers(4, c.vocab_size, plen).tolist()],
+                    max_new=mn)
+        sched.reset_peak_stats()
+        tracer.drain()                        # warmup spans out the window
+        c0 = tracer.counters
+        jobs = make_workload(n, rate, c.vocab_size, seed=seed)
+        r = run_scheduler(sched, jobs)
+        sched.stop()                          # drain tick closes the trace
+        events = tracer.drain()
+        # the warmup drain may have cut a live tick: boundary-partial OK
+        summ = validate_chrome_trace(events, allow_partial=True)
+        phases = summarize_spans(events)
+        c1 = tracer.counters
+        ctrs = {k: c1[k] - c0.get(k, 0) for k in c1}
+        tick_s = phases.get("tick", {}).get("total_s", 0.0)
+        # leaf phases hold the device waits (attribution is innermost)
+        leaf_dw = sum(ph["device_wait_s"] for nm, ph in phases.items()
+                      if nm not in ("tick", "drain"))
+        out[system] = {
+            "phases": phases,
+            "dispatches": int(ctrs.get("dispatch", 0)),
+            "sync_points": int(ctrs.get("sync_points", 0)),
+            "trace_events": summ["events"],
+            "span_names": summ["span_names"],
+            "ticks": phases.get("tick", {}).get("count", 0),
+            "device_wait_frac": leaf_dw / max(tick_s, 1e-9),
+            "wall_s": r["wall_s"],
+            "throughput_tok_s": r["throughput_tok_s"],
+        }
+        print(f"[load] phase-breakdown {system:12s} "
+              f"ticks={out[system]['ticks']:<5} "
+              f"dispatches={out[system]['dispatches']:<5} "
+              f"sync={out[system]['sync_points']:<5} "
+              f"device_wait={out[system]['device_wait_frac']*100:5.1f}% "
+              f"of tick time", flush=True)
+    return out
+
+
 def run_admission_trace(cfg, *, slots: int, max_len: int,
                         block_size: int = 8, n: int = 24,
-                        seed: int = 0) -> dict:
+                        seed: int = 0, tracer=None) -> dict:
     """Deterministic admission trace: paged vs contiguous at an equal
     KV-byte budget on a VIRTUAL clock.
 
@@ -295,9 +385,18 @@ def run_admission_trace(cfg, *, slots: int, max_len: int,
     geometry): two replays produce structurally identical logs, so CI can
     hard-gate ``paged_admits_more_concurrent`` instead of warn-only
     racing on shared runners (the old wall-clock formulation).
+
+    ``tracer`` (a :class:`repro.obs.Tracer`, typically built on
+    ``make_step_clock``) records tick / admit / decode_step / retire
+    spans for the replay: with the virtual clock the drained span log is
+    itself deterministic — two replays are byte-identical — which is what
+    tests assert trace *structure* against.
     """
+    from repro.obs.trace import NULL_TRACER
     from repro.serving.kv_pool import PagedKVPool
     from repro.serving.scheduler import KVSlotPool
+
+    obs = tracer if tracer is not None else NULL_TRACER
 
     jobs = make_workload(n, 1.0, cfg.vocab_size, seed=seed)
     # one pool per layout, reused for budget math AND the replay — the
@@ -321,41 +420,48 @@ def run_admission_trace(cfg, *, slots: int, max_len: int,
         events: list[tuple] = []
         peak = 0
         t = 0
+        layout = "paged" if paged else "contiguous"
         while (pending or queue or resident) and t < 100_000:
-            while pending and pending[0] <= t:
-                queue.append(pending.pop(0))
-            # shortest-prompt-first, submit-order tiebreak (the
-            # scheduler's _pick_next rule; its aging clause is wall-clock
-            # and has no virtual-time analogue here)
-            while pool.n_free and queue:
-                order = sorted(queue,
-                               key=lambda i: (len(jobs[i].prompt), i))
-                pick = None
-                for i in order:
-                    if not paged or pool.can_admit(jobs[i].prompt,
-                                                   jobs[i].max_new):
-                        pick = i
-                        break
-                if pick is None:
-                    break                           # block-starved
-                queue.remove(pick)
-                slot = pool.alloc()
-                if paged:
-                    pool.write_prompt(slot, jobs[pick].prompt, None,
-                                      max_new=jobs[pick].max_new)
-                resident[slot] = [pick, len(jobs[pick].prompt),
-                                  jobs[pick].max_new]
-                events.append((t, "admit", pick))
-            peak = max(peak, len(resident))
-            for slot in sorted(resident):
-                i, pos, left = resident[slot]
-                if paged:
-                    pool.prepare_append(slot, pos)  # real block growth
-                resident[slot] = [i, pos + 1, left - 1]
-                if left - 1 == 0:
-                    pool.release(slot)
-                    del resident[slot]
-                    events.append((t, "retire", i))
+            with obs.span("tick", cat="tick", layout=layout, t=t):
+                with obs.span("admit"):
+                    while pending and pending[0] <= t:
+                        queue.append(pending.pop(0))
+                    # shortest-prompt-first, submit-order tiebreak (the
+                    # scheduler's _pick_next rule; its aging clause is
+                    # wall-clock and has no virtual-time analogue here)
+                    while pool.n_free and queue:
+                        order = sorted(queue,
+                                       key=lambda i: (len(jobs[i].prompt),
+                                                      i))
+                        pick = None
+                        for i in order:
+                            if not paged or pool.can_admit(
+                                    jobs[i].prompt, jobs[i].max_new):
+                                pick = i
+                                break
+                        if pick is None:
+                            break                   # block-starved
+                        queue.remove(pick)
+                        slot = pool.alloc()
+                        if paged:
+                            pool.write_prompt(slot, jobs[pick].prompt,
+                                              None,
+                                              max_new=jobs[pick].max_new)
+                        resident[slot] = [pick, len(jobs[pick].prompt),
+                                          jobs[pick].max_new]
+                        events.append((t, "admit", pick))
+                peak = max(peak, len(resident))
+                with obs.span("decode_step", residents=len(resident)):
+                    for slot in sorted(resident):
+                        i, pos, left = resident[slot]
+                        if paged:
+                            pool.prepare_append(slot, pos)  # block growth
+                        resident[slot] = [i, pos + 1, left - 1]
+                        if left - 1 == 0:
+                            with obs.span("retire", req_id=i):
+                                pool.release(slot)
+                                del resident[slot]
+                            events.append((t, "retire", i))
             t += 1
         assert not (pending or queue or resident), \
             "admission trace failed to drain"
@@ -604,10 +710,14 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
                                           block_size=block_size, n=n,
                                           seed=seed)
     prefill_compare = run_prefill_compare(params, cfg, seed=seed)
+    phase_breakdown = run_phase_breakdown(params, cfg, rate=top, n=n,
+                                          slots=slots, max_len=max_len,
+                                          exit_idx=exit_idx,
+                                          block_size=block_size, seed=seed)
 
     payload = {
         "bench": "serving_load",
-        "schema_version": 2,
+        "schema_version": 3,
         "smoke": smoke,
         "config": {"num_layers": num_layers, "d_model": d_model,
                    "vocab": vocab, "slots": slots, "n": n,
@@ -618,6 +728,7 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
         "spec_compare": spec_compare,
         "admission_trace": admission_trace,
         "prefill_compare": prefill_compare,
+        "phase_breakdown": phase_breakdown,
     }
     if save:
         wrote = []

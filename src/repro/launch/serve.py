@@ -80,7 +80,14 @@ def main():
                     help="prompt tokens ingested per scheduler tick (one "
                          "compiled prefill shape for every prompt length; "
                          "with --scheduler)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run's "
+                         "tick phases here (open in Perfetto; with "
+                         "--scheduler)")
     args = ap.parse_args()
+    if args.trace_out and not args.scheduler:
+        ap.error("--trace-out requires --scheduler (the one-shot engine "
+                 "has no tick phases to trace)")
 
     mod = __import__(f"repro.configs."
                      f"{args.arch.replace('-', '_').replace('.', '_')}",
@@ -119,8 +126,12 @@ def main():
             for c, _ in tasks]
 
     sched = None
+    tracer = None
     if args.scheduler:
         from repro.serving import Scheduler
+        if args.trace_out:
+            from repro.obs import Tracer
+            tracer = Tracer()
         sched = Scheduler(params, cfg, default_policy=spec,
                           agent_params=agent,
                           allowed_kinds=("none", args.controller),
@@ -132,7 +143,8 @@ def main():
                           block_size=args.block_size,
                           spec_window=args.spec_window,
                           prefill_chunk=args.prefill_chunk,
-                          queue_depth=max(64, args.requests)).start()
+                          queue_depth=max(64, args.requests),
+                          tracer=tracer).start()
         try:
             handles = [sched.submit(r) for r in reqs]
             results = [h.result(300.0).to_result(ds.tokenizer)
@@ -182,6 +194,18 @@ def main():
               f"step compiles={st['step_compiles']} "
               f"prefill compiles={st['prefill_compiles']}")
         sched.stop()
+        if tracer is not None:
+            from repro.obs import write_chrome_trace
+            # stop() above drained residents, so the trace is complete
+            obj = write_chrome_trace(args.trace_out, tracer.drain())
+            summ = tracer.phase_summary()
+            print(f"  [trace] {len(obj['traceEvents'])} events -> "
+                  f"{args.trace_out} (load in Perfetto)")
+            for name in sorted(summ):
+                s = summ[name]
+                print(f"    {name:<14} n={s['count']:<5} "
+                      f"total={s['total_s']*1e3:8.2f}ms "
+                      f"device_wait={s['device_wait_s']*1e3:8.2f}ms")
 
 
 if __name__ == "__main__":

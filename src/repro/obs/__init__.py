@@ -1,0 +1,20 @@
+"""Serving observability: span/counter tracing, Chrome-trace and
+Prometheus exporters.
+
+    from repro.obs import Tracer
+    tracer = Tracer()
+    sched = Scheduler(params, cfg, tracer=tracer, ...)
+    ...
+    write_chrome_trace("trace.json", tracer.drain())   # open in Perfetto
+    print(render_prometheus(sched.stats(), tracer))    # /metrics body
+
+See docs/observability.md for the phase glossary and scrape examples.
+"""
+from repro.obs.chrome_trace import (TraceValidationError,  # noqa: F401
+                                    to_chrome_trace, validate_chrome_trace,
+                                    write_chrome_trace)
+from repro.obs.prom import (PROM_CONTENT_TYPE, render_prometheus,  # noqa
+                            validate_exposition)
+from repro.obs.trace import (DEFAULT_BUCKETS, NULL_TRACER,  # noqa: F401
+                             Histogram, Tracer, make_step_clock,
+                             summarize_spans)

@@ -1,0 +1,147 @@
+"""Chrome trace-event JSON export + structural validation.
+
+The tracer (:mod:`repro.obs.trace`) already stores events in Chrome
+trace-event form (``ph``/``ts``/``tid``/``name``); this module wraps them
+into the JSON object format that Perfetto / ``chrome://tracing`` load
+directly, and validates the structure CI gates on:
+
+* every sync begin (``B``) has a matching end (``E``) on the same thread,
+  in proper bracket order;
+* timestamps are non-negative and non-decreasing per thread;
+* phase spans nest under ``tick`` spans (the scheduler contract: a
+  ``cat="phase"`` span only opens while a ``cat="tick"`` span is open on
+  the same thread).
+
+``validate_chrome_trace`` raises :class:`TraceValidationError` with the
+first violation; tests and the CI fast job call it on real drained
+traces.
+"""
+from __future__ import annotations
+
+import json
+from typing import Union
+
+#: phases may also appear outside a tick (e.g. drain-time retirement);
+#: the validator treats these categories as tick-scoped when inside one.
+TICK_CAT = "tick"
+PHASE_CAT = "phase"
+
+
+class TraceValidationError(AssertionError):
+    pass
+
+
+def to_chrome_trace(events: list[dict], pid: int = 1,
+                    process_name: str = "repro-serving") -> dict:
+    """Wrap drained tracer events into a Perfetto-loadable trace object."""
+    out = [{"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
+            "args": {"name": process_name}}]
+    for ev in events:
+        e = dict(ev)
+        e.setdefault("pid", pid)
+        out.append(e)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, events: list[dict], **kw) -> dict:
+    obj = to_chrome_trace(events, **kw)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+def validate_chrome_trace(trace: Union[dict, list],
+                          require_tick_nesting: bool = True,
+                          allow_partial: bool = False) -> dict:
+    """Structurally validate a trace; returns summary stats.
+
+    Accepts either the ``{"traceEvents": [...]}`` object or a bare event
+    list (e.g. straight from ``Tracer.drain()``).
+
+    ``allow_partial`` tolerates *window-boundary* partial spans — a
+    drained window of a live scheduler can start after a span's ``B``
+    (its orphan ``E`` is skipped) and end before a span's ``E`` (its
+    open ``B`` is reported, not raised). Mid-window corruption (an ``E``
+    that mismatches the open ``B``) still raises. Within-window async
+    ends with no begin are likewise tolerated only in partial mode.
+    The summary gains ``partial_begins`` / ``partial_ends`` counts.
+    """
+    events = trace["traceEvents"] if isinstance(trace, dict) else trace
+    stacks: dict[int, list[dict]] = {}
+    last_ts: dict[int, float] = {}
+    names = set()
+    anchored: set = set()       # tids with an in-window tick B
+    n_spans = 0
+    partial_ends = 0
+    async_open: dict[tuple, int] = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        tid = ev.get("tid", 0)
+        ts = ev.get("ts")
+        if ts is None or ts < 0:
+            raise TraceValidationError(f"event {i}: bad ts {ts!r}")
+        if ph in ("B", "E", "i"):
+            if ts < last_ts.get(tid, 0.0) - 1e-9:
+                raise TraceValidationError(
+                    f"event {i}: ts went backwards on tid {tid} "
+                    f"({ts} < {last_ts[tid]})")
+            last_ts[tid] = ts
+        if ph == "B":
+            stack = stacks.setdefault(tid, [])
+            if ev.get("cat") == TICK_CAT:
+                anchored.add(tid)
+            if (require_tick_nesting and ev.get("cat") == PHASE_CAT
+                    and not any(e.get("cat") == TICK_CAT for e in stack)):
+                # in partial mode the enclosing tick's B may predate the
+                # window cut — only enforce nesting once an in-window
+                # tick B has anchored this tid
+                if not allow_partial or tid in anchored:
+                    raise TraceValidationError(
+                        f"event {i}: phase span {ev.get('name')!r} opened "
+                        f"outside a tick span on tid {tid}")
+            stack.append(ev)
+            names.add(ev.get("name"))
+        elif ph == "E":
+            stack = stacks.setdefault(tid, [])
+            if not stack:
+                if allow_partial:
+                    partial_ends += 1     # B was before the window cut
+                    continue
+                raise TraceValidationError(
+                    f"event {i}: E {ev.get('name')!r} with no open B on "
+                    f"tid {tid}")
+            top = stack.pop()
+            if top.get("name") != ev.get("name"):
+                raise TraceValidationError(
+                    f"event {i}: E {ev.get('name')!r} does not match open "
+                    f"B {top.get('name')!r} on tid {tid}")
+            n_spans += 1
+        elif ph == "b":
+            key = (ev.get("cat"), ev.get("name"), ev.get("id"))
+            async_open[key] = async_open.get(key, 0) + 1
+        elif ph == "e":
+            key = (ev.get("cat"), ev.get("name"), ev.get("id"))
+            if async_open.get(key, 0) < 1 and not allow_partial:
+                raise TraceValidationError(
+                    f"event {i}: async end {key!r} with no open begin")
+            async_open[key] = max(async_open.get(key, 0) - 1, 0)
+        elif ph in ("i", "C", "M"):
+            pass
+        else:
+            raise TraceValidationError(f"event {i}: unknown ph {ph!r}")
+    partial_begins = sum(len(s) for s in stacks.values())
+    if partial_begins and not allow_partial:
+        bad = {t: [e.get("name") for e in s]
+               for t, s in stacks.items() if s}
+        raise TraceValidationError(f"unclosed B spans: {bad}")
+    return {"events": len(events), "spans": n_spans,
+            "span_names": sorted(n for n in names if n),
+            "threads": sorted(last_ts),
+            "partial_begins": partial_begins,
+            "partial_ends": partial_ends}
+
+
+__all__ = ["to_chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+           "TraceValidationError"]

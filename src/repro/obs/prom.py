@@ -1,0 +1,147 @@
+"""Prometheus text-exposition rendering of scheduler stats + tracer data.
+
+``render_prometheus(stats, tracer)`` turns the existing
+``Scheduler.stats()`` dict into gauge families (numeric scalars only —
+strings/lists are skipped; booleans render 0/1; the ``lifetime``
+sub-dict gets a ``repro_lifetime_`` prefix) and the tracer's phase
+histograms + counters into standard ``histogram``/``counter`` families:
+
+    repro_queue_depth 3
+    repro_throughput_tok_s 118.4
+    repro_phase_seconds_bucket{phase="decode_step",le="0.002"} 41
+    repro_phase_seconds_sum{phase="decode_step"} 0.0712
+    repro_phase_seconds_count{phase="decode_step"} 44
+    repro_phase_device_wait_seconds_sum{phase="decode_step"} 0.0561
+    repro_events_total{event="dispatch"} 97
+
+The output follows the text exposition format version 0.0.4 (one
+``# TYPE`` per family, label values escaped) and is what the server's
+``GET /metrics`` returns.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional
+
+PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+_NAME_OK = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _metric_name(key: str, prefix: str = "repro_") -> str:
+    return prefix + _NAME_OK.sub("_", key)
+
+
+def _fmt(v) -> str:
+    v = float(v)
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(v) if v != int(v) else str(int(v))
+
+
+def _escape_label(v: str) -> str:
+    return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _scalar_lines(stats: dict, prefix: str) -> list[str]:
+    lines = []
+    for key in sorted(stats):
+        val = stats[key]
+        if isinstance(val, bool):
+            val = int(val)
+        if isinstance(val, dict):
+            if key == "lifetime":
+                lines.extend(_scalar_lines(val, prefix + "lifetime_"))
+            continue
+        if not isinstance(val, (int, float)) or val is None:
+            continue        # strings, lists, None: not exposable scalars
+        name = _metric_name(key, prefix)
+        lines.append(f"# TYPE {name} gauge")
+        lines.append(f"{name} {_fmt(val)}")
+    return lines
+
+
+def render_prometheus(stats: dict, tracer=None,
+                      prefix: str = "repro_") -> str:
+    """Render scheduler stats (+ optional tracer histograms/counters) as
+    Prometheus text exposition."""
+    lines = _scalar_lines(stats or {}, prefix)
+
+    if tracer is not None:
+        hists = tracer.histograms()
+        if hists:
+            base = prefix + "phase_seconds"
+            lines.append(f"# HELP {base} tick-phase wall time (seconds)")
+            lines.append(f"# TYPE {base} histogram")
+            for phase in sorted(hists):
+                h = hists[phase]
+                lab = _escape_label(phase)
+                for le, cum in h.cumulative():
+                    lines.append(
+                        f'{base}_bucket{{phase="{lab}",le="{le}"}} {cum}')
+                lines.append(f'{base}_sum{{phase="{lab}"}} {_fmt(h.sum)}')
+                lines.append(f'{base}_count{{phase="{lab}"}} {h.count}')
+            dw = prefix + "phase_device_wait_seconds_sum"
+            lines.append(f"# TYPE {dw} gauge")
+            for phase in sorted(hists):
+                lab = _escape_label(phase)
+                lines.append(
+                    f'{dw}{{phase="{lab}"}} '
+                    f'{_fmt(hists[phase].device_wait_sum)}')
+        counters = tracer.counters
+        if counters:
+            cname = prefix + "events_total"
+            lines.append(f"# HELP {cname} tracer event counters "
+                         f"(device dispatches, host sync points, ...)")
+            lines.append(f"# TYPE {cname} counter")
+            for k in sorted(counters):
+                lines.append(
+                    f'{cname}{{event="{_escape_label(k)}"}} {counters[k]}')
+    return "\n".join(lines) + "\n"
+
+
+_LINE_RE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*"                      # metric name
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'     # first label
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})?'  # more labels
+    r" (?:[+-]?(?:[0-9.eE+-]+)|NaN|[+-]Inf)$")
+
+
+def validate_exposition(text: str,
+                        required_families: Optional[set] = None) -> dict:
+    """Check every non-comment line parses as ``name{labels} value`` and
+    (optionally) that required metric families are present. Returns
+    ``{"lines": n, "families": {...}}``; raises ValueError on violation.
+    """
+    families = set()
+    n = 0
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 3 and parts[1] in ("TYPE", "HELP"):
+                families.add(parts[2])
+            continue
+        if not _LINE_RE.match(line):
+            raise ValueError(f"bad exposition line: {line!r}")
+        families.add(line.split("{")[0].split(" ")[0])
+        n += 1
+    missing = set(required_families or ()) - {
+        f for fam in families for f in (fam, fam.rstrip("_"))}
+    # histogram child series (_bucket/_sum/_count) count toward the family
+    if missing:
+        resolved = set()
+        for m in missing:
+            if any(f.startswith(m) for f in families):
+                resolved.add(m)
+        missing -= resolved
+    if missing:
+        raise ValueError(f"missing metric families: {sorted(missing)}")
+    return {"lines": n, "families": sorted(families)}
+
+
+__all__ = ["render_prometheus", "validate_exposition", "PROM_CONTENT_TYPE"]

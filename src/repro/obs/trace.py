@@ -1,0 +1,373 @@
+"""Low-overhead span/counter tracer for the serving stack.
+
+The scheduler's decode loop is a hot path: one tick may be a single
+sub-millisecond jitted dispatch, so the tracer has to cost nothing when
+it is off and very little when it is on.
+
+Design
+------
+* **Explicit clock.** ``Tracer(clock=...)`` takes any zero-arg callable
+  returning seconds. Wall-clock traces use ``time.monotonic`` (the
+  default); the virtual-clock admission trace
+  (``benchmarks.serving_load.run_admission_trace``) passes a counter so
+  two replays of the same workload produce byte-identical span logs —
+  which is what lets CI assert trace *structure* instead of racing on
+  timings.
+
+* **No-op fast path.** A disabled tracer (``Tracer(enabled=False)``, or
+  the shared :data:`NULL_TRACER`) returns one preallocated null context
+  manager from ``span()``/``wait()`` and returns immediately from every
+  counter method: no allocation, no clock read, no lock. Tier-1 perf is
+  unaffected (tests/test_obs.py bounds the overhead).
+
+* **Spans nest per thread.** ``span()`` is a context manager; begin/end
+  events are appended in call order, so each thread's event stream is a
+  well-formed bracket sequence ("every B has an E"). The per-thread open
+  span also accumulates **device wait**: ``wait()`` wraps a
+  ``block_until_ready``/host-fetch region, times it, counts it as one
+  ``sync_points`` counter tick, and attributes the time to the innermost
+  open span — every span's end event carries
+  ``{"device_wait_s", "host_s"}`` so a phase's wall time splits into
+  "waiting for the device" vs "Python bookkeeping".
+
+* **Counters and histograms.** ``count(name)`` bumps a cumulative
+  counter (the scheduler counts ``dispatch`` per jitted call and
+  ``sync_points`` per host sync). Every finished span feeds a per-name
+  duration histogram (log-spaced second buckets) that
+  :mod:`repro.obs.prom` renders as Prometheus histogram families and
+  ``phase_summary()`` aggregates for benchmark reports.
+
+Events are stored in Chrome trace-event form (``ph`` B/E/C/b/e/i, ``ts``
+in microseconds) and handed out by ``drain()``;
+:mod:`repro.obs.chrome_trace` wraps them into a Perfetto-loadable file.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+# log-spaced duration buckets (seconds): 10µs .. 10s
+DEFAULT_BUCKETS = (1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3,
+                   1e-2, 2e-2, 5e-2, 1e-1, 2e-1, 5e-1, 1.0, 2.0, 5.0, 10.0)
+
+
+class Histogram:
+    """Fixed-bucket histogram (Prometheus ``le`` semantics: cumulative
+    counts per upper bound, plus ``sum``/``count`` and a parallel
+    device-wait sum so phase time splits survive aggregation)."""
+
+    __slots__ = ("buckets", "counts", "sum", "count", "device_wait_sum")
+
+    def __init__(self, buckets=DEFAULT_BUCKETS):
+        self.buckets = tuple(buckets)
+        self.counts = [0] * (len(self.buckets) + 1)   # +inf tail
+        self.sum = 0.0
+        self.count = 0
+        self.device_wait_sum = 0.0
+
+    def observe(self, value: float, device_wait: float = 0.0) -> None:
+        i = 0
+        for i, b in enumerate(self.buckets):      # noqa: B007
+            if value <= b:
+                break
+        else:
+            i = len(self.buckets)
+        self.counts[i] += 1
+        self.sum += value
+        self.count += 1
+        self.device_wait_sum += device_wait
+
+    def cumulative(self) -> list[tuple[str, int]]:
+        """[(le_label, cumulative_count), ...] ending with ("+Inf", n)."""
+        out = []
+        acc = 0
+        for b, c in zip(self.buckets, self.counts):
+            acc += c
+            out.append((repr(b), acc))
+        out.append(("+Inf", acc + self.counts[-1]))
+        return out
+
+
+class _NullCtx:
+    """Shared do-nothing context manager: the disabled tracer's span."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **args):      # parity with _SpanCtx
+        return self
+
+
+_NULL_CTX = _NullCtx()
+
+
+class _SpanCtx:
+    """One open span. Created per ``span()`` call on the enabled path."""
+
+    __slots__ = ("tracer", "name", "cat", "args", "t0", "device_wait",
+                 "_tid")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args):
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self.device_wait = 0.0
+        self.t0 = 0.0
+        self._tid = 0
+
+    def set(self, **args):
+        """Attach args to the span's end event (merged in the viewer)."""
+        if self.args:
+            self.args.update(args)
+        else:
+            self.args = args
+        return self
+
+    def __enter__(self):
+        tr = self.tracer
+        self._tid = tr._tid()
+        self.t0 = tr._clock()
+        ev = {"ph": "B", "ts": self.t0 * 1e6, "tid": self._tid,
+              "name": self.name, "cat": self.cat}
+        if self.args:
+            ev["args"] = dict(self.args)
+        tr._emit(ev)
+        tr._stack().append(self)
+        return self
+
+    def __exit__(self, *exc):
+        tr = self.tracer
+        t1 = tr._clock()
+        stack = tr._stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        dur = max(t1 - self.t0, 0.0)
+        host = max(dur - self.device_wait, 0.0)
+        ev = {"ph": "E", "ts": t1 * 1e6, "tid": self._tid,
+              "name": self.name, "cat": self.cat,
+              "args": {"device_wait_s": self.device_wait, "host_s": host}}
+        tr._emit(ev)
+        with tr._lock:
+            h = tr._hists.get(self.name)
+            if h is None:
+                h = tr._hists[self.name] = Histogram()
+            h.observe(dur, self.device_wait)
+        return False
+
+
+class _WaitCtx:
+    """Times a device-sync region (``block_until_ready`` / host fetch),
+    attributes the elapsed time to the innermost open span, and counts
+    one ``sync_points`` tick."""
+
+    __slots__ = ("tracer", "t0")
+
+    def __init__(self, tracer: "Tracer"):
+        self.tracer = tracer
+        self.t0 = 0.0
+
+    def __enter__(self):
+        self.t0 = self.tracer._clock()
+        return self
+
+    def __exit__(self, *exc):
+        tr = self.tracer
+        dt = max(tr._clock() - self.t0, 0.0)
+        stack = tr._stack()
+        if stack:
+            stack[-1].device_wait += dt
+        with tr._lock:
+            tr._counters["sync_points"] = (
+                tr._counters.get("sync_points", 0) + 1)
+            tr._wait_total += dt
+        return False
+
+
+class Tracer:
+    """Span/counter collector with an explicit clock and a no-op path.
+
+    Thread-safe: the scheduler's decode thread, submitting threads and
+    HTTP handler threads may all write concurrently; ``drain()`` swaps
+    the event list under a lock.
+    """
+
+    def __init__(self, enabled: bool = True,
+                 clock: Callable[[], float] = time.monotonic,
+                 max_events: int = 200_000):
+        self.enabled = enabled
+        self._clock = clock
+        self.max_events = max_events
+        self._events: list[dict] = []
+        self._dropped = 0
+        self._counters: dict[str, int] = {}
+        self._hists: dict[str, Histogram] = {}
+        self._wait_total = 0.0
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self._tids: dict[int, int] = {}
+
+    # -- internals ----------------------------------------------------------
+    def _stack(self) -> list:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    def _tid(self) -> int:
+        """Stable small thread id (first-seen order) — deterministic for
+        single-threaded virtual-clock traces."""
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids))
+        return tid
+
+    def _emit(self, ev: dict) -> None:
+        if len(self._events) >= self.max_events:
+            self._dropped += 1
+            return
+        self._events.append(ev)     # list.append is GIL-atomic
+
+    # -- spans --------------------------------------------------------------
+    def span(self, name: str, cat: str = "phase", **args):
+        """Context manager timing a named phase. Nesting follows Python
+        ``with`` nesting per thread."""
+        if not self.enabled:
+            return _NULL_CTX
+        return _SpanCtx(self, name, cat, args or None)
+
+    def wait(self):
+        """Context manager around a device sync point — see _WaitCtx."""
+        if not self.enabled:
+            return _NULL_CTX
+        return _WaitCtx(self)
+
+    def instant(self, name: str, cat: str = "mark", **args) -> None:
+        if not self.enabled:
+            return
+        ev = {"ph": "i", "ts": self._clock() * 1e6, "tid": self._tid(),
+              "name": name, "cat": cat, "s": "t"}
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+
+    # -- async (cross-tick) spans: per-request lifecycle --------------------
+    def async_begin(self, name: str, span_id, cat: str = "request",
+                    **args) -> None:
+        if not self.enabled:
+            return
+        ev = {"ph": "b", "ts": self._clock() * 1e6, "tid": self._tid(),
+              "id": int(span_id), "name": name, "cat": cat}
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+
+    def async_end(self, name: str, span_id, cat: str = "request",
+                  **args) -> None:
+        if not self.enabled:
+            return
+        ev = {"ph": "e", "ts": self._clock() * 1e6, "tid": self._tid(),
+              "id": int(span_id), "name": name, "cat": cat}
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+
+    # -- counters -----------------------------------------------------------
+    def count(self, name: str, inc: int = 1) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + inc
+
+    @property
+    def counters(self) -> dict:
+        with self._lock:
+            return dict(self._counters)
+
+    @property
+    def dropped_events(self) -> int:
+        return self._dropped
+
+    # -- export -------------------------------------------------------------
+    def drain(self) -> list[dict]:
+        """Return all events collected since the last drain and clear the
+        buffer (counters/histograms are cumulative and are NOT cleared)."""
+        with self._lock:
+            evs, self._events = self._events, []
+        return evs
+
+    def histograms(self) -> dict[str, Histogram]:
+        with self._lock:
+            return dict(self._hists)
+
+    def phase_summary(self) -> dict[str, dict]:
+        """Per-phase aggregate: ``{name: {count, total_s, device_wait_s,
+        host_s, mean_s}}`` — the benchmark's phase-time breakdown."""
+        out = {}
+        with self._lock:
+            for name, h in self._hists.items():
+                host = max(h.sum - h.device_wait_sum, 0.0)
+                out[name] = {
+                    "count": h.count,
+                    "total_s": h.sum,
+                    "device_wait_s": h.device_wait_sum,
+                    "host_s": host,
+                    "mean_s": h.sum / max(h.count, 1),
+                }
+        return out
+
+
+def summarize_spans(events: list) -> dict[str, dict]:
+    """``phase_summary()``-shaped aggregate over a drained event list.
+
+    Every span end (``E``) event carries ``{device_wait_s, host_s}`` whose
+    sum is the span's duration, so a summary can be computed over any
+    *window* of events — e.g. the timed run only, after draining warmup
+    spans away — where the tracer's cumulative histograms cannot.
+    """
+    out: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("ph") != "E":
+            continue
+        a = ev.get("args") or {}
+        dw = float(a.get("device_wait_s", 0.0))
+        host = float(a.get("host_s", 0.0))
+        d = out.setdefault(ev.get("name"),
+                           {"count": 0, "total_s": 0.0,
+                            "device_wait_s": 0.0, "host_s": 0.0})
+        d["count"] += 1
+        d["total_s"] += dw + host
+        d["device_wait_s"] += dw
+        d["host_s"] += host
+    for d in out.values():
+        d["mean_s"] = d["total_s"] / max(d["count"], 1)
+    return out
+
+
+#: Shared disabled tracer: the scheduler's default. Retains nothing, so
+#: sharing one instance across schedulers is safe.
+NULL_TRACER = Tracer(enabled=False)
+
+
+def make_step_clock(step_s: float = 1e-6) -> Callable[[], float]:
+    """A deterministic clock: each call advances by ``step_s``. Used by
+    virtual-clock traces so span logs are pure functions of the workload."""
+    state = {"t": 0.0}
+
+    def clock() -> float:
+        state["t"] += step_s
+        return state["t"]
+
+    return clock
+
+
+__all__ = ["Tracer", "Histogram", "NULL_TRACER", "DEFAULT_BUCKETS",
+           "make_step_clock", "summarize_spans"]

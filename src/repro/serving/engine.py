@@ -48,14 +48,18 @@ class Engine:
                  max_new: int = 15, max_context: int = 512,
                  agent_params=None, tokenizer=None,
                  kv_layout: str = "contiguous", kv_block_size: int = 16,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, tracer=None):
         """``controller`` may be a legacy callable or anything
         ``exit_policy.as_exit_fn`` accepts (name / PolicySpec /
         PolicyBatch). ``agent_params`` feeds 'policy' specs,
         ``tokenizer`` enables text prompts and stop sequences.
         ``kv_layout="paged"`` decodes through block-paged KV caches
         (``kv_block_size`` tokens per block; ``use_kernel`` selects the
-        Pallas paged-attention kernel) — same tokens, paged substrate."""
+        Pallas paged-attention kernel) — same tokens, paged substrate.
+        ``tracer`` (a :class:`repro.obs.Tracer`) records a ``serve`` span
+        per batch with the device-wait / host split."""
+        from repro.obs.trace import NULL_TRACER
+        self.obs = tracer if tracer is not None else NULL_TRACER
         self.params = params
         self.cfg = cfg
         self.controller = controller
@@ -132,29 +136,35 @@ class Engine:
         kv_block_size = (self.kv_block_size if self.kv_layout == "paged"
                          else None)
         spec_energy = None
-        if spec_like is not None:
-            from repro.core.speculative import speculative_generate
-            if seeds is None and key is not None:
-                # honor the caller's key: speculative draws are keyed by
-                # per-row seeds, so derive them from it
-                seeds = np.asarray(jax.random.randint(
-                    key, (B,), 0, np.iinfo(np.int32).max))
-            out = speculative_generate(
-                self.params, self.cfg, jnp.asarray(ctx), max_new,
-                sampling=sampling, seeds=seeds, seed_offsets=seed_offsets,
-                kv_block_size=kv_block_size, use_kernel=self.use_kernel,
-                **spec_like)
-            spec_energy = np.asarray(out["energy_j"])
-        else:
-            exit_fn = exit_policy.as_exit_fn(ctrl, self._ctx())
-            out = generate(self.params, self.cfg, jnp.asarray(ctx), max_new,
-                           exit_fn, max_len=ctx_len + max_new,
-                           sampling=sampling, key=key, seeds=seeds,
-                           seed_offsets=seed_offsets,
-                           kv_block_size=kv_block_size,
-                           use_kernel=self.use_kernel)
-        toks = np.asarray(out["tokens"])
-        exits = np.asarray(out["exit_layers"])
+        with self.obs.span("serve", cat="tick", batch=B, max_new=max_new):
+            if spec_like is not None:
+                from repro.core.speculative import speculative_generate
+                if seeds is None and key is not None:
+                    # honor the caller's key: speculative draws are keyed
+                    # by per-row seeds, so derive them from it
+                    seeds = np.asarray(jax.random.randint(
+                        key, (B,), 0, np.iinfo(np.int32).max))
+                out = speculative_generate(
+                    self.params, self.cfg, jnp.asarray(ctx), max_new,
+                    sampling=sampling, seeds=seeds,
+                    seed_offsets=seed_offsets,
+                    kv_block_size=kv_block_size, use_kernel=self.use_kernel,
+                    **spec_like)
+                self.obs.count("dispatch")
+                with self.obs.wait():
+                    spec_energy = np.asarray(out["energy_j"])
+            else:
+                exit_fn = exit_policy.as_exit_fn(ctrl, self._ctx())
+                out = generate(self.params, self.cfg, jnp.asarray(ctx),
+                               max_new, exit_fn, max_len=ctx_len + max_new,
+                               sampling=sampling, key=key, seeds=seeds,
+                               seed_offsets=seed_offsets,
+                               kv_block_size=kv_block_size,
+                               use_kernel=self.use_kernel)
+                self.obs.count("dispatch")
+            with self.obs.wait():
+                toks = np.asarray(out["tokens"])
+                exits = np.asarray(out["exit_layers"])
         tokens, exit_layers, metrics = [], [], []
         for i in range(B):
             row = toks[i].tolist()

@@ -111,6 +111,7 @@ from repro.core.exit_policy import PolicyContext, PolicySpec
 from repro.core.speculative import (SPEC_POLICY, accept_drafts,
                                     draft_boundary_layer)
 from repro.data.tokenizer import EOS, PAD
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.models.transformer import (chunked_prefill_unsupported,
                                       decode_step, finalize_prefill_ring,
                                       init_cache, init_prefill_ring,
@@ -219,6 +220,9 @@ class Request:
     _done: threading.Event = field(default_factory=threading.Event,
                                    repr=False)
     _stream: _queue.Queue = field(default_factory=_queue.Queue, repr=False)
+    # which tracer lifecycle span (req/<stage>) is currently open, so a
+    # drain can close it no matter where the request was interrupted
+    _obs_stage: Optional[str] = field(default=None, repr=False)
 
     @property
     def kind(self) -> str:
@@ -309,8 +313,13 @@ class Scheduler:
                  num_blocks: Optional[int] = None, use_kernel: bool = False,
                  enable_prefix_cache: bool = True,
                  spec_window: int = 4,
+                 tracer: Optional[Tracer] = None,
                  dtype=jnp.float32):
         self.params = params
+        # observability: every tick phase runs under a span; the default
+        # NULL_TRACER is a shared no-op (no allocation, no clock read) so
+        # an untraced scheduler pays nothing on the tick path
+        self.obs = tracer if tracer is not None else NULL_TRACER
         self.cfg = cfg
         self.agent_params = agent_params
         self.tokenizer = tokenizer
@@ -429,8 +438,14 @@ class Scheduler:
         self._stopped = False     # set once, by stop() or a loop crash
         self._thread: Optional[threading.Thread] = None
 
-        # fleet accounting
+        # fleet accounting. The window counters below reset on
+        # reset_peak_stats (so throughput/J-per-token cover only the
+        # measured run); _lifetime accumulates every closed window and is
+        # reported as stats()["lifetime"].
         self._t0 = time.monotonic()
+        self._lifetime = {"completed_requests": 0, "fleet_tokens": 0,
+                          "fleet_energy_j": 0.0,
+                          "fleet_prefill_energy_j": 0.0, "uptime_s": 0.0}
         self._completed = 0
         self._fleet_tokens = 0
         self._fleet_energy_j = 0.0
@@ -711,6 +726,8 @@ class Scheduler:
             self._seq += 1
             self._queue.append(req)
             self._work.notify_all()
+        self._obs_req_begin(req, "queued", prompt_len=len(prompt),
+                            policy=spec.name, max_new=max_new)
         return req
 
     def serve_batch(self, requests: Sequence[Sequence[int]],
@@ -754,16 +771,22 @@ class Scheduler:
                         self._work.wait(0.1)
                     if not self._running:
                         break
-                self._admit_ready()
-                busy = False
-                if self._prefill_job is not None:
-                    # one prompt chunk per tick: admission shares the step
-                    # cadence with decode instead of stopping the world
-                    self._prefill_tick()
-                    busy = True
-                if any(r is not None for r in self._slot_req):
-                    self._tick()
-                    busy = True
+                # every loop iteration with live work is one tick span;
+                # the named phase spans below nest under it (the trace
+                # contract validate_chrome_trace asserts)
+                with self.obs.span("tick", cat="tick"):
+                    with self.obs.span("admit"):
+                        self._admit_ready()
+                    busy = False
+                    if self._prefill_job is not None:
+                        # one prompt chunk per tick: admission shares the
+                        # step cadence with decode instead of stopping the
+                        # world
+                        self._prefill_tick()
+                        busy = True
+                    if any(r is not None for r in self._slot_req):
+                        self._tick()
+                        busy = True
                 if not busy:
                     time.sleep(0.002)   # queued but gated: don't busy-spin
         except Exception:  # noqa: BLE001
@@ -886,6 +909,8 @@ class Scheduler:
         start = (min(shared_tokens, plen - 1) // C) * C
         req.status = "running"
         req.started_at = time.monotonic()
+        self._obs_req_begin(req, "prefill", prompt_len=plen,
+                            shared_tokens=shared_tokens)
         self._prefill_job = _PrefillJob(req=req, slot=slot, ring=ring,
                                         grid=grid, next_pos=start,
                                         plen=plen, ids=ids,
@@ -898,29 +923,35 @@ class Scheduler:
         t_start = time.monotonic()
         c0 = job.next_pos
         C = self.prefill_chunk
-        logits, job.ring = self._chunk(
-            self.params, jnp.asarray(job.grid[None, c0:c0 + C]), job.ring,
-            jnp.asarray([c0], jnp.int32),
-            jnp.asarray([job.plen], jnp.int32))
-        # sync before timing: jit returns at dispatch, and an async dt
-        # would inflate the modeled watts by the dispatch/compute gap and
-        # spuriously close the power gate (_plain_tick syncs via its
-        # np.asarray fetch; the chunk result is otherwise unfetched)
-        logits.block_until_ready()
-        # prompt ingestion is not free: charge the chunk's modeled joules
-        # to the request and the fleet power EMA (the power gate defers
-        # admission under prefill load exactly like decode load)
-        e = energy.prefill_chunk_energy(self.cfg, min(c0 + C, job.plen),
-                                        min(C, job.plen - c0))
-        job.req.prefill_energy_j += e
-        with self._lock:
-            self._fleet_prefill_j += e
-        dt = max(time.monotonic() - t_start, 1e-6)
-        self._power_w_ema = 0.9 * self._power_w_ema + 0.1 * (e / dt)
-        job.next_pos = c0 + C
-        if job.next_pos >= job.plen:
-            self._prefill_job = None
-            self._finish_prefill(job, logits, c0)
+        with self.obs.span("prefill_chunk", req_id=job.req.req_id,
+                           pos=int(c0)):
+            logits, job.ring = self._chunk(
+                self.params, jnp.asarray(job.grid[None, c0:c0 + C]),
+                job.ring, jnp.asarray([c0], jnp.int32),
+                jnp.asarray([job.plen], jnp.int32))
+            self.obs.count("dispatch")
+            # sync before timing: jit returns at dispatch, and an async dt
+            # would inflate the modeled watts by the dispatch/compute gap
+            # and spuriously close the power gate (_plain_tick syncs via
+            # its np.asarray fetch; the chunk result is otherwise
+            # unfetched)
+            with self.obs.wait():
+                logits.block_until_ready()
+            # prompt ingestion is not free: charge the chunk's modeled
+            # joules to the request and the fleet power EMA (the power
+            # gate defers admission under prefill load exactly like
+            # decode load)
+            e = energy.prefill_chunk_energy(self.cfg, min(c0 + C, job.plen),
+                                            min(C, job.plen - c0))
+            job.req.prefill_energy_j += e
+            with self._lock:
+                self._fleet_prefill_j += e
+            dt = max(time.monotonic() - t_start, 1e-6)
+            self._power_w_ema = 0.9 * self._power_w_ema + 0.1 * (e / dt)
+            job.next_pos = c0 + C
+            if job.next_pos >= job.plen:
+                self._prefill_job = None
+                self._finish_prefill(job, logits, c0)
 
     def _finish_prefill(self, job: _PrefillJob, logits, c0: int) -> None:
         """Last chunk landed: sample the first token from its logits,
@@ -934,6 +965,7 @@ class Scheduler:
             jnp.asarray([s.temperature], jnp.float32),
             jnp.asarray([s.top_k], jnp.int32),
             jnp.asarray([s.top_p], jnp.float32))
+        self.obs.count("dispatch")       # first-token picker
         ring = self._finalize(job.ring)
         if self.kv_layout == "paged":
             n_skip, n_write = self.pool.install_prompt(
@@ -943,12 +975,14 @@ class Scheduler:
                 self.pool.write_ring(slot, ring, n_skip, n_write)
         else:
             self.pool.write(ring, slot)
+        self.obs.count("dispatch")       # ring -> pool splice
         self._bind_slot(req, slot)
         self._account_token(req, int(t0[0]), slot, logprob=float(lp0[0]))
 
     # -- whole-prompt admission (chunked_prefill_unsupported fallback) ------
     def _admit(self, req: Request) -> None:
         s = req.sampling
+        self._obs_req_begin(req, "prefill", prompt_len=req.ctx_len)
         paged = self.kv_layout == "paged"
         if paged:
             # prefill to the block-rounded prompt length: ring entries land
@@ -965,6 +999,7 @@ class Scheduler:
             jnp.asarray([s.top_k], jnp.int32),
             jnp.asarray([s.top_p], jnp.float32),
             max_len=plen)
+        self.obs.count("dispatch")
         slot = self.pool.alloc()
         assert slot is not None, "admission with no free slot"
         if paged:
@@ -979,6 +1014,8 @@ class Scheduler:
 
     def _bind_slot(self, req: Request, slot: int) -> None:
         """Seat a freshly prefilled request in its slot's runtime arrays."""
+        self._obs_req_end(req, prefill_energy_j=req.prefill_energy_j)
+        self._obs_req_begin(req, "decode", slot=slot)
         s = req.sampling
         req._exits_all.append(self.cfg.num_layers)   # token 0: full prefill
         self._slot_req[slot] = req
@@ -1020,23 +1057,30 @@ class Scheduler:
             {f: jnp.asarray(v) for f, v in self._pp.items()},
             jnp.asarray(self._temp), jnp.asarray(self._topk),
             jnp.asarray(self._topp), jnp.asarray(self._seed))
+        self.obs.count("dispatch")
         self.pool.caches = new_caches
         return nxt, exitl, lp, logits
 
     def _plain_tick(self) -> None:
         t_start = time.monotonic()
-        nxt, exitl, lp, _ = self._run_step()
-        nxt = np.asarray(nxt)
-        exitl = np.asarray(exitl)
-        lp = np.asarray(lp)
+        obs = self.obs
+        with obs.span("decode_step"):            # host-side dispatch only
+            out = self._run_step()
+        with obs.span("sample_host"):            # the tick's sync point:
+            with obs.wait():                     # sampled tokens to host
+                nxt = np.asarray(out[0])
+                exitl = np.asarray(out[1])
+                lp = np.asarray(out[2])
         tick_energy = 0.0
-        for slot, req in enumerate(self._slot_req):
-            if req is None:
-                continue
-            self._pos[slot] += 1
-            req._exits_all.append(int(exitl[slot]))
-            tick_energy += self._account_token(req, int(nxt[slot]), slot,
-                                               logprob=float(lp[slot]))
+        with obs.span("bookkeeping"):
+            for slot, req in enumerate(self._slot_req):
+                if req is None:
+                    continue
+                self._pos[slot] += 1
+                req._exits_all.append(int(exitl[slot]))
+                tick_energy += self._account_token(req, int(nxt[slot]),
+                                                   slot,
+                                                   logprob=float(lp[slot]))
         dt = max(time.monotonic() - t_start, 1e-6)
         self._power_w_ema = (0.9 * self._power_w_ema
                              + 0.1 * (tick_energy / dt))
@@ -1077,100 +1121,110 @@ class Scheduler:
         tick_energy = 0.0
 
         for j in range(K):
-            nxt, exitl, lp, logits = self._run_step()
-            nxt = np.asarray(nxt)
-            exitl = np.asarray(exitl)
-            lp = np.asarray(lp)
-            if need_dl:
-                # fetch only the speculative rows — the full [S, V] plane
-                # never crosses to host
-                dlogits.append(np.asarray(logits[jnp.asarray(idx)]))
-            for slot, req in enumerate(self._slot_req):
-                if req is None:
-                    continue
-                if slot in spec:           # buffer the draft, feed it back
-                    drafts[slot, j] = int(nxt[slot])
-                    self._pos[slot] += 1
-                    self._cur_tok[slot] = nxt[slot]
-                else:                      # non-speculative rows: for real
-                    self._pos[slot] += 1
-                    req._exits_all.append(int(exitl[slot]))
-                    tick_energy += self._account_token(
-                        req, int(nxt[slot]), slot, logprob=float(lp[slot]))
+            with self.obs.span("draft", j=j):
+                nxt, exitl, lp, logits = self._run_step()
+                with self.obs.wait():
+                    nxt = np.asarray(nxt)
+                    exitl = np.asarray(exitl)
+                    lp = np.asarray(lp)
+                if need_dl:
+                    # fetch only the speculative rows — the full [S, V]
+                    # plane never crosses to host
+                    with self.obs.wait():
+                        dlogits.append(np.asarray(logits[jnp.asarray(idx)]))
+                for slot, req in enumerate(self._slot_req):
+                    if req is None:
+                        continue
+                    if slot in spec:       # buffer the draft, feed it back
+                        drafts[slot, j] = int(nxt[slot])
+                        self._pos[slot] += 1
+                        self._cur_tok[slot] = nxt[slot]
+                    else:                  # non-speculative rows: for real
+                        self._pos[slot] += 1
+                        req._exits_all.append(int(exitl[slot]))
+                        tick_energy += self._account_token(
+                            req, int(nxt[slot]), slot,
+                            logprob=float(lp[slot]))
 
         # full-depth verify over [t0, d1..dK] at positions p0..p0+K
-        win = np.zeros((S, K + 1), np.int64)
-        mask = np.zeros(S, bool)
-        pos0 = np.zeros(S, np.int64)
-        for slot in spec:
-            win[slot, 0] = t0[slot]
-            win[slot, 1:] = drafts[slot]
-            mask[slot] = True
-            pos0[slot] = p0[slot]
-        if paged:
+        with self.obs.span("verify", window=K, rows=len(slots)):
+            win = np.zeros((S, K + 1), np.int64)
+            mask = np.zeros(S, bool)
+            pos0 = np.zeros(S, np.int64)
             for slot in spec:
-                self.pool.prepare_append(slot, p0[slot] + K)
-            tables = self.pool.device_tables()
-        else:
-            tables = jnp.zeros((0,), jnp.int32)
-            # clean the draft writes out of the window first: the ring's
-            # inclusive mask + self term would double-count them
-            keep = np.full(S, np.iinfo(np.int32).max, np.int64)
-            for slot in spec:
-                keep[slot] = p0[slot] - 1
-            self.pool.caches = self._rewind(self.pool.caches,
-                                            jnp.asarray(keep, jnp.int32))
-        tlogits, new_caches = self._verify(
-            self.params, jnp.asarray(win, jnp.int32), self.pool.caches,
-            tables, jnp.asarray(pos0, jnp.int32), jnp.asarray(mask))
-        self.pool.caches = new_caches
-        tlogits = np.asarray(tlogits)
-
-        windows = np.asarray([eff[s] for s in slots])
-        n_acc, nxt_tok, _ = accept_drafts(
-            drafts[idx], tlogits[idx], windows=windows,
-            temperature=self._temp[idx], top_k=self._topk[idx],
-            top_p=self._topp[idx], seeds=self._seed[idx], pos0=pos0[idx],
-            accept_threshold=self._pp["accept_threshold"][idx],
-            draft_logits=(np.stack(dlogits, axis=1)
-                          if need_dl and dlogits else None))
-
-        keep = np.full(S, np.iinfo(np.int32).max, np.int64)
-        for i, slot in enumerate(slots):
-            req = spec[slot]
-            a = int(n_acc[i])
-            keep[slot] = p0[slot] + a
-            dl_layer = draft_boundary_layer(self.cfg,
-                                            self._pp["draft_idx"][slot])
-            e = energy.speculative_step_energy(self.cfg, req.ctx_len,
-                                               dl_layer, K, K + 1)
-            per_tok = e["total_j"] / (a + 1)
-            req.spec_verifies += 1
-            req.spec_drafted += int(windows[i])
-            req.spec_accepted += a
-            self._spec_verifies += 1
-            self._spec_drafted += int(windows[i])
-            self._spec_accepted += a
-            emitted = list(drafts[slot, :a]) + [int(nxt_tok[i])]
-            retired = False
-            for tok in emitted:
-                # verified tokens are exact full-depth output
-                req._exits_all.append(self.cfg.num_layers)
-                tick_energy += self._account_token(req, int(tok), slot,
-                                                   energy_j=per_tok)
-                self._spec_emitted += 1
-                if req.status == "done":
-                    retired = True
-                    break
-            if retired:
-                continue                  # slot released; blocks freed
-            self._pos[slot] = p0[slot] + len(emitted)
+                win[slot, 0] = t0[slot]
+                win[slot, 1:] = drafts[slot]
+                mask[slot] = True
+                pos0[slot] = p0[slot]
             if paged:
-                self.pool.rollback_append(slot,
-                                          keep_tokens=p0[slot] + a + 1)
-        if not paged:
-            self.pool.caches = self._rewind(self.pool.caches,
-                                            jnp.asarray(keep, jnp.int32))
+                for slot in spec:
+                    self.pool.prepare_append(slot, p0[slot] + K)
+                tables = self.pool.device_tables()
+            else:
+                tables = jnp.zeros((0,), jnp.int32)
+                # clean the draft writes out of the window first: the
+                # ring's inclusive mask + self term would double-count them
+                keep = np.full(S, np.iinfo(np.int32).max, np.int64)
+                for slot in spec:
+                    keep[slot] = p0[slot] - 1
+                self.pool.caches = self._rewind(self.pool.caches,
+                                                jnp.asarray(keep, jnp.int32))
+                self.obs.count("dispatch")
+            tlogits, new_caches = self._verify(
+                self.params, jnp.asarray(win, jnp.int32), self.pool.caches,
+                tables, jnp.asarray(pos0, jnp.int32), jnp.asarray(mask))
+            self.obs.count("dispatch")
+            self.pool.caches = new_caches
+            with self.obs.wait():
+                tlogits = np.asarray(tlogits)
+
+            windows = np.asarray([eff[s] for s in slots])
+            n_acc, nxt_tok, _ = accept_drafts(
+                drafts[idx], tlogits[idx], windows=windows,
+                temperature=self._temp[idx], top_k=self._topk[idx],
+                top_p=self._topp[idx], seeds=self._seed[idx], pos0=pos0[idx],
+                accept_threshold=self._pp["accept_threshold"][idx],
+                draft_logits=(np.stack(dlogits, axis=1)
+                              if need_dl and dlogits else None))
+
+        with self.obs.span("bookkeeping"):
+            keep = np.full(S, np.iinfo(np.int32).max, np.int64)
+            for i, slot in enumerate(slots):
+                req = spec[slot]
+                a = int(n_acc[i])
+                keep[slot] = p0[slot] + a
+                dl_layer = draft_boundary_layer(self.cfg,
+                                                self._pp["draft_idx"][slot])
+                e = energy.speculative_step_energy(self.cfg, req.ctx_len,
+                                                   dl_layer, K, K + 1)
+                per_tok = e["total_j"] / (a + 1)
+                req.spec_verifies += 1
+                req.spec_drafted += int(windows[i])
+                req.spec_accepted += a
+                self._spec_verifies += 1
+                self._spec_drafted += int(windows[i])
+                self._spec_accepted += a
+                emitted = list(drafts[slot, :a]) + [int(nxt_tok[i])]
+                retired = False
+                for tok in emitted:
+                    # verified tokens are exact full-depth output
+                    req._exits_all.append(self.cfg.num_layers)
+                    tick_energy += self._account_token(req, int(tok), slot,
+                                                       energy_j=per_tok)
+                    self._spec_emitted += 1
+                    if req.status == "done":
+                        retired = True
+                        break
+                if retired:
+                    continue              # slot released; blocks freed
+                self._pos[slot] = p0[slot] + len(emitted)
+                if paged:
+                    self.pool.rollback_append(slot,
+                                              keep_tokens=p0[slot] + a + 1)
+            if not paged:
+                self.pool.caches = self._rewind(self.pool.caches,
+                                                jnp.asarray(keep, jnp.int32))
+                self.obs.count("dispatch")
         dt = max(time.monotonic() - t_start, 1e-6)
         self._power_w_ema = (0.9 * self._power_w_ema
                              + 0.1 * (tick_energy / dt))
@@ -1231,7 +1285,30 @@ class Scheduler:
         idx = int(np.clip(exit_layer, 1, self.cfg.num_layers)) - 1
         return float(tab[idx])
 
+    def _obs_req_begin(self, req: Request, stage: str, **args) -> None:
+        """Advance a request's lifecycle span (``req/queued`` →
+        ``req/prefill`` → ``req/decode``): close the open stage, open the
+        next. Tracked on the request so a drain can close whatever stage
+        was open when the loop stopped."""
+        if req._obs_stage is not None:
+            self.obs.async_end(f"req/{req._obs_stage}", req.req_id)
+        req._obs_stage = stage
+        self.obs.async_begin(f"req/{stage}", req.req_id, **args)
+
+    def _obs_req_end(self, req: Request, **args) -> None:
+        if req._obs_stage is not None:
+            self.obs.async_end(f"req/{req._obs_stage}", req.req_id, **args)
+            req._obs_stage = None
+
     def _retire(self, req: Request, slot: int, reason: str) -> None:
+        with self.obs.span("retire", req_id=req.req_id, reason=reason):
+            self._retire_inner(req, slot, reason)
+        self._obs_req_end(req, tokens=len(req.tokens),
+                          energy_j=req.energy_j,
+                          prefill_energy_j=req.prefill_energy_j,
+                          finish_reason=reason)
+
+    def _retire_inner(self, req: Request, slot: int, reason: str) -> None:
         el = np.asarray(req._exits_all[:max(len(req.tokens), 1)], np.int32)
         req.exit_layers = el.tolist()
         req.metrics = request_metrics(self.cfg, el, req.ctx_len)
@@ -1286,17 +1363,39 @@ class Scheduler:
             req.status = "done"
             req.finish_reason = reason
             req.finished_at = time.monotonic()
+            self._obs_req_end(req, finish_reason=reason)
             req._stream.put(None)
             req._done.set()
-        for slot, req in enumerate(self._slot_req):
-            if req is not None:
-                self._retire(req, slot, reason)
+        # retire spans are tick-scoped phases; drain-time retirement gets
+        # its own top-level tick so the trace stays well-nested
+        with self.obs.span("drain", cat="tick", reason=reason):
+            for slot, req in enumerate(self._slot_req):
+                if req is not None:
+                    self._retire(req, slot, reason)
 
     # -- introspection ------------------------------------------------------
     def reset_peak_stats(self) -> None:
         """Reset high-water / cumulative admission stats — call between a
-        warmup phase and a timed run so ``stats()`` covers only the run."""
+        warmup phase and a timed run so ``stats()`` covers only the run.
+
+        The closed window folds into the ``lifetime`` sub-dict of
+        ``stats()``; the throughput window (``_t0``, fleet token / energy
+        cumulatives, latency samples) restarts so ``throughput_tok_s``
+        and the fleet counters describe the current window only."""
         with self._lock:
+            now = time.monotonic()
+            lt = self._lifetime
+            lt["completed_requests"] += self._completed
+            lt["fleet_tokens"] += self._fleet_tokens
+            lt["fleet_energy_j"] += self._fleet_energy_j
+            lt["fleet_prefill_energy_j"] += self._fleet_prefill_j
+            lt["uptime_s"] += max(now - self._t0, 0.0)
+            self._t0 = now
+            self._completed = 0
+            self._fleet_tokens = 0
+            self._fleet_energy_j = 0.0
+            self._fleet_prefill_j = 0.0
+            self._latencies.clear()
             self._peak_active = self.pool.n_used
             self._blocked_admissions = 0
             self._deferred_admissions = 0
@@ -1308,7 +1407,9 @@ class Scheduler:
                 self.pool.reset_stats()
 
     def stats(self) -> dict:
+        ctrs = self.obs.counters
         with self._lock:
+            lt = self._lifetime
             pct = latency_percentiles(self._latencies)
             up = max(time.monotonic() - self._t0, 1e-9)
             kv = {"kv_layout": self.kv_layout}
@@ -1358,5 +1459,18 @@ class Scheduler:
                 "step_compiles": self.step_compiles,
                 "controllers": sorted(self.allowed_kinds),
                 "uptime_s": up,
+                "tracing": self.obs.enabled,
+                "dispatches": ctrs.get("dispatch", 0),
+                "sync_points": ctrs.get("sync_points", 0),
+                "lifetime": {
+                    "completed_requests": (lt["completed_requests"]
+                                           + self._completed),
+                    "fleet_tokens": lt["fleet_tokens"] + self._fleet_tokens,
+                    "fleet_energy_j": (lt["fleet_energy_j"]
+                                       + self._fleet_energy_j),
+                    "fleet_prefill_energy_j": (lt["fleet_prefill_energy_j"]
+                                               + self._fleet_prefill_j),
+                    "uptime_s": lt["uptime_s"] + up,
+                },
                 **spec,
             }

@@ -32,8 +32,15 @@ same fixed-shape batch as everyone else's.
     verified full-depth — exact greedy output, GET /queue reports
     ``acceptance_rate`` and ``tokens_per_verify``).
 
-  GET /queue -> scheduler stats (queue depth, slot occupancy, fleet
-                J/token, throughput, latency percentiles, step_compiles)
+  GET /queue   -> scheduler stats (queue depth, slot occupancy, fleet
+                  J/token, throughput, latency percentiles, step_compiles)
+  GET /metrics -> the same stats + tick-phase histograms as Prometheus
+                  text exposition (scrape target)
+  GET /trace   -> Chrome trace-event JSON of spans collected since the
+                  last GET /trace (open in Perfetto / chrome://tracing)
+
+  Unknown GET paths return 404. ``--no-trace`` disables span collection
+  (the no-op tracer path); /metrics then serves stats gauges only.
 
   PYTHONPATH=src python -m repro.serving.server --port 8799   # mini demo
 """
@@ -45,6 +52,8 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.api import GenerationRequest, PolicySpec, SamplingParams
 from repro.core import exit_policy
+from repro.obs import (PROM_CONTENT_TYPE, Tracer, render_prometheus,
+                       to_chrome_trace)
 from repro.serving.metrics import aggregate_metrics
 from repro.serving.scheduler import Scheduler, SchedulerQueueFull
 
@@ -231,24 +240,48 @@ class Handler(BaseHTTPRequestHandler):
         except Exception as e:  # noqa: BLE001
             self._send(500, {"error": repr(e)})
 
+    def _send_text(self, code: int, text: str, content_type: str):
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def do_GET(self):
-        if self.path.rstrip("/") == "/queue":
+        path = self.path.split("?")[0].rstrip("/")
+        if path == "/queue":
             self._send(200, _State.scheduler.stats())
-            return
-        self._send(200, {"status": "ok", "model": _State.cfg.name,
-                         "num_layers": _State.cfg.num_layers,
-                         "scheduler": {
-                             "max_slots": _State.scheduler.pool.max_slots,
-                             "kv_layout": _State.scheduler.kv_layout,
-                             "controllers":
-                                 sorted(_State.scheduler.allowed_kinds)}})
+        elif path == "/metrics":
+            sched = _State.scheduler
+            tracer = sched.obs if sched.obs.enabled else None
+            self._send_text(200, render_prometheus(sched.stats(), tracer),
+                            PROM_CONTENT_TYPE)
+        elif path == "/trace":
+            # drains the tracer: each GET returns the events collected
+            # since the previous one (counters/histograms stay cumulative)
+            events = _State.scheduler.obs.drain()
+            self._send(200, to_chrome_trace(events))
+        elif path == "":
+            self._send(200, {"status": "ok", "model": _State.cfg.name,
+                             "num_layers": _State.cfg.num_layers,
+                             "scheduler": {
+                                 "max_slots":
+                                     _State.scheduler.pool.max_slots,
+                                 "kv_layout": _State.scheduler.kv_layout,
+                                 "tracing": _State.scheduler.obs.enabled,
+                                 "controllers":
+                                     sorted(_State.scheduler.allowed_kinds)}})
+        else:
+            self._send(404, {"error": "unknown path"})
 
 
 def setup_mini(train_steps: int = 60, rl: bool = True, *,
                max_slots: int = 8, max_len: int = 320,
                power_budget_w: float = None, kv_layout: str = "paged",
                block_size: int = 16, num_blocks: int = None,
-               spec_window: int = 4, prefill_chunk: int = 32):
+               spec_window: int = 4, prefill_chunk: int = 32,
+               trace: bool = True):
     """Build a mini model + agent and start the scheduler (CPU demo).
 
     Default KV layout is **paged**: admission is gated on free cache
@@ -290,7 +323,8 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
         prefill_chunk=prefill_chunk,
         power_budget_w=power_budget_w, kv_layout=kv_layout,
         block_size=block_size, num_blocks=num_blocks,
-        spec_window=spec_window).start()
+        spec_window=spec_window,
+        tracer=Tracer(enabled=trace)).start()
     return cfg, ds
 
 
@@ -316,15 +350,19 @@ def main():
                     help="prompt tokens ingested per decode tick (one "
                          "compiled prefill shape; smaller = fairer "
                          "interleaving, larger = lower TTFT per prompt)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable tick-phase tracing (GET /trace returns "
+                         "an empty trace; /metrics loses phase histograms)")
     args = ap.parse_args()
     print("[server] preparing mini model ...")
     setup_mini(args.train_steps, rl=not args.no_rl, max_slots=args.slots,
                max_len=args.max_len, power_budget_w=args.power_budget_w,
                kv_layout=args.kv_layout, block_size=args.block_size,
                num_blocks=args.num_blocks, spec_window=args.spec_window,
-               prefill_chunk=args.prefill_chunk)
+               prefill_chunk=args.prefill_chunk, trace=not args.no_trace)
     srv = ThreadingHTTPServer(("127.0.0.1", args.port), Handler)
-    print(f"[server] listening on :{args.port} — POST /generate, GET /queue")
+    print(f"[server] listening on :{args.port} — POST /generate, "
+          f"GET /queue /metrics /trace")
     try:
         srv.serve_forever()
     finally:

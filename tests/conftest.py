@@ -1,5 +1,22 @@
 """Shared fixtures. NOTE: no xla_force_host_platform_device_count here —
 tests run single-device; only launch/dryrun.py forces 512 devices."""
+import os
+
+import jaxlib
+
+# jaxlib 0.4.x's new XLA:CPU thunk runtime segfaults inside
+# backend_compile partway through this suite (deterministically, once
+# enough distinct programs have been compiled in one process — the crash
+# reproduces at HEAD with no working-tree changes). The legacy runtime
+# is stable and ~1.5x faster here. Must be set before the backend
+# initializes; version-gated because the flag will not outlive the
+# legacy runtime, and unknown XLA_FLAGS are a hard error.
+if jaxlib.__version__.startswith("0.4."):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_cpu_use_thunk_runtime=false").strip()
+
 import jax
 import pytest
 

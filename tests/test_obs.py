@@ -1,0 +1,385 @@
+"""Observability layer: tracer no-op fast path and overhead bound, span
+nesting/bracketing under a deterministic clock, device-wait vs host
+attribution, Chrome-trace structural validation, Prometheus exposition,
+and a real traced serving run (the CI fast-job gate: every B has an E,
+phases nest under ticks, /metrics families present)."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (NULL_TRACER, PROM_CONTENT_TYPE, Tracer,
+                       TraceValidationError, make_step_clock,
+                       render_prometheus, summarize_spans, to_chrome_trace,
+                       validate_chrome_trace, validate_exposition)
+
+
+# ---------------------------------------------------------------------------
+# disabled tracer: a no-op, and a cheap one
+# ---------------------------------------------------------------------------
+def test_disabled_tracer_retains_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("tick", cat="tick"):
+        with tr.span("decode_step"):
+            with tr.wait():
+                pass
+    tr.count("dispatch")
+    tr.instant("mark")
+    tr.async_begin("req/queued", 1)
+    tr.async_end("req/queued", 1)
+    assert tr.drain() == []
+    assert tr.counters == {}
+    assert tr.histograms() == {}
+    assert tr.phase_summary() == {}
+
+
+def test_disabled_tracer_shares_one_null_context():
+    tr = Tracer(enabled=False)
+    assert tr.span("a") is tr.span("b") is tr.wait()   # no allocation
+    assert NULL_TRACER.span("x") is tr.span("y")       # module-wide
+
+
+def test_disabled_tracer_never_reads_the_clock():
+    calls = {"n": 0}
+
+    def clock():
+        calls["n"] += 1
+        return 0.0
+
+    tr = Tracer(enabled=False, clock=clock)
+    for _ in range(100):
+        with tr.span("tick"):
+            tr.count("x")
+    assert calls["n"] == 0
+
+
+def test_disabled_tracer_overhead_bounded():
+    """The scheduler calls span()/wait()/count() on every tick; disabled
+    tracing must stay in no-op territory (~µs/op, generously bounded for
+    shared CI runners)."""
+    tr = Tracer(enabled=False)
+    t0 = time.monotonic()
+    for _ in range(100_000):
+        with tr.span("decode_step"):
+            tr.count("dispatch")
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_wait_context_always_runs_the_body():
+    """wait() only times; the guarded fetch must execute either way."""
+    ran = []
+    with Tracer(enabled=False).wait():
+        ran.append("off")
+    with Tracer(enabled=True).wait():
+        ran.append("on")
+    assert ran == ["off", "on"]
+
+
+# ---------------------------------------------------------------------------
+# span structure under a deterministic clock
+# ---------------------------------------------------------------------------
+def _emit_two_ticks(tr):
+    with tr.span("tick", cat="tick"):
+        with tr.span("admit"):
+            pass
+        with tr.span("decode_step"):
+            with tr.wait():
+                pass
+        with tr.span("sample_host"):
+            pass
+    with tr.span("tick", cat="tick"):
+        with tr.span("decode_step", slot=1):
+            pass
+
+
+def test_span_nesting_and_ordering_deterministic():
+    def trace_once():
+        tr = Tracer(clock=make_step_clock())
+        _emit_two_ticks(tr)
+        return tr.drain()
+
+    a, b = trace_once(), trace_once()
+    assert json.dumps(a) == json.dumps(b)      # byte-identical replays
+    summ = validate_chrome_trace(a)
+    assert summ["spans"] == 6
+    assert summ["span_names"] == ["admit", "decode_step", "sample_host",
+                                  "tick"]
+    # B/E bracket order is the call order
+    seq = [(e["ph"], e["name"]) for e in a]
+    assert seq[:4] == [("B", "tick"), ("B", "admit"), ("E", "admit"),
+                       ("B", "decode_step")]
+    # microsecond timestamps strictly increase under the step clock
+    ts = [e["ts"] for e in a]
+    assert ts == sorted(ts) and len(set(ts)) == len(ts)
+
+
+def test_wait_splits_device_and_host_time():
+    clock = make_step_clock(step_s=1.0)        # 1 simulated second per read
+    tr = Tracer(clock=clock)
+    with tr.span("decode_step"):
+        with tr.wait():                        # 1 clock read inside wait
+            pass
+    (end,) = [e for e in tr.drain() if e["ph"] == "E"]
+    dur = end["args"]["device_wait_s"] + end["args"]["host_s"]
+    assert end["args"]["device_wait_s"] == pytest.approx(1.0)  # one wait
+    assert dur == pytest.approx(3.0)           # span B..E spans 3 reads
+    assert end["args"]["host_s"] == pytest.approx(2.0)
+    assert tr.counters["sync_points"] == 1
+    h = tr.histograms()["decode_step"]
+    assert h.count == 1
+    assert h.device_wait_sum == pytest.approx(1.0)
+
+
+def test_wait_attributes_to_innermost_open_span():
+    tr = Tracer(clock=make_step_clock())
+    with tr.span("tick", cat="tick"):
+        with tr.span("sample_host"):
+            with tr.wait():
+                pass
+    ends = {e["name"]: e["args"] for e in tr.drain() if e["ph"] == "E"}
+    assert ends["sample_host"]["device_wait_s"] > 0
+    assert ends["tick"]["device_wait_s"] == 0  # not double-counted
+
+
+def test_counters_and_event_cap():
+    tr = Tracer(clock=make_step_clock(), max_events=4)
+    for _ in range(5):
+        tr.count("dispatch")
+        with tr.span("t", cat="tick"):
+            pass
+    assert tr.counters["dispatch"] == 5        # counters are uncapped
+    assert len(tr.drain()) == 4                # events stop at the cap
+    assert tr.dropped_events == 6
+
+
+def test_drain_clears_events_keeps_aggregates():
+    tr = Tracer(clock=make_step_clock())
+    with tr.span("tick", cat="tick"):
+        pass
+    assert len(tr.drain()) == 2
+    assert tr.drain() == []                    # windowed
+    assert tr.histograms()["tick"].count == 1  # cumulative survives
+    summary = tr.phase_summary()
+    assert summary["tick"]["count"] == 1
+    assert summary["tick"]["total_s"] > 0
+
+
+def test_summarize_spans_matches_phase_summary():
+    tr = Tracer(clock=make_step_clock())
+    _emit_two_ticks(tr)
+    windowed = summarize_spans(tr.drain())
+    cumulative = tr.phase_summary()
+    assert set(windowed) == set(cumulative)
+    for name in windowed:
+        assert windowed[name]["count"] == cumulative[name]["count"]
+        assert windowed[name]["total_s"] == pytest.approx(
+            cumulative[name]["total_s"])
+        assert windowed[name]["device_wait_s"] == pytest.approx(
+            cumulative[name]["device_wait_s"])
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace validation: what it accepts and what it must catch
+# ---------------------------------------------------------------------------
+def test_chrome_trace_wrapping_and_metadata():
+    tr = Tracer(clock=make_step_clock())
+    _emit_two_ticks(tr)
+    obj = to_chrome_trace(tr.drain(), process_name="test-proc")
+    assert obj["displayTimeUnit"] == "ms"
+    meta = obj["traceEvents"][0]
+    assert meta["ph"] == "M" and meta["args"]["name"] == "test-proc"
+    assert all("pid" in e for e in obj["traceEvents"])
+    validate_chrome_trace(obj)                 # dict form accepted too
+
+
+def test_validation_catches_unclosed_span():
+    tr = Tracer(clock=make_step_clock())
+    ctx = tr.span("tick", cat="tick")
+    ctx.__enter__()                            # never exited
+    with pytest.raises(TraceValidationError, match="unclosed"):
+        validate_chrome_trace(tr.drain())
+
+
+def test_validation_catches_mismatched_end():
+    events = [
+        {"ph": "B", "ts": 1, "tid": 0, "name": "a", "cat": "tick"},
+        {"ph": "E", "ts": 2, "tid": 0, "name": "b", "cat": "tick"},
+    ]
+    with pytest.raises(TraceValidationError, match="does not match"):
+        validate_chrome_trace(events)
+    # a mid-window mismatch is corruption even in partial mode
+    with pytest.raises(TraceValidationError, match="does not match"):
+        validate_chrome_trace(events, allow_partial=True)
+
+
+def test_validation_catches_phase_outside_tick():
+    events = [
+        {"ph": "B", "ts": 1, "tid": 0, "name": "decode_step",
+         "cat": "phase"},
+        {"ph": "E", "ts": 2, "tid": 0, "name": "decode_step",
+         "cat": "phase"},
+    ]
+    with pytest.raises(TraceValidationError, match="outside a tick"):
+        validate_chrome_trace(events)
+    validate_chrome_trace(events, require_tick_nesting=False)
+
+
+def test_validation_catches_backwards_timestamps():
+    events = [
+        {"ph": "B", "ts": 5, "tid": 0, "name": "t", "cat": "tick"},
+        {"ph": "E", "ts": 4, "tid": 0, "name": "t", "cat": "tick"},
+    ]
+    with pytest.raises(TraceValidationError, match="backwards"):
+        validate_chrome_trace(events)
+
+
+def test_validation_partial_mode_tolerates_window_cut():
+    """A drained window of a live scheduler may cut a tick in half on
+    both edges; partial mode accepts the edges, full mode refuses."""
+    tr = Tracer(clock=make_step_clock())
+    _emit_two_ticks(tr)
+    events = tr.drain()
+    cut = events[3:-1]                         # drop B(tick)..B(admit)+last E
+    with pytest.raises(TraceValidationError):
+        validate_chrome_trace(cut)
+    summ = validate_chrome_trace(cut, allow_partial=True)
+    assert summ["partial_ends"] > 0 or summ["partial_begins"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+def test_render_prometheus_scalars_and_lifetime():
+    stats = {"queue_depth": 3, "throughput_tok_s": 118.4, "tracing": True,
+             "kv_layout": "paged", "controllers": ["none"],
+             "lifetime": {"fleet_tokens": 42, "uptime_s": 1.5}}
+    text = render_prometheus(stats)
+    assert "repro_queue_depth 3\n" in text
+    assert "repro_throughput_tok_s 118.4\n" in text
+    assert "repro_tracing 1\n" in text                  # bool -> 0/1
+    assert "repro_lifetime_fleet_tokens 42\n" in text
+    assert "kv_layout" not in text                      # strings skipped
+    assert "controllers" not in text                    # lists skipped
+    validate_exposition(text, {"repro_queue_depth",
+                               "repro_lifetime_fleet_tokens"})
+
+
+def test_render_prometheus_histograms_and_counters():
+    tr = Tracer(clock=make_step_clock())
+    _emit_two_ticks(tr)
+    tr.count("dispatch", 7)
+    text = render_prometheus({}, tr)
+    assert '# TYPE repro_phase_seconds histogram' in text
+    assert 'repro_phase_seconds_bucket{phase="decode_step",le="+Inf"} 2' \
+        in text
+    assert 'repro_phase_seconds_count{phase="decode_step"} 2' in text
+    assert 'repro_events_total{event="dispatch"} 7' in text
+    assert 'repro_events_total{event="sync_points"} 1' in text
+    summ = validate_exposition(text, {"repro_phase_seconds",
+                                      "repro_events_total"})
+    assert summ["lines"] > 10
+    assert "text/plain" in PROM_CONTENT_TYPE
+
+
+def test_validate_exposition_rejects_garbage():
+    with pytest.raises(ValueError, match="bad exposition line"):
+        validate_exposition("this is not a metric line")
+    with pytest.raises(ValueError, match="missing"):
+        validate_exposition("repro_x 1", {"repro_absent_family"})
+
+
+# ---------------------------------------------------------------------------
+# the real thing: a traced serving run (also the CI fast-job gate)
+# ---------------------------------------------------------------------------
+def test_traced_scheduler_run_validates_end_to_end(mini_cfg, mini_params):
+    from repro.serving import Scheduler
+    tr = Tracer()
+    s = Scheduler(mini_params, mini_cfg, controller_kind="fixed",
+                  fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                  max_slots=2, max_len=64, max_new=6,
+                  prefill_chunk=16, tracer=tr).start()
+    rng = np.random.default_rng(0)
+    reqs = [s.submit(rng.integers(4, mini_cfg.vocab_size, 20).tolist(),
+                     max_new=6) for _ in range(3)]
+    for r in reqs:
+        r.result(timeout=120.0)
+    st = s.stats()
+    s.stop()                                   # drain closes every span
+    events = tr.drain()
+    summ = validate_chrome_trace(events)       # strict: full run captured
+    assert {"tick", "admit", "prefill_chunk", "decode_step", "sample_host",
+            "bookkeeping", "retire", "drain"} <= set(summ["span_names"])
+    assert summ["partial_begins"] == 0 and summ["partial_ends"] == 0
+    # dispatch / sync accounting reached stats()
+    assert st["tracing"] is True
+    assert st["dispatches"] > 0
+    assert st["sync_points"] > 0
+    assert tr.counters["dispatch"] == st["dispatches"]
+    # per-request lifecycle: queued -> prefill -> decode, begin/end paired
+    async_evs = [e for e in events if e["ph"] in ("b", "e")]
+    for req in reqs:
+        mine = [e for e in async_evs if e["id"] == req.req_id]
+        names = [e["name"] for e in mine]
+        assert names == ["req/queued", "req/queued", "req/prefill",
+                         "req/prefill", "req/decode", "req/decode"]
+        phs = [e["ph"] for e in mine]
+        assert phs == ["b", "e", "b", "e", "b", "e"]
+        final = mine[-1]["args"]
+        assert final["tokens"] == len(req.tokens)
+        assert final["energy_j"] == pytest.approx(req.energy_j)
+        assert final["finish_reason"] == req.finish_reason
+    # phase device-wait never exceeds phase wall time
+    for name, ph in tr.phase_summary().items():
+        assert ph["device_wait_s"] <= ph["total_s"] + 1e-9, name
+    # the exposition the server's /metrics would serve
+    validate_exposition(render_prometheus(st, tr),
+                        {"repro_phase_seconds", "repro_events_total",
+                         "repro_dispatches", "repro_sync_points",
+                         "repro_lifetime_fleet_tokens"})
+
+
+def test_traced_speculative_run_has_draft_and_verify_spans(mini_cfg,
+                                                           mini_params):
+    from repro.core.exit_points import num_exits
+    from repro.api import PolicySpec
+    from repro.serving import Scheduler
+    tr = Tracer()
+    policy = PolicySpec("speculative",
+                        {"draft_idx": num_exits(mini_cfg) - 1, "window": 3})
+    s = Scheduler(mini_params, mini_cfg, default_policy=policy,
+                  allowed_kinds=("none", "speculative"),
+                  max_slots=2, max_len=64, max_new=6, spec_window=3,
+                  kv_layout="paged", block_size=8, tracer=tr).start()
+    rng = np.random.default_rng(1)
+    reqs = [s.submit(rng.integers(4, mini_cfg.vocab_size, 16).tolist(),
+                     max_new=6) for _ in range(2)]
+    for r in reqs:
+        r.result(timeout=180.0)
+    s.stop()
+    summ = validate_chrome_trace(tr.drain())
+    assert {"tick", "draft", "verify", "bookkeeping",
+            "retire"} <= set(summ["span_names"])
+
+
+def test_virtual_clock_admission_trace_is_deterministic(mini_cfg):
+    """run_admission_trace(tracer=) with a step clock: the drained span
+    log is a pure function of the workload — byte-identical replays —
+    so trace *structure* is CI-assertable without wall-clock races."""
+    from benchmarks.serving_load import run_admission_trace
+
+    def traced():
+        tr = Tracer(clock=make_step_clock())
+        out = run_admission_trace(mini_cfg, slots=3, max_len=68,
+                                  block_size=8, n=12, seed=0, tracer=tr)
+        return out, tr.drain()
+
+    out_a, ev_a = traced()
+    out_b, ev_b = traced()
+    assert json.dumps(ev_a) == json.dumps(ev_b)
+    assert out_a == out_b
+    summ = validate_chrome_trace(ev_a)
+    assert summ["span_names"] == ["admit", "decode_step", "retire", "tick"]
+    n_retires = sum(1 for e in ev_a
+                    if e["ph"] == "B" and e["name"] == "retire")
+    assert n_retires == 2 * 12                 # both layouts, every job

@@ -260,10 +260,48 @@ def test_stats_shape(sched):
     for key in ("queue_depth", "active_slots", "free_slots", "max_slots",
                 "completed_requests", "fleet_tokens", "fleet_j_per_token",
                 "throughput_tok_s", "latency_p50_s", "latency_p95_s",
-                "exit_layer_ema", "controllers", "step_compiles"):
+                "exit_layer_ema", "controllers", "step_compiles",
+                "tracing", "dispatches", "sync_points", "lifetime"):
         assert key in st
     assert st["completed_requests"] >= 1
     assert st["fleet_j_per_token"] > 0
+
+
+def test_reset_peak_stats_resets_throughput_window(mini_cfg, mini_params):
+    """reset_peak_stats() is documented as scoping stats() to the timed
+    run — but it used to leave the throughput window (_t0, fleet token /
+    energy cumulatives, latencies) running since construction, so
+    ``throughput_tok_s`` mixed warmup into every 'timed' read. The window
+    must restart; the cumulative view moves to the ``lifetime`` sub-dict."""
+    s = Scheduler(mini_params, mini_cfg, allowed_kinds=("none",),
+                  max_slots=2, max_len=64, max_new=4).start()
+    try:
+        s.serve_batch(_prompts(mini_cfg.vocab_size, [10, 12]), max_new=4)
+        warm = s.stats()
+        assert warm["completed_requests"] == 2
+        assert warm["fleet_tokens"] > 0
+        s.reset_peak_stats()
+        st = s.stats()
+        assert st["completed_requests"] == 0
+        assert st["fleet_tokens"] == 0
+        assert st["fleet_energy_j"] == 0.0
+        assert st["fleet_prefill_energy_j"] == 0.0
+        assert st["latency_p50_s"] is None          # samples cleared
+        assert st["uptime_s"] < warm["uptime_s"]    # window restarted
+        # the cumulative view survives in lifetime
+        assert st["lifetime"]["completed_requests"] == 2
+        assert st["lifetime"]["fleet_tokens"] == warm["fleet_tokens"]
+        assert st["lifetime"]["uptime_s"] >= warm["uptime_s"] - 1e-3
+        # a fresh window counts only its own traffic, lifetime keeps all
+        s.serve_batch(_prompts(mini_cfg.vocab_size, [10], seed=3),
+                      max_new=4)
+        st2 = s.stats()
+        assert st2["completed_requests"] == 1
+        assert st2["lifetime"]["completed_requests"] == 3
+        assert (st2["lifetime"]["fleet_tokens"]
+                == warm["fleet_tokens"] + st2["fleet_tokens"])
+    finally:
+        s.stop()
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ from http.server import ThreadingHTTPServer
 
 import pytest
 
+from repro.obs import PROM_CONTENT_TYPE, Tracer, validate_exposition
 from repro.serving import Scheduler
 from repro.serving.server import Handler, _State
 
@@ -24,7 +25,7 @@ def server(mini_cfg, mini_params, mini_dataset):
         allowed_kinds=("none", "fixed", "confidence"),
         tokenizer=mini_dataset.tokenizer,
         max_slots=2, max_len=96, max_new=8,
-        prefill_chunk=16).start()
+        prefill_chunk=16, tracer=Tracer()).start()
     srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
     t = threading.Thread(target=srv.serve_forever, daemon=True)
     t.start()
@@ -162,3 +163,49 @@ def test_truncated_prompt_surfaces_in_response(server):
     out = _gen(server, PROMPT * 80, max_new_tokens=2)
     assert out["truncated"] is True
     assert _gen(server, PROMPT, max_new_tokens=2)["truncated"] is False
+
+
+def test_unknown_get_path_is_404(server):
+    """The seed server answered 200 {"status": "ok"} for ANY GET path —
+    typos like /metricz read as healthy scrapes. Unknown paths are 404."""
+    for path in ("/metricz", "/nope", "/queue/extra", "/generate"):
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"{server}{path}", timeout=30)
+        assert e.value.code == 404, path
+    # the known roots still answer
+    with urllib.request.urlopen(f"{server}/", timeout=30) as r:
+        root = json.loads(r.read())
+    assert root["status"] == "ok"
+    assert root["scheduler"]["tracing"] is True
+
+
+def test_metrics_prometheus_exposition(server):
+    _gen(server, PROMPT, max_new_tokens=3)     # ensure traffic to report
+    with urllib.request.urlopen(f"{server}/metrics", timeout=30) as r:
+        assert r.headers["Content-Type"] == PROM_CONTENT_TYPE
+        text = r.read().decode()
+    summ = validate_exposition(text, {
+        "repro_queue_depth", "repro_completed_requests",
+        "repro_throughput_tok_s", "repro_dispatches", "repro_sync_points",
+        "repro_lifetime_fleet_tokens", "repro_phase_seconds",
+        "repro_events_total"})
+    assert summ["lines"] > 10
+    # phase histograms carry the per-phase label
+    assert 'repro_phase_seconds_bucket{phase="decode_step",le=' in text
+    assert 'repro_events_total{event="dispatch"}' in text
+
+
+def test_trace_returns_and_drains_chrome_trace(server):
+    from repro.obs import validate_chrome_trace
+    _gen(server, PROMPT, max_new_tokens=3)     # ensure spans to drain
+    with urllib.request.urlopen(f"{server}/trace", timeout=30) as r:
+        trace = json.loads(r.read())
+    assert trace["traceEvents"], "first GET /trace returned no events"
+    # a live tick may straddle the drain boundary; structure still holds
+    summ = validate_chrome_trace(trace, allow_partial=True)
+    assert {"tick", "decode_step"} <= set(summ["span_names"])
+    # drain semantics: an immediate second GET only has events from the
+    # gap between the two requests (possibly none beyond metadata)
+    with urllib.request.urlopen(f"{server}/trace", timeout=30) as r:
+        again = json.loads(r.read())
+    assert len(again["traceEvents"]) < len(trace["traceEvents"])
