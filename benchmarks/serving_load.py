@@ -44,6 +44,17 @@ and XLA compile counts across many distinct prompt lengths for chunked
 vs bucketed vs per-length prefill — chunked compiles exactly ONE shape;
 CI gates on ``chunked_compiles <= bucketed_compiles``.
 
+A fleet pair of phases covers data-parallel replica serving
+(``repro.serving.fleet``): ``run_fleet_trace`` replays one workload
+through N replicas' slot bookkeeping behind each placement policy on a
+virtual clock — the route/admit/retire event log (with replica
+assignments) and per-replica modeled energy are deterministic, so CI
+hard-gates both trace equality and ``energy_beats_rr`` (the
+energy-headroom policy ends with a lower max-replica energy share than
+round-robin). ``run_fleet_compare`` serves the wall-clock workload
+through 1 vs N replicas at an equal aggregate KV budget, per placement
+policy (throughput / p95 / J-per-token / energy shares).
+
 A sixth phase (``run_phase_breakdown``) serves the workload through
 traced schedulers (contiguous / paged / speculative) and reports where
 each tick's time goes — per tick phase, count / total / device-wait vs
@@ -103,10 +114,19 @@ class Job:
 
 
 def make_workload(n: int, rate_hz: float, vocab: int,
-                  seed: int = 0) -> list[Job]:
+                  seed: int = 0, class_mix: bool = False) -> list[Job]:
     """Poisson arrivals; half the prompts start from one of ``N_PREFIXES``
     shared prefixes (block-aligned system prompts — the prefix cache's
-    bread and butter), the other half are fully random."""
+    bread and butter), the other half are fully random.
+
+    ``class_mix=True`` makes the cost structure deterministic instead of
+    i.i.d.: arrivals alternate an *interactive* class (shortest prompt,
+    smallest ``max_new``) with a *batch* class (longest prompt, largest
+    ``max_new``, shared prefixes) — the request-class heterogeneity the
+    fleet phases route on. Cost-blind round-robin aliases the heavy
+    class onto the same replicas (period-2 arrivals, cost ~5x); an
+    i.i.d. mix hides that failure mode behind the law of large numbers.
+    """
     rng = np.random.default_rng(seed)
     prefixes = [rng.integers(4, vocab, PREFIX_LEN).tolist()
                 for _ in range(N_PREFIXES)]
@@ -114,14 +134,18 @@ def make_workload(n: int, rate_hz: float, vocab: int,
     jobs = []
     for i in range(n):
         t += float(rng.exponential(1.0 / rate_hz))
-        plen = int(rng.choice(PROMPT_LENS))
+        if class_mix:
+            plen = PROMPT_LENS[-1] if i % 2 else PROMPT_LENS[0]
+            max_new = MAX_NEWS[-1] if i % 2 else MAX_NEWS[0]
+        else:
+            plen = int(rng.choice(PROMPT_LENS))
+            max_new = int(rng.choice(MAX_NEWS))
         if i % 2:
             head = prefixes[int(rng.integers(N_PREFIXES))]
             prompt = head + rng.integers(4, vocab, plen - len(head)).tolist()
         else:
             prompt = rng.integers(4, vocab, plen).tolist()
-        jobs.append(Job(arrival_s=t, prompt=prompt,
-                        max_new=int(rng.choice(MAX_NEWS))))
+        jobs.append(Job(arrival_s=t, prompt=prompt, max_new=max_new))
     return jobs
 
 
@@ -479,6 +503,207 @@ def run_admission_trace(cfg, *, slots: int, max_len: int,
     return out
 
 
+def run_fleet_trace(cfg, *, n_replicas: int = 3, slots: int = 2,
+                    n: int = 32, seed: int = 0,
+                    policies=("rr", "least_queue", "energy")) -> dict:
+    """Deterministic multi-replica routing trace on a VIRTUAL clock.
+
+    One workload replays through ``n_replicas`` replicas' slot
+    bookkeeping behind each placement policy — no decode threads, no
+    device compute, no wall clock. One tick = one decode step everywhere;
+    job ``i`` arrives (and is routed) at tick ``i``; a resident emits one
+    token per tick, charges the modeled full-depth J for its position
+    (``core.energy.decode_token_energy``), and retires at its own
+    ``max_new``. Each replica's power-gate EMA updates per tick exactly
+    like the scheduler's (0.9/0.1 blend, 1 virtual second per tick), and
+    the router sees those EMAs — so the route/admit/retire event log
+    (WITH replica assignments) is a pure function of (workload, fleet
+    geometry, policy): two replays are identical, which CI hard-gates.
+
+    Also reports per-replica energy totals per policy:
+    ``energy_beats_rr`` asserts the energy-headroom policy ends with a
+    lower max-replica energy share than round-robin (it routes away from
+    the hottest replica; rr is load-blind).
+    """
+    from repro.core.energy import decode_token_energy
+    from repro.serving.fleet import ReplicaSnapshot, make_placement
+
+    jobs = make_workload(n, 1.0, cfg.vocab_size, seed=seed, class_mix=True)
+    full_depth = cfg.num_layers
+
+    def trace(policy_name: str) -> dict:
+        policy = make_placement(policy_name)
+        queues: list[list[int]] = [[] for _ in range(n_replicas)]
+        residents: list[dict[int, list]] = [{} for _ in range(n_replicas)]
+        energy = [0.0] * n_replicas
+        ema = [0.0] * n_replicas
+        prefix_home: dict = {}
+        events: list[list] = []
+        t = 0
+        routed = 0
+        while (routed < len(jobs) or any(queues)
+               or any(residents)) and t < 100_000:
+            # arrivals: job t routes at tick t against the CURRENT EMAs
+            if routed < len(jobs) and routed <= t:
+                i = routed
+                key = tuple(jobs[i].prompt[:PREFIX_LEN])
+                snaps = [ReplicaSnapshot(
+                    replica_id=r, queue_depth=len(queues[r]),
+                    active_slots=len(residents[r]), prefilling=False,
+                    power_w_ema=ema[r], power_budget_w=None,
+                    energy_j=energy[r])
+                    for r in range(n_replicas)]
+                rid = policy.choose(snaps, prefix_home=prefix_home.get(key))
+                prefix_home[key] = rid
+                queues[rid].append(i)
+                events.append([t, "route", i, rid])
+                routed += 1
+            for r in range(n_replicas):
+                # admit: shortest-prompt-first, submit-order tiebreak
+                # (the scheduler's _pick_next rule, minus its wall-clock
+                # aging clause)
+                while len(residents[r]) < slots and queues[r]:
+                    pick = min(queues[r],
+                               key=lambda i: (len(jobs[i].prompt), i))
+                    queues[r].remove(pick)
+                    slot = min(set(range(slots)) - set(residents[r]))
+                    residents[r][slot] = [pick, len(jobs[pick].prompt),
+                                          jobs[pick].max_new]
+                    events.append([t, "admit", pick, r])
+                # decode: one token per resident per tick, full-depth J
+                e_tick = 0.0
+                for slot in sorted(residents[r]):
+                    i, pos, left = residents[r][slot]
+                    e_tick += float(decode_token_energy(cfg, pos,
+                                                        full_depth))
+                    residents[r][slot] = [i, pos + 1, left - 1]
+                    if left - 1 == 0:
+                        del residents[r][slot]
+                        events.append([t, "retire", i, r])
+                energy[r] += e_tick
+                ema[r] = 0.9 * ema[r] + 0.1 * e_tick    # dt = 1 virtual s
+            t += 1
+        assert routed == len(jobs) and not any(queues) \
+            and not any(residents), "fleet trace failed to drain"
+        total = sum(energy)
+        return {"ticks": t, "events": events,
+                "replica_energy_j": [float(e) for e in energy],
+                "max_replica_energy_share": (max(energy) / total
+                                             if total > 0 else 0.0),
+                "routed_per_replica": [
+                    sum(1 for e in events
+                        if e[1] == "route" and e[3] == r)
+                    for r in range(n_replicas)]}
+
+    out: dict = {"n_replicas": n_replicas, "slots": slots, "n": n}
+    for name in policies:
+        r = trace(name)
+        out[name] = r
+        print(f"[load] fleet-trace {name:12s} ticks={r['ticks']:<5} "
+              f"routed={r['routed_per_replica']} "
+              f"max energy share={r['max_replica_energy_share']:.3f}",
+              flush=True)
+    if "rr" in out and "energy" in out:
+        beats = (out["energy"]["max_replica_energy_share"]
+                 < out["rr"]["max_replica_energy_share"])
+        out["energy_beats_rr"] = bool(beats)
+        print(f"[load] energy-headroom placement "
+              f"{'SHIFTS load off' if beats else 'DOES NOT shift load off'}"
+              f" the hottest replica vs round-robin "
+              f"({out['energy']['max_replica_energy_share']:.3f} vs "
+              f"{out['rr']['max_replica_energy_share']:.3f}, deterministic)")
+    return out
+
+
+def run_fleet_compare(params, cfg, *, rate: float, n: int, slots: int,
+                      n_replicas: int, max_len: int, exit_idx: int,
+                      seed: int = 0) -> dict:
+    """1 vs N replicas at an EQUAL aggregate KV budget.
+
+    The single-scheduler baseline gets ``slots * n_replicas`` KV slots
+    in one pool (same total cache bytes as the fleet) but one decode
+    thread and ONE admission stream; the fleet splits the same budget
+    across ``n_replicas`` independent replicas behind the router — N
+    decode loops and N concurrent admission streams. Reported per
+    placement policy: throughput, p95 latency, J/token, and the
+    max-replica energy share (how well placement spread the joules).
+    """
+    from repro.serving import Router
+
+    base = dict(controller_kind="fixed", fixed_exit_idx=exit_idx,
+                allowed_kinds=("none", "fixed"), max_len=max_len,
+                queue_depth=max(64, n))
+
+    out: dict = {}
+    # -- single-replica baseline at the aggregate budget
+    sched = Scheduler(params, cfg, max_slots=slots * n_replicas,
+                      **base).start()
+    rng = np.random.default_rng(123)
+    for plen in PROMPT_LENS:          # warm every prefill shape off-clock
+        sched.serve_batch([rng.integers(4, cfg.vocab_size, plen).tolist()],
+                          max_new=max(MAX_NEWS))
+    sched.reset_peak_stats()
+    jobs = make_workload(n, rate, cfg.vocab_size, seed=seed,
+                         class_mix=True)
+    r = run_scheduler(sched, jobs)
+    sched.stop()
+    r.update(system="single", replicas=1, slots=slots * n_replicas)
+    out["single"] = r
+    print(f"[load] fleet-compare single      ({slots * n_replicas} slots) "
+          f"tput={r['throughput_tok_s']:7.1f} tok/s "
+          f"p95={r['latency_p95_s']:.3f}s "
+          f"J/tok={r['j_per_token']:.3e}", flush=True)
+
+    # -- the fleet, per placement policy
+    for placement in ("rr", "least_queue", "energy"):
+        router = Router(
+            lambda rid: Scheduler(params, cfg, max_slots=slots, **base),
+            n_replicas=n_replicas, placement=placement).start()
+        # warm every replica's shapes (each has its own jit caches):
+        # pinned submits reach each replica directly
+        rng = np.random.default_rng(123)
+        for rid in router.replica_ids:
+            hs = [router.submit(
+                rng.integers(4, cfg.vocab_size, plen).tolist(),
+                max_new=max(MAX_NEWS), replica_id=rid)
+                for plen in PROMPT_LENS]
+            for h in hs:
+                h.result(timeout=300.0)
+        router.reset_peak_stats()
+        jobs = make_workload(n, rate, cfg.vocab_size, seed=seed,
+                             class_mix=True)
+        r = run_scheduler(router, jobs)
+        st = router.stats()
+        router.stop()
+        r.update(system=f"fleet_{placement}", replicas=n_replicas,
+                 slots=slots, placement=placement,
+                 max_replica_energy_share=(
+                     st["fleet"]["max_replica_energy_share"]),
+                 replica_energy_j=[p["fleet_energy_j"]
+                                   for p in st["per_replica"]],
+                 routed_per_replica=[p["routed"]
+                                     for p in st["per_replica"]])
+        out[f"fleet_{placement}"] = r
+        print(f"[load] fleet-compare {placement:12s} "
+              f"tput={r['throughput_tok_s']:7.1f} tok/s "
+              f"p95={r['latency_p95_s']:.3f}s "
+              f"J/tok={r['j_per_token']:.3e} "
+              f"max energy share={r['max_replica_energy_share']:.3f}",
+              flush=True)
+
+    best = max((out[f"fleet_{p}"]["throughput_tok_s"]
+                for p in ("rr", "least_queue", "energy")))
+    out["fleet_speedup"] = best / max(out["single"]["throughput_tok_s"],
+                                      1e-9)
+    out["energy_share_energy_vs_rr"] = (
+        out["fleet_energy"]["max_replica_energy_share"],
+        out["fleet_rr"]["max_replica_energy_share"])
+    print(f"[load] fleet of {n_replicas}x{slots} slots: "
+          f"{out['fleet_speedup']:.2f}x the single {slots * n_replicas}"
+          f"-slot scheduler at equal aggregate KV budget", flush=True)
+    return out
+
+
 def run_prefill_compare(params, cfg, *, chunk: int = 16,
                         lens=(9, 11, 14, 18, 21, 24, 27, 31, 35, 39, 44,
                               52),
@@ -659,7 +884,7 @@ def run_spec_compare(*, rate: float, n: int, slots: int, num_layers: int,
 def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
         d_model: int = 96, vocab: int = 512, slots: int = 4,
         exit_idx: int = 0, block_size: int = 8, seed: int = 0,
-        save: bool = True, smoke: bool = False) -> dict:
+        replicas: int = 2, save: bool = True, smoke: bool = False) -> dict:
     cfg = paper_mini(num_layers=num_layers, d_model=d_model,
                      vocab_size=vocab)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -709,6 +934,19 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
     admission_trace = run_admission_trace(cfg, slots=slots, max_len=max_len,
                                           block_size=block_size, n=n,
                                           seed=seed)
+    fleet_trace = run_fleet_trace(cfg, n_replicas=max(replicas, 2),
+                                  slots=max(slots // 2, 1), n=n, seed=seed)
+    # the energy-share comparison needs arrivals that OVERLAP service
+    # without saturating: at a fully saturating rate every queue is deep
+    # at routing time and all policies degenerate to count-alternation
+    # (the class-mixed workload then aliases equally under every policy),
+    # so the mid rate — not the top rate — is the regime where placement
+    # signals actually differentiate
+    mid = sorted(rates)[len(rates) // 2]
+    fleet_compare = run_fleet_compare(params, cfg, rate=mid, n=n,
+                                      slots=slots, n_replicas=replicas,
+                                      max_len=max_len, exit_idx=exit_idx,
+                                      seed=seed)
     prefill_compare = run_prefill_compare(params, cfg, seed=seed)
     phase_breakdown = run_phase_breakdown(params, cfg, rate=top, n=n,
                                           slots=slots, max_len=max_len,
@@ -717,16 +955,19 @@ def run(rates=(4.0, 10.0, 25.0), n: int = 24, *, num_layers: int = 8,
 
     payload = {
         "bench": "serving_load",
-        "schema_version": 3,
+        "schema_version": 4,
         "smoke": smoke,
         "config": {"num_layers": num_layers, "d_model": d_model,
                    "vocab": vocab, "slots": slots, "n": n,
-                   "rates": list(rates), "block_size": block_size},
+                   "rates": list(rates), "block_size": block_size,
+                   "replicas": replicas},
         "results": results,
         "speedup_at_top_rate": speedup,
         "kv_compare": kv_compare,
         "spec_compare": spec_compare,
         "admission_trace": admission_trace,
+        "fleet_trace": fleet_trace,
+        "fleet_compare": fleet_compare,
         "prefill_compare": prefill_compare,
         "phase_breakdown": phase_breakdown,
     }
@@ -779,6 +1020,9 @@ def main():
     ap.add_argument("--block-size", type=int, default=8,
                     help="paged-pool tokens per KV block")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet-compare replica count (1 vs N at equal "
+                         "aggregate KV budget)")
     ap.add_argument("--no-save", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-speed run: tiny model, one rate, few requests")
@@ -788,12 +1032,13 @@ def main():
         # saturates and the admission comparison is vacuous
         run((60.0,), 32, num_layers=4, d_model=64, vocab=256, slots=3,
             exit_idx=args.exit_idx, block_size=args.block_size,
-            seed=args.seed, save=not args.no_save, smoke=True)
+            seed=args.seed, replicas=args.replicas,
+            save=not args.no_save, smoke=True)
         return
     run(tuple(args.rates), args.n, num_layers=args.layers,
         d_model=args.d_model, vocab=args.vocab, slots=args.slots,
         exit_idx=args.exit_idx, block_size=args.block_size, seed=args.seed,
-        save=not args.no_save)
+        replicas=args.replicas, save=not args.no_save)
 
 
 if __name__ == "__main__":

@@ -84,10 +84,20 @@ def main():
                     help="write a Chrome trace-event JSON of the run's "
                          "tick phases here (open in Perfetto; with "
                          "--scheduler)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel fleet: N scheduler replicas of "
+                         "--slots each behind one placement router "
+                         "(with --scheduler)")
+    ap.add_argument("--placement", default="energy",
+                    help="fleet placement policy: rr | least_queue | "
+                         "energy (with --replicas > 1)")
     args = ap.parse_args()
     if args.trace_out and not args.scheduler:
         ap.error("--trace-out requires --scheduler (the one-shot engine "
                  "has no tick phases to trace)")
+    if args.replicas > 1 and not args.scheduler:
+        ap.error("--replicas requires --scheduler (the one-shot engine "
+                 "is single-replica by construction)")
 
     mod = __import__(f"repro.configs."
                      f"{args.arch.replace('-', '_').replace('.', '_')}",
@@ -129,22 +139,33 @@ def main():
     tracer = None
     if args.scheduler:
         from repro.serving import Scheduler
-        if args.trace_out:
-            from repro.obs import Tracer
-            tracer = Tracer()
-        sched = Scheduler(params, cfg, default_policy=spec,
-                          agent_params=agent,
-                          allowed_kinds=("none", args.controller),
-                          tokenizer=ds.tokenizer,
-                          max_slots=args.slots,
-                          max_len=192 + args.max_new,
-                          max_new=args.max_new,
-                          kv_layout=args.kv_layout,
-                          block_size=args.block_size,
-                          spec_window=args.spec_window,
-                          prefill_chunk=args.prefill_chunk,
-                          queue_depth=max(64, args.requests),
-                          tracer=tracer).start()
+
+        def make_scheduler(_rid: int = 0) -> Scheduler:
+            t = None
+            if args.trace_out:
+                from repro.obs import Tracer
+                t = Tracer()
+            return Scheduler(params, cfg, default_policy=spec,
+                             agent_params=agent,
+                             allowed_kinds=("none", args.controller),
+                             tokenizer=ds.tokenizer,
+                             max_slots=args.slots,
+                             max_len=192 + args.max_new,
+                             max_new=args.max_new,
+                             kv_layout=args.kv_layout,
+                             block_size=args.block_size,
+                             spec_window=args.spec_window,
+                             prefill_chunk=args.prefill_chunk,
+                             queue_depth=max(64, args.requests),
+                             tracer=t)
+
+        if args.replicas > 1:
+            from repro.serving import Router
+            sched = Router(make_scheduler, n_replicas=args.replicas,
+                           placement=args.placement).start()
+        else:
+            sched = make_scheduler().start()
+            tracer = sched.obs if args.trace_out else None
         try:
             handles = [sched.submit(r) for r in reqs]
             results = [h.result(300.0).to_result(ds.tokenizer)
@@ -176,7 +197,29 @@ def main():
         txt = (res.text or "").replace("\n", "\\n")
         print(f"  [{i}] finish={res.finish_reason} exits={res.exit_layers} "
               f"-> {txt!r}")
-    if sched is not None:
+    if sched is not None and args.replicas > 1:
+        st = sched.stats()
+        fl = st["fleet"]
+        print(f"  [fleet] replicas={st['replicas']} "
+              f"placement={st['placement']} "
+              f"throughput={fl['throughput_tok_s']:.1f} tok/s "
+              f"fleet J/tok={fl['fleet_j_per_token']:.3e} "
+              f"max energy share={fl['max_replica_energy_share']:.2f}")
+        for rst in st["per_replica"]:
+            print(f"    replica {rst['replica_id']}: "
+                  f"routed={rst['routed']} tokens={rst['fleet_tokens']} "
+                  f"energy={rst['fleet_energy_j']:.3e} J "
+                  f"power EMA={rst['power_w_ema']:.2f} W")
+        if args.trace_out:
+            from repro.obs import write_chrome_trace
+            events = sched.drain_events()
+            sched.stop()
+            obj = write_chrome_trace(args.trace_out, events)
+            print(f"  [trace] {len(obj['traceEvents'])} merged fleet "
+                  f"events -> {args.trace_out} (replica = tid group)")
+        else:
+            sched.stop()
+    elif sched is not None:
         st = sched.stats()
         if st["kv_layout"] == "paged":
             print(f"  [kv] paged: {st['blocks_in_use']}/{st['num_blocks']} "

@@ -14,7 +14,7 @@ from repro.obs.chrome_trace import (TraceValidationError,  # noqa: F401
                                     to_chrome_trace, validate_chrome_trace,
                                     write_chrome_trace)
 from repro.obs.prom import (PROM_CONTENT_TYPE, render_prometheus,  # noqa
-                            validate_exposition)
+                            render_fleet_prometheus, validate_exposition)
 from repro.obs.trace import (DEFAULT_BUCKETS, NULL_TRACER,  # noqa: F401
                              Histogram, Tracer, make_step_clock,
                              summarize_spans)

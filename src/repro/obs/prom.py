@@ -103,20 +103,120 @@ def render_prometheus(stats: dict, tracer=None,
     return "\n".join(lines) + "\n"
 
 
+def render_fleet_prometheus(fleet_stats: dict, replicas, *,
+                            prefix: str = "repro_",
+                            placement: Optional[str] = None) -> str:
+    """Fleet exposition: unlabeled fleet-aggregate gauges plus one
+    ``{replica="N"}``-labeled sample per replica per family.
+
+    ``replicas`` is a sequence of ``(labels, stats, tracer_or_None)``
+    triples — ``labels`` is the replica's label dict (typically
+    ``{"replica": "0"}``), ``stats`` its ``Scheduler.stats()`` dict, and
+    the tracer (when tracing) contributes per-replica phase histograms
+    and event counters with the replica labels folded in. The output is
+    one well-formed 0.0.4 exposition: exactly one ``# TYPE`` per family,
+    no duplicate series (``validate_exposition`` enforces both).
+    """
+    lines = _scalar_lines(fleet_stats or {}, prefix + "fleet_")
+    if placement is not None:
+        pname = prefix + "fleet_placement_info"
+        lines.append(f"# TYPE {pname} gauge")
+        lines.append(f'{pname}{{placement="{_escape_label(placement)}"}} 1')
+
+    def label_block(labels: dict, extra: str = "") -> str:
+        parts = [f'{k}="{_escape_label(str(v))}"'
+                 for k, v in sorted(labels.items())]
+        if extra:
+            parts.append(extra)
+        return "{" + ",".join(parts) + "}"
+
+    # per-replica scalar families: collect value-per-replica first so each
+    # family gets exactly one # TYPE header across the whole fleet
+    per_family: dict[str, list[tuple[str, str]]] = {}
+    for labels, stats, _ in replicas:
+        for key in sorted(stats or {}):
+            val = stats[key]
+            if isinstance(val, bool):
+                val = int(val)
+            if isinstance(val, dict) or not isinstance(val, (int, float)):
+                continue
+            per_family.setdefault(_metric_name(key, prefix), []).append(
+                (label_block(labels), _fmt(val)))
+    for name in sorted(per_family):
+        lines.append(f"# TYPE {name} gauge")
+        for block, val in per_family[name]:
+            lines.append(f"{name}{block} {val}")
+
+    # per-replica tracer histograms/counters, replica label folded in
+    traced = [(labels, tr) for labels, _, tr in replicas if tr is not None]
+    hists = [(labels, tr.histograms()) for labels, tr in traced]
+    hists = [(labels, h) for labels, h in hists if h]
+    if hists:
+        base = prefix + "phase_seconds"
+        lines.append(f"# HELP {base} tick-phase wall time (seconds)")
+        lines.append(f"# TYPE {base} histogram")
+        for labels, hh in hists:
+            for phase in sorted(hh):
+                h = hh[phase]
+                lab = label_block(labels,
+                                  f'phase="{_escape_label(phase)}"')
+                for le, cum in h.cumulative():
+                    core = lab[:-1] + f',le="{le}"}}'
+                    lines.append(f"{base}_bucket{core} {cum}")
+                lines.append(f"{base}_sum{lab} {_fmt(h.sum)}")
+                lines.append(f"{base}_count{lab} {h.count}")
+        dw = prefix + "phase_device_wait_seconds_sum"
+        lines.append(f"# TYPE {dw} gauge")
+        for labels, hh in hists:
+            for phase in sorted(hh):
+                lab = label_block(labels,
+                                  f'phase="{_escape_label(phase)}"')
+                lines.append(f"{dw}{lab} {_fmt(hh[phase].device_wait_sum)}")
+    counters = [(labels, tr.counters) for labels, tr in traced]
+    counters = [(labels, c) for labels, c in counters if c]
+    if counters:
+        cname = prefix + "events_total"
+        lines.append(f"# TYPE {cname} counter")
+        for labels, ctrs in counters:
+            for k in sorted(ctrs):
+                lab = label_block(labels,
+                                  f'event="{_escape_label(k)}"')
+                lines.append(f"{cname}{lab} {ctrs[k]}")
+    return "\n".join(lines) + "\n"
+
+
 _LINE_RE = re.compile(
-    r"^[a-zA-Z_:][a-zA-Z0-9_:]*"                      # metric name
-    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'     # first label
-    r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})?'  # more labels
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*"                      # metric name
+    r'(?:\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'    # first label
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})?)'  # more labels
     r" (?:[+-]?(?:[0-9.eE+-]+)|NaN|[+-]Inf)$")
+
+
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _canonical_series(series: str) -> str:
+    """Series identity key: metric name + label set with labels sorted
+    by name (Prometheus identity ignores label order)."""
+    if "{" not in series:
+        return series
+    name, block = series.split("{", 1)
+    labels = sorted(_LABEL_RE.findall(block))
+    return name + "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
 
 
 def validate_exposition(text: str,
                         required_families: Optional[set] = None) -> dict:
-    """Check every non-comment line parses as ``name{labels} value`` and
-    (optionally) that required metric families are present. Returns
-    ``{"lines": n, "families": {...}}``; raises ValueError on violation.
+    """Check every non-comment line parses as ``name{labels} value``, that
+    no series repeats (same name with the same label set twice — the
+    collision a per-replica-labeled fleet exposition would produce if
+    replica labels were dropped; Prometheus treats it as ingestion
+    garbage), and (optionally) that required metric families are present.
+    Returns ``{"lines": n, "families": {...}}``; raises ValueError on
+    violation.
     """
     families = set()
+    seen_series: set[str] = set()
     n = 0
     for line in text.splitlines():
         if not line.strip():
@@ -126,8 +226,13 @@ def validate_exposition(text: str,
             if len(parts) >= 3 and parts[1] in ("TYPE", "HELP"):
                 families.add(parts[2])
             continue
-        if not _LINE_RE.match(line):
+        m = _LINE_RE.match(line)
+        if not m:
             raise ValueError(f"bad exposition line: {line!r}")
+        series = _canonical_series(m.group(1))
+        if series in seen_series:
+            raise ValueError(f"duplicate series: {m.group(1)!r}")
+        seen_series.add(series)
         families.add(line.split("{")[0].split(" ")[0])
         n += 1
     missing = set(required_families or ()) - {
@@ -144,4 +249,5 @@ def validate_exposition(text: str,
     return {"lines": n, "families": sorted(families)}
 
 
-__all__ = ["render_prometheus", "validate_exposition", "PROM_CONTENT_TYPE"]
+__all__ = ["render_prometheus", "render_fleet_prometheus",
+           "validate_exposition", "PROM_CONTENT_TYPE"]

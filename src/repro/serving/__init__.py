@@ -5,5 +5,7 @@ from repro.serving.metrics import (RequestMetrics, aggregate_metrics,  # noqa
                                    latency_percentiles)
 from repro.serving.kv_pool import (BlockAllocator, PagedKVPool,  # noqa: F401
                                    chain_hashes)
+from repro.serving.fleet import (FleetRequest, Router,  # noqa: F401
+                                 make_placement)
 from repro.serving.scheduler import (KVSlotPool, Request,  # noqa: F401
                                      Scheduler, SchedulerQueueFull)

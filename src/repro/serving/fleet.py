@@ -1,0 +1,656 @@
+"""Data-parallel fleet serving: replica schedulers behind one router.
+
+GREEN-CODE's thesis is that *inference* dominates lifetime energy
+because it is a continuous, high-invocation workload — a regime one
+replica, one admission stream and one power gate cannot reach. This
+module scales the serving stack out instead of up: N independent
+:class:`~repro.serving.scheduler.Scheduler` replicas (each with its own
+KV pool, decode thread and power-gate EMA, wrapped unchanged) sit
+behind a single :class:`Router` that owns request placement, fleet
+lifecycle and fleet-level observability.
+
+Placement policies (:func:`make_placement`)
+  * ``rr``          — round-robin over live replicas.
+  * ``least_queue`` — smallest load proxy (queue depth + active slots,
+    +1 while a prefill stream is open); ties break to the lowest
+    replica id.
+  * ``energy``      — the headline policy: route to the replica whose
+    power gate has the most *headroom*. Headroom is measured against
+    **committed power** — the power EMA scaled up by the replica's
+    queued-to-active ratio (``ema * (1 + queued/active)``), because the
+    raw EMA is a lagging signal that herds work onto whichever replica
+    most recently went idle — so ``headroom = power_budget_w -
+    committed`` when a budget is set, ``-committed`` otherwise (the
+    per-replica admission power gate generalized to fleet level).
+    Prefix-cache **affinity** tiebreaks: a prompt whose prefix was
+    routed before goes back to the replica likely to still hold those
+    KV blocks, as long as that replica's headroom is within
+    ``AFFINITY_SLACK`` of the best.
+
+All three are deterministic functions of (submission order, replica
+snapshots): the virtual-clock fleet trace
+(``benchmarks.serving_load.run_fleet_trace``) replays them against pool
+bookkeeping with a modeled per-tick energy stream, so routing behavior
+is CI-testable bit-for-bit without hardware.
+
+Lifecycle
+  ``Router.spawn_replica()`` adds capacity live. ``drain_replica(rid)``
+  gracefully removes one: the replica stops taking placements, its
+  queued-but-unstarted requests are **rebalanced** to the remaining
+  replicas (their :class:`FleetRequest` handles rebind transparently —
+  callers never notice), its in-flight requests run to completion
+  (bounded by ``timeout``), then its scheduler stops. ``Router.drain()``
+  does the same for the whole fleet — the server's graceful-shutdown
+  path. ``stop()`` is the abrupt variant (replica ``_drain`` semantics:
+  queued requests fail, residents retire mid-sequence).
+
+Observability
+  ``Router.stats()`` returns a ``fleet`` aggregate plus ``per_replica``
+  breakdowns (queue depth, active slots, power EMA, blocked admissions —
+  exactly the router's placement inputs, so its decisions are
+  inspectable from ``GET /queue``). ``Router.prometheus()`` renders
+  per-replica-labeled series (``repro_queue_depth{replica="1"}``).
+  ``Router.drain_events()`` merges the replicas' Chrome traces into one
+  log with replica-scoped tids (replica ``r``, local thread ``t`` →
+  tid ``r * TID_STRIDE + t``), so one Perfetto timeline shows the whole
+  fleet with one track group per replica.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from repro.obs.prom import render_fleet_prometheus
+from repro.serving.scheduler import (Request, Scheduler,
+                                     SchedulerQueueFull)
+
+#: merged-trace tid layout: replica r's local thread t maps to
+#: r * TID_STRIDE + t (local tids are first-seen-order small ints).
+TID_STRIDE = 100
+
+#: energy policy: the prefix-affinity tiebreak only overrides the
+#: max-headroom pick while the affine replica's headroom is within this
+#: fraction of the best replica's.
+AFFINITY_SLACK = 0.25
+
+PLACEMENTS = ("rr", "least_queue", "energy")
+
+
+# ---------------------------------------------------------------------------
+# Placement policies
+# ---------------------------------------------------------------------------
+@dataclass
+class ReplicaSnapshot:
+    """What the router knows about one replica when it places a request.
+
+    Built from :meth:`Scheduler.placement_snapshot` — the same numbers
+    ``GET /queue`` exposes per replica, so every placement decision is
+    reproducible from observable state.
+    """
+    replica_id: int
+    queue_depth: int
+    active_slots: int
+    prefilling: bool
+    power_w_ema: float
+    power_budget_w: Optional[float]
+    blocked_admissions: int = 0
+    # joules retired on this replica in the current stats window — the
+    # spreading signal when the whole fleet idles between paced arrivals
+    # and committed power carries no information
+    energy_j: float = 0.0
+
+    @property
+    def load(self) -> int:
+        return (self.queue_depth + self.active_slots
+                + (1 if self.prefilling else 0))
+
+    @property
+    def committed_power_w(self) -> float:
+        """Projected power once queued work starts burning.
+
+        The raw EMA is a *lagging* signal: a replica with a deep queue
+        still reads cool until those requests actually decode, so
+        routing on raw EMA herds new work onto whichever replica most
+        recently went idle. Scale the EMA by the queued-to-active ratio
+        — each queued request is projected to cost about what a current
+        resident costs — and the herding disappears (measured in
+        ``run_fleet_trace``: raw-EMA routing ends ~25% more concentrated
+        than round-robin; committed-power routing beats it).
+
+        The EMA the snapshot carries must also be *fresh*: an idle
+        scheduler's decode loop stops blending, so
+        :meth:`Scheduler.placement_snapshot` decays the reported EMA by
+        the time since the last decode tick (the same 0.9/s blend a
+        zero-power tick would apply). Without that decay a frozen-high
+        EMA repels work forever — measured under paced arrivals: one
+        replica absorbs the entire workload because the other's warmup
+        EMA never cools."""
+        return self.power_w_ema * (1.0 + self.queue_depth
+                                   / max(self.active_slots, 1))
+
+    @property
+    def headroom(self) -> float:
+        """Power-gate headroom: how far this replica's committed power
+        sits below its admission budget (no budget: just the negated
+        committed power, so 'most headroom' still means 'coolest
+        replica')."""
+        if self.power_budget_w is not None:
+            return self.power_budget_w - self.committed_power_w
+        return -self.committed_power_w
+
+
+class PlacementPolicy:
+    """Base: ``choose`` picks a replica id from live snapshots.
+
+    ``prefix_home`` is the id of the replica that last served this
+    prompt's prefix (or None) — only the energy policy uses it today,
+    but every policy receives it so new affinity-aware policies slot in.
+    """
+
+    name = "base"
+
+    def choose(self, snaps: Sequence[ReplicaSnapshot],
+               prefix_home: Optional[int] = None) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(PlacementPolicy):
+    name = "rr"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def choose(self, snaps, prefix_home=None) -> int:
+        pick = snaps[self._next % len(snaps)]
+        self._next += 1
+        return pick.replica_id
+
+
+class LeastQueue(PlacementPolicy):
+    name = "least_queue"
+
+    def choose(self, snaps, prefix_home=None) -> int:
+        return min(snaps, key=lambda s: (s.load, s.replica_id)).replica_id
+
+
+class EnergyHeadroom(PlacementPolicy):
+    name = "energy"
+
+    def __init__(self, affinity_slack: float = AFFINITY_SLACK) -> None:
+        self.affinity_slack = affinity_slack
+
+    def choose(self, snaps, prefix_home=None) -> int:
+        # two regimes. Fleet fully idle at routing time (paced arrivals:
+        # nothing queued, resident or prefilling anywhere): committed
+        # power is decayed-EMA residue, not signal — chasing it herds
+        # the entire workload onto one replica (measured: >0.95
+        # max-replica energy share). Balance the window's cumulative
+        # joules instead: coolest history first, greedy minimization of
+        # the very share the fleet stats report. Any live work anywhere:
+        # power-gate headroom decides; equal-headroom ties (a cold
+        # fleet) break to the least-loaded replica so requests spread
+        # before the EMAs diverge.
+        if all(s.load == 0 for s in snaps):
+            best = min(snaps, key=lambda s: (s.energy_j, s.replica_id))
+        else:
+            best = max(snaps,
+                       key=lambda s: (s.headroom, -s.load, -s.replica_id))
+        if prefix_home is not None and prefix_home != best.replica_id:
+            home = next((s for s in snaps
+                         if s.replica_id == prefix_home), None)
+            if home is not None:
+                # affinity tiebreak: reuse of warm prefix blocks is worth
+                # a bounded headroom sacrifice, never an unbounded one —
+                # a genuinely hot replica loses its repeat prompts
+                top = max(s.headroom for s in snaps)
+                cutoff = (top - self.affinity_slack * abs(top) - 1e-12)
+                if home.headroom >= cutoff:
+                    return home.replica_id
+        return best.replica_id
+
+
+def make_placement(name: str) -> PlacementPolicy:
+    """Fresh policy instance by name (policies may carry state — rr's
+    cursor — so the router and each virtual-trace replay get their own).
+    """
+    try:
+        cls = {"rr": RoundRobin, "least_queue": LeastQueue,
+               "energy": EnergyHeadroom}[name]
+    except KeyError:
+        raise ValueError(f"unknown placement {name!r} "
+                         f"(choose from {PLACEMENTS})") from None
+    return cls()
+
+
+# ---------------------------------------------------------------------------
+# Fleet request handle
+# ---------------------------------------------------------------------------
+class FleetRequest:
+    """Caller handle for a routed request.
+
+    Delegates everything to the underlying scheduler
+    :class:`~repro.serving.scheduler.Request`; if the router rebalances
+    the (still queued, never started) request to another replica during
+    a drain, the handle rebinds transparently — ``result()`` and
+    ``stream()`` keep working and ``replica_id`` reports the replica
+    that actually served it.
+    """
+
+    def __init__(self, fleet_id: int):
+        self.fleet_id = fleet_id
+        self._inner: Optional[Request] = None
+        self._rid: Optional[int] = None
+
+    def _bind(self, inner: Request, replica_id: int) -> None:
+        inner.replica_id = replica_id
+        inner._fleet_handle = self
+        # rebind point: publish the replica id first so a concurrent
+        # reader never sees the new inner with the old id
+        self._rid = replica_id
+        self._inner = inner
+
+    @property
+    def replica_id(self) -> Optional[int]:
+        return self._rid
+
+    @property
+    def rebalanced(self) -> bool:
+        return getattr(self._inner, "_rebalanced_from", None) is not None
+
+    def result(self, timeout: Optional[float] = None) -> "FleetRequest":
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            inner = self._inner
+            step = 0.05
+            if deadline is not None:
+                step = min(step, max(deadline - time.monotonic(), 0.001))
+            try:
+                inner.result(step)
+                return self
+            except TimeoutError:
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise
+            except RuntimeError:
+                if self._inner is inner:
+                    raise          # genuinely aborted, not rebalanced
+                # rebalanced mid-wait: retry against the new inner
+
+    def stream(self, timeout: Optional[float] = None):
+        """Yield tokens as generated (per-token ``timeout``, like
+        ``Request.stream``); survives a rebalance — a rebalanced request
+        never started, so no token is ever lost in the handoff."""
+        while True:
+            inner = self._inner
+            tok_deadline = (None if timeout is None
+                            else time.monotonic() + timeout)
+            while True:
+                try:
+                    tok = inner._stream.get(timeout=0.05)
+                    break
+                except _queue.Empty:
+                    if self._inner is not inner:
+                        inner = self._inner          # rebound: fresh queue
+                        continue
+                    if (tok_deadline is not None
+                            and time.monotonic() >= tok_deadline):
+                        raise TimeoutError(
+                            f"fleet request {self.fleet_id} stream "
+                            f"stalled") from None
+            if tok is None:
+                return
+            yield tok
+
+    def __getattr__(self, name: str):
+        # tokens/text/metrics/to_result/... all live on the inner Request
+        inner = self.__dict__.get("_inner")
+        if inner is None:
+            raise AttributeError(name)
+        return getattr(inner, name)
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+@dataclass
+class _Replica:
+    replica_id: int
+    scheduler: Scheduler
+    draining: bool = False
+    routed: int = 0
+    spawned_at: float = field(default_factory=time.monotonic)
+
+
+class Router:
+    """N scheduler replicas behind one placement-policy front door.
+
+    ``make_scheduler(replica_id) -> Scheduler`` builds one (unstarted)
+    replica; the router owns start/stop/drain for all of them. Replicas
+    are expected to share model params and geometry — placement assumes
+    any live replica can serve any request (the routing-invariance
+    property: per-request output is bit-identical wherever it runs,
+    because sampling is keyed by request seed + position, never by batch
+    composition or replica identity).
+    """
+
+    def __init__(self, make_scheduler: Callable[[int], Scheduler], *,
+                 n_replicas: int = 2, placement: str = "energy",
+                 affinity_prefix: int = 16):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self._make = make_scheduler
+        self.placement = make_placement(placement)
+        self.placement_name = self.placement.name
+        self.affinity_prefix = int(affinity_prefix)
+        self._replicas: dict[int, _Replica] = {}
+        self._next_rid = 0
+        self._seq = 0
+        self._lock = threading.Lock()
+        self._started = False
+        self._prefix_home: dict = {}          # prompt-prefix key -> rid
+        self._rebalanced = 0
+        for _ in range(n_replicas):
+            self.spawn_replica()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "Router":
+        with self._lock:
+            reps = list(self._replicas.values())
+            self._started = True
+        for rep in reps:
+            rep.scheduler.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Abrupt stop of every replica (queued requests fail, residents
+        retire mid-sequence — scheduler ``_drain`` semantics)."""
+        with self._lock:
+            reps = list(self._replicas.values())
+        for rep in reps:
+            rep.scheduler.stop(timeout)
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Graceful fleet shutdown: every replica stops admissions, all
+        queued + in-flight requests run to completion (bounded by
+        ``timeout``), then the decode loops stop. Returns True when
+        everything finished inside the budget."""
+        with self._lock:
+            reps = list(self._replicas.values())
+            for rep in reps:
+                rep.draining = True
+        for rep in reps:
+            rep.scheduler.begin_drain()
+        deadline = time.monotonic() + timeout
+        ok = True
+        for rep in reps:
+            left = max(deadline - time.monotonic(), 0.001)
+            ok = rep.scheduler.drain(left) and ok
+        return ok
+
+    def __enter__(self) -> "Router":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(1 for r in self._replicas.values()
+                       if not r.draining)
+
+    def spawn_replica(self) -> int:
+        """Add one replica (started immediately when the router runs)."""
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        sched = self._make(rid)
+        rep = _Replica(rid, sched)
+        with self._lock:
+            self._replicas[rid] = rep
+            started = self._started
+        if started:
+            sched.start()
+        return rid
+
+    def drain_replica(self, replica_id: int, timeout: float = 30.0) -> int:
+        """Gracefully remove one replica.
+
+        The replica stops taking placements and submissions, its
+        queued-but-unstarted requests are rebalanced to the remaining
+        live replicas (handles rebind — callers never notice), its
+        in-flight requests run to completion (bounded by ``timeout``),
+        then its scheduler stops and the replica is removed. Returns the
+        number of rebalanced requests.
+        """
+        with self._lock:
+            rep = self._replicas.get(replica_id)
+            if rep is None:
+                raise KeyError(f"no replica {replica_id}")
+            live = [r for r in self._replicas.values() if not r.draining]
+            if len(live) <= 1 and rep in live:
+                raise ValueError("cannot drain the last live replica")
+            rep.draining = True
+        sched = rep.scheduler
+        sched.begin_drain()
+        stolen = sched.take_queued()
+        for old in stolen:
+            self._rebalance(old)
+        with self._lock:
+            self._rebalanced += len(stolen)
+        sched.drain(timeout)
+        with self._lock:
+            self._replicas.pop(replica_id, None)
+        return len(stolen)
+
+    def _rebalance(self, old: Request) -> None:
+        """Resubmit a queued-but-unstarted request elsewhere and rebind
+        its fleet handle. The prompt was already tail-clipped at the
+        original submit, so it resubmits verbatim."""
+        new = self._place_and_submit(
+            list(old.prompt), dict(
+                max_new=old.max_new, policy=old.spec,
+                sampling=old.sampling,
+                stop_sequences=old.stop_sequences or None,
+                request_class=old.request_class,
+                energy_budget_j=old.energy_budget_j))
+        new.truncated = old.truncated
+        new._rebalanced_from = old.replica_id
+        handle = getattr(old, "_fleet_handle", None)
+        if handle is not None:
+            handle._bind(new, new.replica_id)
+
+    # -- placement ----------------------------------------------------------
+    def _prefix_key(self, prompt):
+        if isinstance(prompt, str):
+            return prompt[:4 * self.affinity_prefix]
+        return tuple(prompt[: self.affinity_prefix])
+
+    def _snapshots(self) -> list[tuple[_Replica, ReplicaSnapshot]]:
+        with self._lock:
+            reps = [r for _, r in sorted(self._replicas.items())
+                    if not r.draining]
+        return [(r, ReplicaSnapshot(replica_id=r.replica_id,
+                                    **r.scheduler.placement_snapshot()))
+                for r in reps]
+
+    def _place_and_submit(self, request, kwargs: dict) -> Request:
+        pairs = self._snapshots()
+        if not pairs:
+            raise RuntimeError("router has no live replicas")
+        prompt = (request.prompt
+                  if hasattr(request, "prompt") else request)
+        key = self._prefix_key(prompt)
+        with self._lock:
+            home = self._prefix_home.get(key)
+            rid = self.placement.choose([s for _, s in pairs],
+                                        prefix_home=home)
+        by_id = {rep.replica_id: rep for rep, _ in pairs}
+        # placement-order fallback on a full replica queue: the pick
+        # first, then the rest coolest-first — only when every live
+        # queue is full does the caller see SchedulerQueueFull
+        order = [rid] + [s.replica_id
+                         for _, s in sorted(pairs,
+                                            key=lambda p: (p[1].load,
+                                                           p[1].replica_id))
+                         if s.replica_id != rid]
+        last_err = None
+        for try_rid in order:
+            rep = by_id[try_rid]
+            try:
+                inner = rep.scheduler.submit(request, **kwargs)
+            except SchedulerQueueFull as e:
+                last_err = e
+                continue
+            inner.replica_id = try_rid
+            with self._lock:
+                rep.routed += 1
+                self._prefix_home[key] = try_rid
+                if len(self._prefix_home) > 65536:
+                    self._prefix_home.clear()     # bounded affinity memory
+            return inner
+        raise last_err
+
+    def submit(self, request, **kwargs) -> FleetRequest:
+        """Scheduler-compatible submit: place the request on a replica
+        per the placement policy, return a :class:`FleetRequest`."""
+        replica_id = kwargs.pop("replica_id", None)
+        with self._lock:
+            fleet_id = self._seq
+            self._seq += 1
+        handle = FleetRequest(fleet_id)
+        if replica_id is not None:                 # explicit pin
+            with self._lock:
+                rep = self._replicas[replica_id]
+                if rep.draining:
+                    raise ValueError(f"replica {replica_id} is draining")
+            inner = rep.scheduler.submit(request, **kwargs)
+            with self._lock:
+                rep.routed += 1
+            handle._bind(inner, replica_id)
+            return handle
+        inner = self._place_and_submit(request, kwargs)
+        handle._bind(inner, inner.replica_id)
+        return handle
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def replica_ids(self) -> list[int]:
+        with self._lock:
+            return sorted(self._replicas)
+
+    @property
+    def tracing(self) -> bool:
+        with self._lock:
+            reps = list(self._replicas.values())
+        return any(r.scheduler.obs.enabled for r in reps)
+
+    def reset_peak_stats(self) -> None:
+        with self._lock:
+            reps = list(self._replicas.values())
+        for rep in reps:
+            rep.scheduler.reset_peak_stats()
+
+    def stats(self) -> dict:
+        """Fleet aggregate + per-replica breakdown (``GET /queue``)."""
+        with self._lock:
+            reps = sorted(self._replicas.items())
+            rebalanced = self._rebalanced
+            prefix_homes = len(self._prefix_home)
+        per = []
+        for rid, rep in reps:
+            st = rep.scheduler.stats()
+            st.update(replica_id=rid, draining=rep.draining,
+                      routed=rep.routed)
+            per.append(st)
+        n = max(len(per), 1)
+        energies = [st["fleet_energy_j"] for st in per]
+        total_e = sum(energies)
+        fleet = {
+            "replicas": len(per),
+            "queue_depth": sum(st["queue_depth"] for st in per),
+            "active_slots": sum(st["active_slots"] for st in per),
+            "max_slots": sum(st["max_slots"] for st in per),
+            "completed_requests": sum(st["completed_requests"]
+                                      for st in per),
+            "fleet_tokens": sum(st["fleet_tokens"] for st in per),
+            "fleet_energy_j": total_e,
+            "fleet_prefill_energy_j": sum(st["fleet_prefill_energy_j"]
+                                          for st in per),
+            "blocked_admissions": sum(st["blocked_admissions"]
+                                      for st in per),
+            "deferred_admissions": sum(st["deferred_admissions"]
+                                       for st in per),
+            "throughput_tok_s": (sum(st["fleet_tokens"] for st in per)
+                                 / max(max((st["uptime_s"]
+                                            for st in per), default=0.0),
+                                       1e-9)),
+            "fleet_j_per_token": (total_e
+                                  / max(sum(st["fleet_tokens"]
+                                            for st in per), 1)),
+            "power_w_ema_mean": (sum(st["power_w_ema"] for st in per)
+                                 / n),
+            "power_w_ema_max": max((st["power_w_ema"] for st in per),
+                                   default=0.0),
+            # load-balance quality: the hottest replica's share of fleet
+            # energy (1/N is perfect balance; rr drifts above it under
+            # heterogeneous load, the energy policy pulls it back down)
+            "max_replica_energy_share": (max(energies) / total_e
+                                         if total_e > 0 else 0.0),
+            "latency_p95_s": max((st["latency_p95_s"] for st in per
+                                  if st["latency_p95_s"] is not None),
+                                 default=None),
+            "rebalanced_requests": rebalanced,
+            "prefix_homes": prefix_homes,
+        }
+        return {"placement": self.placement_name,
+                "replicas": len(per),
+                "fleet": fleet,
+                "per_replica": per}
+
+    def prometheus(self, prefix: str = "repro_") -> str:
+        """Per-replica-labeled Prometheus exposition (``GET /metrics``)."""
+        st = self.stats()
+        with self._lock:
+            reps = sorted(self._replicas.items())
+        replicas = []
+        for (rid, rep), rst in zip(reps, st["per_replica"]):
+            obs = rep.scheduler.obs
+            replicas.append(({"replica": str(rid)}, rst,
+                             obs if obs.enabled else None))
+        return render_fleet_prometheus(st["fleet"], replicas,
+                                       prefix=prefix,
+                                       placement=self.placement_name)
+
+    def drain_events(self) -> list[dict]:
+        """Merged Chrome-trace events across replicas: replica ``r``'s
+        local thread ``t`` becomes tid ``r * TID_STRIDE + t``, with a
+        ``thread_name`` metadata event per replica so Perfetto labels
+        the track groups."""
+        with self._lock:
+            reps = sorted(self._replicas.items())
+        merged: list[dict] = []
+        for rid, rep in reps:
+            obs = rep.scheduler.obs
+            if not obs.enabled:
+                continue
+            merged.append({"ph": "M", "tid": rid * TID_STRIDE,
+                           "name": "thread_name",
+                           "args": {"name": f"replica-{rid}"}})
+            for ev in obs.drain():
+                ev = dict(ev)
+                ev["tid"] = rid * TID_STRIDE + int(ev.get("tid", 0))
+                if "id" in ev:
+                    # async (req-lifecycle) span ids are per-replica
+                    # sequences; scope them so request 3 on replica 0
+                    # and request 3 on replica 1 stay distinct spans
+                    ev["id"] = rid * 1_000_000 + int(ev["id"])
+                merged.append(ev)
+        return merged
+
+
+__all__ = ["Router", "FleetRequest", "ReplicaSnapshot", "PlacementPolicy",
+           "RoundRobin", "LeastQueue", "EnergyHeadroom", "make_placement",
+           "PLACEMENTS", "AFFINITY_SLACK", "TID_STRIDE"]

@@ -200,6 +200,7 @@ class Request:
     submitted_at: float = field(default_factory=time.monotonic)
 
     truncated: bool = False              # prompt tail-clipped at submit
+    replica_id: Optional[int] = None     # fleet: which replica serves it
     status: str = "queued"               # queued | running | done
     finish_reason: Optional[str] = None  # eos | length | stop | energy_budget
     tokens: list[int] = field(default_factory=list)
@@ -436,6 +437,7 @@ class Scheduler:
         self._seq = 0
         self._running = False
         self._stopped = False     # set once, by stop() or a loop crash
+        self._draining = False    # begin_drain(): no new admissions
         self._thread: Optional[threading.Thread] = None
 
         # fleet accounting. The window counters below reset on
@@ -458,6 +460,7 @@ class Scheduler:
         self._spec_accepted = 0
         self._spec_emitted = 0
         self._power_w_ema = 0.0
+        self._power_ema_t = time.monotonic()
         self._exit_layer_ema = float(cfg.num_layers)
         self._latencies: list[float] = []
         self._ecache: dict[int, np.ndarray] = {}
@@ -591,6 +594,76 @@ class Scheduler:
             self._thread.join(timeout)
             self._thread = None
 
+    def begin_drain(self) -> None:
+        """Stop taking new work (``submit`` raises
+        :class:`SchedulerQueueFull`); everything already queued or
+        in-flight keeps running. First half of a graceful shutdown —
+        :meth:`drain` is the blocking second half."""
+        with self._work:
+            self._draining = True
+            self._work.notify_all()
+
+    def take_queued(self) -> list[Request]:
+        """Steal every queued-but-unstarted request (for a fleet router to
+        rebalance onto other replicas). The stolen requests are NOT
+        failed — the caller owns resubmitting them; their handles stay
+        pending meanwhile. Call :meth:`begin_drain` first or the queue
+        may refill behind the steal."""
+        with self._work:
+            stolen, self._queue = self._queue, []
+        return stolen
+
+    def drain(self, timeout: float = 30.0, poll_s: float = 0.005) -> bool:
+        """Graceful shutdown: :meth:`begin_drain`, wait (bounded by
+        ``timeout``) until queued + in-flight requests all complete, then
+        :meth:`stop`. Returns True when everything finished in time;
+        False means the deadline hit and the leftovers were failed with
+        the abrupt ``_drain`` path."""
+        self.begin_drain()
+        deadline = time.monotonic() + max(timeout, 0.0)
+        clean = True
+        if self._thread is not None:        # never-started: nothing in flight
+            while time.monotonic() < deadline:
+                with self._lock:
+                    idle = (not self._queue and self._admitting is None
+                            and self._prefill_job is None
+                            and self.pool.n_used == 0)
+                if idle or not self._running:
+                    break
+                time.sleep(poll_s)
+            else:
+                clean = False
+        with self._lock:
+            clean = clean and not self._queue and self.pool.n_used == 0
+        self.stop()
+        return clean
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def placement_snapshot(self) -> dict:
+        """The cheap, lock-consistent subset of :meth:`stats` a fleet
+        router needs per placement decision.
+
+        The reported EMA is decayed by the time since the last decode
+        tick touched it — an idle loop stops blending, and a frozen-high
+        EMA would otherwise repel placements forever (one cool replica
+        then absorbs an entire paced workload). ``0.9 ** idle_seconds``
+        is the continuous analog of the zero-power 0.9 blend an idle
+        tick would apply; the gate's own `_power_w_ema` is untouched."""
+        idle_s = max(time.monotonic() - self._power_ema_t, 0.0)
+        with self._lock:
+            return {
+                "queue_depth": len(self._queue),
+                "active_slots": self.pool.n_used,
+                "prefilling": self._prefill_job is not None,
+                "power_w_ema": self._power_w_ema * 0.9 ** min(idle_s, 60.0),
+                "power_budget_w": self.power_budget_w,
+                "blocked_admissions": self._blocked_admissions,
+                "energy_j": self._fleet_energy_j,
+            }
+
     def __enter__(self) -> "Scheduler":
         return self.start()
 
@@ -714,6 +787,11 @@ class Scheduler:
                 # queuing before start() is fine; after stop()/a loop crash
                 # nothing will ever drain the queue — fail fast
                 raise RuntimeError("scheduler is stopped")
+            if self._draining:
+                # graceful drain: already-queued work finishes, new work is
+                # turned away (a fleet router retries it on a live replica;
+                # the HTTP server maps this onto 503)
+                raise SchedulerQueueFull("scheduler is draining")
             if len(self._queue) >= self.queue_depth:
                 raise SchedulerQueueFull(
                     f"admission queue full ({self.queue_depth})")
@@ -748,7 +826,7 @@ class Scheduler:
                                                controller=controller))
                     break
                 except SchedulerQueueFull:
-                    if not self._running:
+                    if not self._running or self._draining:
                         raise
                     if deadline is not None and time.monotonic() > deadline:
                         raise TimeoutError("queue stayed full past timeout")
@@ -840,6 +918,7 @@ class Scheduler:
                         return
                     self._deferred_admissions += 1
                 self._power_w_ema *= 0.95
+                self._power_ema_t = time.monotonic()
                 time.sleep(0.005)
                 return
             with self._lock:
@@ -948,6 +1027,7 @@ class Scheduler:
                 self._fleet_prefill_j += e
             dt = max(time.monotonic() - t_start, 1e-6)
             self._power_w_ema = 0.9 * self._power_w_ema + 0.1 * (e / dt)
+            self._power_ema_t = time.monotonic()
             job.next_pos = c0 + C
             if job.next_pos >= job.plen:
                 self._prefill_job = None
@@ -1084,6 +1164,7 @@ class Scheduler:
         dt = max(time.monotonic() - t_start, 1e-6)
         self._power_w_ema = (0.9 * self._power_w_ema
                              + 0.1 * (tick_energy / dt))
+        self._power_ema_t = time.monotonic()
 
     def _spec_tick(self) -> None:
         """Draft-then-verify super-tick (>= 1 speculative resident).
@@ -1228,6 +1309,7 @@ class Scheduler:
         dt = max(time.monotonic() - t_start, 1e-6)
         self._power_w_ema = (0.9 * self._power_w_ema
                              + 0.1 * (tick_energy / dt))
+        self._power_ema_t = time.monotonic()
 
     def _account_token(self, req: Request, token: int, slot: int,
                        energy_j: Optional[float] = None,
@@ -1432,6 +1514,7 @@ class Scheduler:
             return {
                 "queue_depth": len(self._queue),
                 "queue_capacity": self.queue_depth,
+                "draining": self._draining,
                 "active_slots": self.pool.n_used,
                 "peak_active_slots": self._peak_active,
                 "free_slots": self.pool.n_free,

@@ -42,6 +42,15 @@ same fixed-shape batch as everyone else's.
   Unknown GET paths return 404. ``--no-trace`` disables span collection
   (the no-op tracer path); /metrics then serves stats gauges only.
 
+  ``--replicas N --placement {rr,least_queue,energy}`` serves a
+  data-parallel fleet (repro.serving.fleet): N independent scheduler
+  replicas behind one placement router. GET /queue then adds a
+  ``per_replica`` breakdown, /metrics labels series ``{replica="i"}``,
+  and /trace merges the replicas into one log (replica = tid group).
+  Shutdown is graceful either way: admissions stop (new POSTs get 503),
+  in-flight requests — including open NDJSON streams — run to
+  completion bounded by ``--drain-timeout``, then the decode loops stop.
+
   PYTHONPATH=src python -m repro.serving.server --port 8799   # mini demo
 """
 from __future__ import annotations
@@ -54,12 +63,13 @@ from repro.api import GenerationRequest, PolicySpec, SamplingParams
 from repro.core import exit_policy
 from repro.obs import (PROM_CONTENT_TYPE, Tracer, render_prometheus,
                        to_chrome_trace)
+from repro.serving.fleet import PLACEMENTS, Router
 from repro.serving.metrics import aggregate_metrics
 from repro.serving.scheduler import Scheduler, SchedulerQueueFull
 
 
 class _State:
-    scheduler: Scheduler = None
+    scheduler = None          # a Scheduler, or a fleet Router (duck-typed)
     tokenizer = None
     params = None
     cfg = None
@@ -250,28 +260,41 @@ class Handler(BaseHTTPRequestHandler):
 
     def do_GET(self):
         path = self.path.split("?")[0].rstrip("/")
+        sched = _State.scheduler
+        fleet = isinstance(sched, Router)
         if path == "/queue":
-            self._send(200, _State.scheduler.stats())
+            # fleet mode: stats() carries the aggregate plus a per-replica
+            # breakdown (queue depth, active slots, power EMA, blocked
+            # admissions — the router's placement inputs)
+            self._send(200, sched.stats())
         elif path == "/metrics":
-            sched = _State.scheduler
-            tracer = sched.obs if sched.obs.enabled else None
-            self._send_text(200, render_prometheus(sched.stats(), tracer),
-                            PROM_CONTENT_TYPE)
+            if fleet:
+                body = sched.prometheus()      # per-replica-labeled series
+            else:
+                tracer = sched.obs if sched.obs.enabled else None
+                body = render_prometheus(sched.stats(), tracer)
+            self._send_text(200, body, PROM_CONTENT_TYPE)
         elif path == "/trace":
-            # drains the tracer: each GET returns the events collected
-            # since the previous one (counters/histograms stay cumulative)
-            events = _State.scheduler.obs.drain()
+            # drains the tracer(s): each GET returns the events collected
+            # since the previous one (counters/histograms stay cumulative);
+            # fleet mode merges replicas into one log, replica = tid group
+            events = sched.drain_events() if fleet else sched.obs.drain()
             self._send(200, to_chrome_trace(events))
         elif path == "":
+            if fleet:
+                st = sched.stats()
+                info = {"replicas": st["replicas"],
+                        "placement": st["placement"],
+                        "max_slots": st["fleet"]["max_slots"],
+                        "tracing": sched.tracing}
+            else:
+                info = {"max_slots": sched.pool.max_slots,
+                        "kv_layout": sched.kv_layout,
+                        "tracing": sched.obs.enabled,
+                        "controllers": sorted(sched.allowed_kinds)}
             self._send(200, {"status": "ok", "model": _State.cfg.name,
                              "num_layers": _State.cfg.num_layers,
-                             "scheduler": {
-                                 "max_slots":
-                                     _State.scheduler.pool.max_slots,
-                                 "kv_layout": _State.scheduler.kv_layout,
-                                 "tracing": _State.scheduler.obs.enabled,
-                                 "controllers":
-                                     sorted(_State.scheduler.allowed_kinds)}})
+                             "scheduler": info})
         else:
             self._send(404, {"error": "unknown path"})
 
@@ -281,7 +304,8 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
                power_budget_w: float = None, kv_layout: str = "paged",
                block_size: int = 16, num_blocks: int = None,
                spec_window: int = 4, prefill_chunk: int = 32,
-               trace: bool = True):
+               trace: bool = True, replicas: int = 1,
+               placement: str = "energy"):
     """Build a mini model + agent and start the scheduler (CPU demo).
 
     Default KV layout is **paged**: admission is gated on free cache
@@ -311,21 +335,43 @@ def setup_mini(train_steps: int = 60, rl: bool = True, *,
     kinds = ["none", "confidence", "entropy", "fixed", "speculative"]
     if agent is not None:
         kinds.append("policy")
-    _State.scheduler = Scheduler(
-        params, cfg, agent_params=agent,
-        controller_kind="policy" if agent is not None else "none",
-        allowed_kinds=kinds, tokenizer=ds.tokenizer,
-        max_slots=max_slots, max_len=max_len,
-        # arbitrary user text: chunked prefill compiles ONE prompt shape
-        # for every length and interleaves prompt chunks with decode
-        # ticks (prefill_chunk is the TTFT-vs-overhead dial; the old
-        # prefill_buckets knob is a deprecation shim)
-        prefill_chunk=prefill_chunk,
-        power_budget_w=power_budget_w, kv_layout=kv_layout,
-        block_size=block_size, num_blocks=num_blocks,
-        spec_window=spec_window,
-        tracer=Tracer(enabled=trace)).start()
+
+    def make_scheduler(_rid: int = 0) -> Scheduler:
+        return Scheduler(
+            params, cfg, agent_params=agent,
+            controller_kind="policy" if agent is not None else "none",
+            allowed_kinds=kinds, tokenizer=ds.tokenizer,
+            max_slots=max_slots, max_len=max_len,
+            # arbitrary user text: chunked prefill compiles ONE prompt
+            # shape for every length and interleaves prompt chunks with
+            # decode ticks (prefill_chunk is the TTFT-vs-overhead dial;
+            # the old prefill_buckets knob is a deprecation shim)
+            prefill_chunk=prefill_chunk,
+            power_budget_w=power_budget_w, kv_layout=kv_layout,
+            block_size=block_size, num_blocks=num_blocks,
+            spec_window=spec_window,
+            tracer=Tracer(enabled=trace))
+
+    if replicas > 1:
+        # fleet mode: N independent replicas (own KV pool, decode thread
+        # and power gate each) behind the placement-policy router
+        _State.scheduler = Router(make_scheduler, n_replicas=replicas,
+                                  placement=placement).start()
+    else:
+        _State.scheduler = make_scheduler().start()
     return cfg, ds
+
+
+def shutdown(drain_timeout: float = 30.0) -> bool:
+    """Graceful server shutdown: stop admissions (new POSTs get 503),
+    let queued + in-flight requests run to completion — open NDJSON
+    streams emit their remaining tokens and final metrics record — then
+    stop the decode loop(s). Bounded by ``drain_timeout``; leftovers past
+    the deadline are failed. Returns True on a clean (complete) drain."""
+    sched = _State.scheduler
+    if sched is None:
+        return True
+    return sched.drain(drain_timeout)
 
 
 def main():
@@ -353,20 +399,37 @@ def main():
     ap.add_argument("--no-trace", action="store_true",
                     help="disable tick-phase tracing (GET /trace returns "
                          "an empty trace; /metrics loses phase histograms)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel fleet: N independent scheduler "
+                         "replicas (own KV pool + decode thread each) "
+                         "behind one placement router")
+    ap.add_argument("--placement", choices=PLACEMENTS, default="energy",
+                    help="fleet request placement: round-robin, least "
+                         "queue depth, or power-gate energy headroom with "
+                         "prefix-cache affinity")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="graceful-shutdown budget (seconds): stop "
+                         "admissions, let in-flight requests finish, then "
+                         "stop; leftovers past the deadline are failed")
     args = ap.parse_args()
     print("[server] preparing mini model ...")
     setup_mini(args.train_steps, rl=not args.no_rl, max_slots=args.slots,
                max_len=args.max_len, power_budget_w=args.power_budget_w,
                kv_layout=args.kv_layout, block_size=args.block_size,
                num_blocks=args.num_blocks, spec_window=args.spec_window,
-               prefill_chunk=args.prefill_chunk, trace=not args.no_trace)
+               prefill_chunk=args.prefill_chunk, trace=not args.no_trace,
+               replicas=args.replicas, placement=args.placement)
     srv = ThreadingHTTPServer(("127.0.0.1", args.port), Handler)
-    print(f"[server] listening on :{args.port} — POST /generate, "
+    mode = (f"{args.replicas} replicas, placement={args.placement}"
+            if args.replicas > 1 else "single scheduler")
+    print(f"[server] listening on :{args.port} ({mode}) — POST /generate, "
           f"GET /queue /metrics /trace")
     try:
         srv.serve_forever()
     finally:
-        _State.scheduler.stop()
+        print("[server] draining ...")
+        clean = shutdown(args.drain_timeout)
+        print(f"[server] drain {'complete' if clean else 'timed out'}")
 
 
 if __name__ == "__main__":

@@ -32,9 +32,11 @@ def test_docs_exist_and_are_linked():
     readme = (ROOT / "README.md").read_text()
     assert "docs/architecture.md" in readme
     assert "docs/speculative.md" in readme
+    assert "docs/fleet.md" in readme
     assert (ROOT / "docs" / "architecture.md").exists()
     assert (ROOT / "docs" / "speculative.md").exists()
     assert (ROOT / "docs" / "api.md").exists()
+    assert (ROOT / "docs" / "fleet.md").exists()
 
 
 def test_every_doc_has_executable_snippets():
@@ -43,6 +45,7 @@ def test_every_doc_has_executable_snippets():
     assert found["api.md"] >= 1
     assert found["architecture.md"] >= 1
     assert found["speculative.md"] >= 1
+    assert found["fleet.md"] >= 3
 
 
 @pytest.fixture(scope="module")

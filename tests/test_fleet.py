@@ -1,0 +1,416 @@
+"""Fleet serving: placement policies, the replica router, graceful
+lifecycle (spawn/drain/rebalance) and the routing-invariance property —
+per-request output is bit-identical no matter which replica serves it.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import SamplingParams
+from repro.obs import Tracer, validate_chrome_trace, validate_exposition
+from repro.serving import Router, Scheduler, SchedulerQueueFull
+from repro.serving.fleet import (AFFINITY_SLACK, TID_STRIDE, EnergyHeadroom,
+                                 LeastQueue, ReplicaSnapshot, RoundRobin,
+                                 make_placement)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    from repro.configs.llama32_3b import paper_mini
+    return paper_mini(num_layers=4, d_model=64, vocab_size=256)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    import jax
+
+    from repro.models import transformer as T
+    return T.init_params(jax.random.PRNGKey(0), tiny_cfg)
+
+
+def _snap(rid, queue=0, active=0, ema=0.0, budget=None, prefilling=False):
+    return ReplicaSnapshot(replica_id=rid, queue_depth=queue,
+                           active_slots=active, prefilling=prefilling,
+                           power_w_ema=ema, power_budget_w=budget)
+
+
+# ---------------------------------------------------------------------------
+# placement policies (pure — no schedulers)
+# ---------------------------------------------------------------------------
+def test_round_robin_cycles_over_snapshot_order():
+    pol = RoundRobin()
+    snaps = [_snap(0), _snap(2), _snap(5)]
+    assert [pol.choose(snaps) for _ in range(6)] == [0, 2, 5, 0, 2, 5]
+
+
+def test_least_queue_counts_queue_active_and_prefill():
+    pol = LeastQueue()
+    assert pol.choose([_snap(0, queue=2), _snap(1, queue=1, active=2)]) == 0
+    # prefill stream in flight counts as one unit of load
+    assert pol.choose([_snap(0, queue=1), _snap(1, active=1,
+                                                prefilling=True)]) == 0
+    # ties break to the lowest replica id
+    assert pol.choose([_snap(1, queue=1), _snap(0, queue=1)]) == 0
+
+
+def test_energy_routes_to_most_headroom():
+    pol = EnergyHeadroom()
+    # budgets set: headroom = budget - committed power
+    assert pol.choose([_snap(0, active=1, ema=9.0, budget=10.0),
+                       _snap(1, active=1, ema=2.0, budget=10.0)]) == 1
+    # no budget: most headroom = coolest committed power
+    assert pol.choose([_snap(0, active=1, ema=1.0),
+                       _snap(1, active=1, ema=3.0)]) == 0
+
+
+def test_energy_committed_power_sees_through_the_lagging_ema():
+    """The EMA is a lagging signal: a replica with a deep queue still
+    reads cool until that work starts decoding. Committed power projects
+    each queued request at the cost of a current resident, so the
+    raw-EMA-cooler-but-deeply-queued replica must LOSE the placement."""
+    pol = EnergyHeadroom()
+    cool_but_queued = _snap(0, queue=4, active=1, ema=2.0)   # -> 10 W
+    warm_but_empty = _snap(1, queue=0, active=1, ema=3.0)    # ->  3 W
+    assert cool_but_queued.committed_power_w == pytest.approx(10.0)
+    assert warm_but_empty.committed_power_w == pytest.approx(3.0)
+    assert pol.choose([cool_but_queued, warm_but_empty]) == 1
+
+
+def test_energy_idle_fleet_balances_cumulative_joules():
+    """Under paced arrivals the whole fleet reads idle at routing time:
+    the EMAs carry decayed residue, not signal, and chasing them herds
+    the entire workload onto one replica. A fully idle fleet must
+    balance the window's cumulative joules (coolest history wins); any
+    live work anywhere must flip back to committed-power headroom."""
+    pol = EnergyHeadroom()
+    # everything idle: the replica that burned less this window wins,
+    # even though its EMA residue reads warmer right now
+    warm_residue_but_rested = _snap(0, ema=1.1)
+    cool_residue_but_worked = _snap(1, ema=1.0)
+    warm_residue_but_rested.energy_j = 5.0
+    cool_residue_but_worked.energy_j = 25.0
+    assert pol.choose([warm_residue_but_rested,
+                       cool_residue_but_worked]) == 0
+    # one live resident anywhere: headroom decides again, and any
+    # cumulative-joules deficit is irrelevant
+    busy = _snap(0, active=1, ema=3.0)
+    idle = _snap(1, ema=1.0)
+    idle.energy_j = 1000.0
+    assert pol.choose([busy, idle]) == 1
+
+
+def test_scheduler_snapshot_decays_stale_ema_while_idle():
+    """The power EMA only blends on decode ticks, so an idle scheduler's
+    EMA freezes at whatever it last burned — placement_snapshot must
+    report it decayed by the idle time, or a frozen-high warmup EMA
+    repels placements forever."""
+    import time as _time
+
+    from repro.serving.scheduler import Scheduler as _S
+
+    sched = object.__new__(_S)                 # snapshot-only fields
+    sched._lock = __import__("threading").Lock()
+    sched._queue = []
+    sched._prefill_job = None
+    sched._blocked_admissions = 0
+    sched._fleet_energy_j = 0.0
+    sched.power_budget_w = None
+    sched.pool = type("P", (), {"n_used": 0})()
+    sched._power_w_ema = 50.0
+    sched._power_ema_t = _time.monotonic()
+    fresh = sched.placement_snapshot()["power_w_ema"]
+    assert fresh == pytest.approx(50.0, rel=0.01)
+    sched._power_ema_t = _time.monotonic() - 30.0       # 30 s idle
+    stale = sched.placement_snapshot()["power_w_ema"]
+    assert stale < 50.0 * 0.9 ** 29
+    assert sched._power_w_ema == 50.0          # the gate's own EMA is untouched
+
+
+def test_energy_cold_fleet_ties_break_to_least_loaded():
+    """Before any EMA diverges (a cold fleet) every headroom is equal —
+    placements must still spread by load instead of pinning replica 0."""
+    pol = EnergyHeadroom()
+    assert pol.choose([_snap(0, queue=1), _snap(1), _snap(2, queue=2)]) == 1
+
+
+def test_energy_affinity_wins_within_slack_only():
+    pol = EnergyHeadroom()
+    snaps = [_snap(0, active=1, ema=10.0), _snap(1, active=1, ema=11.0)]
+    # replica 1's headroom (-11) is within 25% of the best (-10): the
+    # warm prefix pulls the request home
+    assert pol.choose(snaps, prefix_home=1) == 1
+    # far outside the slack band the affinity must NOT override
+    snaps = [_snap(0, active=1, ema=10.0),
+             _snap(1, active=1, ema=10.0 * (1 + AFFINITY_SLACK) + 1.0)]
+    assert pol.choose(snaps, prefix_home=1) == 0
+    # a home that drained away is ignored
+    assert pol.choose(snaps, prefix_home=7) == 0
+
+
+def test_make_placement_factory():
+    assert isinstance(make_placement("rr"), RoundRobin)
+    assert isinstance(make_placement("least_queue"), LeastQueue)
+    assert isinstance(make_placement("energy"), EnergyHeadroom)
+    # fresh state per instance (rr carries a cursor)
+    assert make_placement("rr") is not make_placement("rr")
+    with pytest.raises(ValueError, match="unknown placement"):
+        make_placement("wat")
+
+
+# ---------------------------------------------------------------------------
+# virtual-clock fleet trace (deterministic, CI hard-gates it)
+# ---------------------------------------------------------------------------
+def test_fleet_trace_deterministic_and_energy_beats_rr(tiny_cfg):
+    """Two replays of the routing trace must be byte-identical per policy
+    (pure function of workload + geometry + policy: no wall clock), and
+    the energy-headroom policy must end with a lower max-replica energy
+    share than cost-blind round-robin on the class-mixed workload."""
+    from benchmarks.serving_load import run_fleet_trace
+    kw = dict(n_replicas=2, slots=1, n=32, seed=0)
+    a = run_fleet_trace(tiny_cfg, **kw)
+    b = run_fleet_trace(tiny_cfg, **kw)
+    for policy in ("rr", "least_queue", "energy"):
+        assert a[policy] == b[policy], \
+            f"{policy} fleet trace is not deterministic"
+        ev = a[policy]["events"]
+        for kind in ("route", "admit", "retire"):
+            assert sum(1 for e in ev if e[1] == kind) == 32, (policy, kind)
+        assert all(e[3] in (0, 1) for e in ev)
+        share = a[policy]["max_replica_energy_share"]
+        assert 0.5 <= share <= 1.0          # 2 replicas: 0.5 is perfect
+    assert a["energy_beats_rr"], (
+        a["energy"]["max_replica_energy_share"],
+        a["rr"]["max_replica_energy_share"])
+
+
+# ---------------------------------------------------------------------------
+# live router (shared 2-replica fleet)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def router(tiny_params, tiny_cfg):
+    def make_scheduler(rid):
+        return Scheduler(tiny_params, tiny_cfg, controller_kind="fixed",
+                         fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                         max_slots=2, max_len=64, max_new=8,
+                         queue_depth=16, tracer=Tracer())
+    r = Router(make_scheduler, n_replicas=2, placement="energy").start()
+    yield r
+    r.stop()
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, vocab, size=n).tolist() for n in lens]
+
+
+def test_router_serves_and_spreads_a_cold_fleet(router, tiny_cfg):
+    handles = [router.submit(p, max_new=4)
+               for p in _prompts(tiny_cfg.vocab_size, [8, 10, 12, 14])]
+    for h in handles:
+        h.result(timeout=120.0)
+        assert len(h.tokens) == 4
+        assert h.replica_id in (0, 1)
+        assert not h.rebalanced
+    # the cold-fleet load tiebreak must have used both replicas
+    assert {h.replica_id for h in handles} == {0, 1}
+    # distinct fleet ids, monotonic submission order
+    ids = [h.fleet_id for h in handles]
+    assert ids == sorted(ids) and len(set(ids)) == 4
+
+
+def test_submit_pinned_replica(router, tiny_cfg):
+    p = _prompts(tiny_cfg.vocab_size, [9], seed=3)[0]
+    h = router.submit(p, max_new=2, replica_id=1)
+    h.result(timeout=120.0)
+    assert h.replica_id == 1
+    with pytest.raises(KeyError):
+        router.submit(p, max_new=2, replica_id=99)
+
+
+def test_fleet_request_stream_survives_delegation(router, tiny_cfg):
+    p = _prompts(tiny_cfg.vocab_size, [11], seed=4)[0]
+    h = router.submit(p, max_new=5)
+    toks = list(h.stream(timeout=120.0))
+    h.result(timeout=10.0)
+    assert toks == list(h.tokens) and len(toks) == 5
+    # __getattr__ delegation to the inner Request
+    assert h.status == "done" and h.energy_j > 0
+
+
+def test_fleet_stats_sections_and_aggregates(router):
+    st = router.stats()
+    assert st["placement"] == "energy"
+    assert st["replicas"] == 2
+    per = st["per_replica"]
+    assert [p["replica_id"] for p in per] == [0, 1]
+    for p in per:
+        assert p["draining"] is False
+        assert p["routed"] >= 1
+        assert {"queue_depth", "active_slots", "power_w_ema",
+                "blocked_admissions"} <= set(p)
+    fl = st["fleet"]
+    assert fl["max_slots"] == sum(p["max_slots"] for p in per) == 4
+    assert fl["fleet_tokens"] == sum(p["fleet_tokens"] for p in per) > 0
+    assert fl["fleet_energy_j"] == pytest.approx(
+        sum(p["fleet_energy_j"] for p in per))
+    assert 0.5 <= fl["max_replica_energy_share"] <= 1.0
+    assert fl["completed_requests"] == sum(p["completed_requests"]
+                                           for p in per)
+    assert fl["rebalanced_requests"] == 0
+    assert fl["throughput_tok_s"] > 0 and fl["fleet_j_per_token"] > 0
+
+
+def test_fleet_prometheus_labeled_series_validate(router):
+    text = router.prometheus()
+    summ = validate_exposition(text, {
+        "repro_fleet_fleet_tokens", "repro_fleet_queue_depth",
+        "repro_fleet_max_replica_energy_share", "repro_fleet_placement_info",
+        "repro_queue_depth", "repro_completed_requests",
+        "repro_phase_seconds", "repro_events_total"})
+    assert summ["lines"] > 20
+    assert 'repro_queue_depth{replica="0"}' in text
+    assert 'repro_queue_depth{replica="1"}' in text
+    assert 'repro_fleet_placement_info{placement="energy"} 1' in text
+    assert 'repro_phase_seconds_bucket{replica="0",phase="decode_step"' \
+        in text
+    # the validator rejects duplicate series, so one pass over the fleet
+    # exposition is also the no-collision proof for the label scheme
+    assert text.count("# TYPE repro_queue_depth ") == 1
+
+
+def test_fleet_merged_trace_has_replica_tid_groups(router, tiny_cfg):
+    for p in _prompts(tiny_cfg.vocab_size, [8, 8], seed=5):
+        router.submit(p, max_new=2).result(timeout=120.0)
+    events = router.drain_events()
+    summ = validate_chrome_trace({"traceEvents": events},
+                                 allow_partial=True)
+    assert {"tick", "decode_step"} <= set(summ["span_names"])
+    names = {(e["tid"], e["args"]["name"]) for e in events
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert {(0, "replica-0"), (TID_STRIDE, "replica-1")} <= names
+    tids = {e["tid"] for e in events if e.get("ph") != "M"}
+    assert any(t < TID_STRIDE for t in tids)          # replica 0's tracks
+    assert any(t >= TID_STRIDE for t in tids)         # replica 1's tracks
+    # drain semantics match the single tracer: a second drain is ~empty
+    assert len(router.drain_events()) < len(events)
+
+
+# ---------------------------------------------------------------------------
+# routing invariance: output never depends on where a request runs
+# ---------------------------------------------------------------------------
+def test_routing_invariance_bit_identical_outputs(tiny_params, tiny_cfg):
+    """The fleet contract GREEN-CODE's serving story leans on: sampling
+    is keyed by (request seed, position) — never by batch composition or
+    replica identity — so the SAME requests produce bit-identical tokens
+    and logprobs on a solo scheduler and under every placement policy and
+    replica count."""
+    prompts = _prompts(tiny_cfg.vocab_size, [8, 12, 10, 14, 9, 13], seed=7)
+    sampls = [SamplingParams(temperature=0.8, top_k=8, seed=100 + i)
+              for i in range(len(prompts))]
+
+    def serve(sched):
+        hs = [sched.submit(p, max_new=6, sampling=s)
+              for p, s in zip(prompts, sampls)]
+        out = []
+        for h in hs:
+            h.result(timeout=120.0)
+            out.append((list(h.tokens), list(h.logprobs)))
+        return out
+
+    def make_scheduler(rid=0):
+        return Scheduler(tiny_params, tiny_cfg, controller_kind="fixed",
+                         fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                         max_slots=2, max_len=64, max_new=8, queue_depth=16)
+
+    solo = make_scheduler().start()
+    try:
+        want = serve(solo)
+    finally:
+        solo.stop()
+    fleets = [("rr", 2), ("least_queue", 2), ("energy", 2), ("energy", 3)]
+    for placement, n_replicas in fleets:
+        router = Router(make_scheduler, n_replicas=n_replicas,
+                        placement=placement).start()
+        try:
+            got = serve(router)
+        finally:
+            router.stop()
+        assert got == want, (placement, n_replicas)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: spawn, drain, rebalance
+# ---------------------------------------------------------------------------
+def test_drain_replica_rebalances_queued_requests(tiny_params, tiny_cfg):
+    """Draining a replica steals its queued-but-unstarted requests and
+    resubmits them on the surviving replicas; the FleetRequest handles
+    rebind transparently and every request still completes."""
+    def make_scheduler(rid):
+        return Scheduler(tiny_params, tiny_cfg, controller_kind="fixed",
+                         fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                         max_slots=1, max_len=64, max_new=16,
+                         queue_depth=16)
+    router = Router(make_scheduler, n_replicas=2,
+                    placement="least_queue").start()
+    try:
+        prompts = _prompts(tiny_cfg.vocab_size, [8, 10, 12, 14], seed=9)
+        # pin everything to replica 0: one runs, the rest queue behind
+        # its single slot
+        handles = [router.submit(p, max_new=12, replica_id=0)
+                   for p in prompts]
+        moved = router.drain_replica(0, timeout=60.0)
+        assert moved >= 1, "nothing was queued when the drain started"
+        assert router.replica_ids == [1]
+        for h in handles:
+            h.result(timeout=120.0)
+            assert len(h.tokens) == 12
+        rebound = [h for h in handles if h.rebalanced]
+        assert len(rebound) == moved
+        assert all(h.replica_id == 1 for h in rebound)
+        assert router.stats()["fleet"]["rebalanced_requests"] == moved
+        # draining the last live replica is refused
+        with pytest.raises(ValueError, match="last live replica"):
+            router.drain_replica(1)
+        # spawn restores capacity under a fresh id
+        rid = router.spawn_replica()
+        assert rid == 2 and router.replica_ids == [1, 2]
+        h = router.submit(prompts[0], max_new=2, replica_id=2)
+        h.result(timeout=120.0)
+        assert len(h.tokens) == 2
+    finally:
+        router.stop()
+
+
+def test_router_graceful_drain_finishes_queued_work(tiny_params, tiny_cfg):
+    """Router.drain: admissions stop fleet-wide (submit -> queue-full,
+    the server's 503), but already-queued requests still run to
+    completion before the decode loops stop."""
+    def make_scheduler(rid):
+        return Scheduler(tiny_params, tiny_cfg, controller_kind="fixed",
+                         fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                         max_slots=1, max_len=64, max_new=8, queue_depth=8)
+    router = Router(make_scheduler, n_replicas=2, placement="rr").start()
+    prompts = _prompts(tiny_cfg.vocab_size, [8, 10, 12, 14], seed=11)
+    handles = [router.submit(p, max_new=6) for p in prompts]
+    done = threading.Event()
+    result = {}
+
+    def drainer():
+        result["clean"] = router.drain(timeout=60.0)
+        done.set()
+
+    threading.Thread(target=drainer, daemon=True).start()
+    # the drain begins immediately; new work is turned away while queued
+    # work keeps decoding
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline and len(router) > 0:
+        time.sleep(0.005)
+    with pytest.raises((SchedulerQueueFull, RuntimeError)):
+        router.submit(prompts[0], max_new=1)
+    assert done.wait(90.0)
+    assert result["clean"] is True
+    for h in handles:
+        h.result(timeout=1.0)              # already finished by the drain
+        assert len(h.tokens) == 6 and h.status == "done"

@@ -289,6 +289,23 @@ def test_validate_exposition_rejects_garbage():
         validate_exposition("repro_x 1", {"repro_absent_family"})
 
 
+def test_validate_exposition_rejects_duplicate_series():
+    """Prometheus silently keeps one of two identical series — a renderer
+    bug (a fleet family emitted once per replica without a replica label)
+    must fail validation, not ship. Series identity is name + label SET:
+    label order must not disguise a duplicate."""
+    with pytest.raises(ValueError, match="duplicate series"):
+        validate_exposition("repro_x 1\nrepro_x 2")
+    with pytest.raises(ValueError, match="duplicate series"):
+        validate_exposition('repro_x{replica="0"} 1\n'
+                            'repro_x{replica="0"} 2')
+    with pytest.raises(ValueError, match="duplicate series"):
+        validate_exposition('repro_x{a="1",replica="0"} 1\n'
+                            'repro_x{replica="0",a="1"} 2')
+    # distinct label values are distinct series — the fleet layout
+    validate_exposition('repro_x{replica="0"} 1\nrepro_x{replica="1"} 2')
+
+
 # ---------------------------------------------------------------------------
 # the real thing: a traced serving run (also the CI fast-job gate)
 # ---------------------------------------------------------------------------

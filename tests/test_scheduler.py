@@ -448,3 +448,24 @@ def test_legacy_threshold_override_keeps_default_spec_params(mini_cfg,
         {"threshold": 0.7}                           # ctor default honored
     assert s2.submit(_prompts(mini_cfg.vocab_size, [8])[0],
                      threshold=0.55).spec.resolved() == {"threshold": 0.55}
+
+
+def test_graceful_drain_finishes_queued_work(mini_cfg, mini_params):
+    """begin_drain(): new submissions are turned away (SchedulerQueueFull —
+    the server's 503, the router's retry-elsewhere signal) while queued
+    and in-flight requests run to completion; drain() then returns True
+    once everything finished inside the budget."""
+    s = Scheduler(mini_params, mini_cfg, controller_kind="fixed",
+                  fixed_exit_idx=0, allowed_kinds=("none", "fixed"),
+                  max_slots=1, max_len=64, max_new=8, queue_depth=8).start()
+    prompts = _prompts(mini_cfg.vocab_size, [8, 10, 12])
+    handles = [s.submit(p, max_new=6) for p in prompts]
+    s.begin_drain()
+    assert s.draining
+    with pytest.raises(SchedulerQueueFull, match="draining"):
+        s.submit(prompts[0], max_new=1)
+    assert s.drain(timeout=60.0) is True
+    for h in handles:
+        h.result(timeout=1.0)                # finished during the drain
+        assert len(h.tokens) == 6 and h.status == "done"
+    assert s.stats()["draining"] is True
