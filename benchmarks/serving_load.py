@@ -110,6 +110,7 @@ class Job:
     tokens: int = 0
     energy_j: float = 0.0
     latency_s: float = 0.0
+    ttft_s: float = None         # submit -> first token (scheduler path)
     result_tokens: list = None   # generated ids (spec-compare exactness)
 
 
@@ -167,6 +168,7 @@ def run_scheduler(sched: Scheduler, jobs: list[Job]) -> dict:
         # the draft+verify accounting, not the per-exit-layer model
         job.energy_j = h.energy_j
         job.latency_s = h.latency_s
+        job.ttft_s = h.ttft_s
         job.result_tokens = list(h.tokens)
     wall = time.monotonic() - t0
     return _summarize(jobs, wall)
@@ -994,6 +996,8 @@ def _summarize(jobs: list[Job], wall: float) -> dict:
     toks = sum(j.tokens for j in jobs)
     e = sum(j.energy_j for j in jobs)
     pct = latency_percentiles([j.latency_s for j in jobs])
+    # the engine path never sets ttft_s; latency_percentiles drops Nones
+    tpct = latency_percentiles([j.ttft_s for j in jobs])
     return {
         "requests": len(jobs),
         "useful_tokens": toks,
@@ -1001,6 +1005,8 @@ def _summarize(jobs: list[Job], wall: float) -> dict:
         "throughput_tok_s": toks / max(wall, 1e-9),
         "latency_p50_s": pct["p50_s"],
         "latency_p95_s": pct["p95_s"],
+        "ttft_p50_s": tpct["p50_s"],
+        "ttft_p95_s": tpct["p95_s"],
         "j_per_token": e / max(toks, 1),
     }
 

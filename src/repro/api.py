@@ -133,6 +133,10 @@ class GenerationResult:
     metrics: Any = None                # serving.metrics.RequestMetrics
     request_id: Optional[int] = None
     latency_s: Optional[float] = None
+    # serving-layer attribution (zero/None outside the scheduler paths):
+    # modeled prompt-ingestion joules and submit→first-token latency
+    prefill_energy_j: float = 0.0
+    ttft_s: Optional[float] = None
     # the serving layer silently kept only the tail of an over-long prompt
     # (pool geometry / max_context bound) — surfaced, never swallowed
     truncated: bool = False

@@ -1,0 +1,27 @@
+"""Energy-aware code-generation eval harness (pass-rate vs J/token).
+
+The paper's headline claim — large energy savings *without significantly
+affecting accuracy* — needs both axes measured on the same run. This
+package supplies the accuracy axis and joins it to the serving stack's
+per-request energy attribution:
+
+``tasks``    HumanEval-style completion tasks: a small vendored
+             deterministic set plus a JSONL loader for external suites.
+``sandbox``  subprocess checker: candidate programs run isolated in a
+             tempdir with timeouts and a write guard.
+``stats``    the unbiased pass@k estimator.
+``loadgen``  seeded Poisson arrival schedules for the HTTP driver.
+``runner``   two drivers with one report schema: a live HTTP client
+             (Poisson load against ``repro.serving.server``) and a
+             deterministic virtual-clock replay mirroring
+             ``benchmarks.serving_load.run_admission_trace``.
+``report``   frontier assembly + BENCH_eval.json emission.
+"""
+from repro.evals.report import (frontier, payload_bytes,  # noqa: F401
+                                payload_digest, write_bench)
+from repro.evals.runner import (EvalRunConfig, PolicyArm,  # noqa: F401
+                                default_arms, run_http, run_replay)
+from repro.evals.sandbox import CheckResult, check_completion  # noqa: F401
+from repro.evals.stats import pass_at_k  # noqa: F401
+from repro.evals.tasks import (EvalTask, load_jsonl,  # noqa: F401
+                               smoke_tasks, vendored_tasks)

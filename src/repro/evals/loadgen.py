@@ -1,0 +1,24 @@
+"""Seeded arrival-time generation for the HTTP eval driver.
+
+Kept separate from ``benchmarks.serving_load.make_workload`` on purpose:
+that generator interleaves arrival-gap and prompt draws from one RNG
+stream, and several CI gates (e.g. the fleet energy-vs-rr trace) are
+functions of that exact stream. The eval harness draws its own.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_times(n: int, rate_hz: float, seed: int = 0) -> np.ndarray:
+    """``n`` Poisson arrival offsets (seconds from t=0, sorted).
+
+    ``rate_hz <= 0`` degenerates to everything arriving at t=0 (a burst).
+    """
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if rate_hz <= 0:
+        return np.zeros(n, dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    return np.cumsum(gaps) - gaps[0] if n else np.zeros(0)

@@ -1,0 +1,61 @@
+"""Frontier assembly + BENCH_eval.json emission.
+
+The frontier is the paper's claim in one table: per exit-policy arm, the
+pass rate (pass@1 / pass@k) against mean J/token and TTFT p95, sorted by
+energy — "cheaper at the same accuracy" reads directly off adjacent rows.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+SCHEMA_VERSION = 1
+
+
+def frontier(run_report: dict) -> list:
+    """Rows of (arm, pass@k..., j_per_token, ttft_p95), sorted cheapest
+    first. ``run_report`` is a ``run_http`` / ``run_replay`` payload."""
+    unit = "s" if run_report.get("mode") == "http" else "ticks"
+    rows = []
+    for name, arm in run_report["arms"].items():
+        s = arm["summary"]
+        row = {"arm": name,
+               "j_per_token": s["j_per_token"],
+               "mean_exit_layer": s["mean_exit_layer"],
+               "tokens": s["tokens"],
+               f"ttft_p95_{unit}": s[f"ttft_p95_{unit}"]}
+        for k, v in s["pass_at"].items():
+            row[f"pass@{k}"] = v
+        rows.append(row)
+    rows.sort(key=lambda r: (r["j_per_token"], r["arm"]))
+    return rows
+
+
+def payload_bytes(run_report: dict) -> bytes:
+    """Canonical byte encoding of a run payload (the replay determinism
+    gate compares these across two invocations)."""
+    return json.dumps(run_report, sort_keys=True,
+                      separators=(",", ":")).encode()
+
+
+def payload_digest(run_report: dict) -> str:
+    return hashlib.sha256(payload_bytes(run_report)).hexdigest()
+
+
+def write_bench(path, http_report=None, replay_report=None) -> dict:
+    """Assemble and write BENCH_eval.json. Either report may be absent
+    (e.g. a replay-only CI smoke); present ones get a frontier."""
+    if http_report is None and replay_report is None:
+        raise ValueError("need at least one of http_report/replay_report")
+    bench: dict = {"bench": "code_eval", "schema_version": SCHEMA_VERSION}
+    if http_report is not None:
+        bench["http"] = http_report
+        bench["frontier"] = frontier(http_report)
+    if replay_report is not None:
+        bench["replay"] = replay_report
+        bench["replay_frontier"] = frontier(replay_report)
+        bench["replay_digest"] = payload_digest(replay_report)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return bench

@@ -1,0 +1,459 @@
+"""Two eval drivers, one report schema.
+
+``run_http``
+    Live client: per-sample threads POST streaming ``/generate`` requests
+    against a running ``repro.serving.server`` at seeded Poisson arrival
+    offsets, measure wall-clock TTFT at the first NDJSON token line, take
+    per-request energy from the final metrics record, and cross-join the
+    scheduler's ``req/*`` lifecycle spans from ``GET /trace`` for the
+    attribution audit trail.
+
+``run_replay``
+    Deterministic mode mirroring ``benchmarks.serving_load.
+    run_admission_trace``: completions are generated *sequentially*
+    through one in-process scheduler (exactly one resident at a time, so
+    tokens / exit layers / joules are independent of co-residency — the
+    speculative window and the sampling streams see a fixed batch), and
+    timing comes from an integer virtual clock (job i arrives at tick i,
+    one chunked prefill in flight, 1 token per resident per tick). The
+    payload contains no wall-clock value, so two replays of the same
+    config are byte-identical — CI hard-gates on that.
+
+Both emit the same per-arm summary: per-task pass counts, pass@k, token
+and joule totals, J/token, TTFT p95 (seconds live, ticks replayed).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from collections import Counter
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.api import GenerationRequest, PolicySpec, SamplingParams
+from repro.evals.loadgen import poisson_times
+from repro.evals.sandbox import check_completion
+from repro.evals.stats import pass_at_k
+from repro.serving.metrics import latency_percentiles
+
+SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Arms and config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PolicyArm:
+    """One exit-policy configuration on the frontier.
+
+    ``policy`` is the JSON policy object the HTTP server accepts
+    (``{"name": ..., **params}``); :meth:`spec` is the same thing for the
+    in-process replay scheduler.
+    """
+    name: str
+    policy: dict = field(default_factory=lambda: {"name": "none"})
+
+    def spec(self) -> PolicySpec:
+        params = {k: float(v) for k, v in self.policy.items()
+                  if k != "name"}
+        return PolicySpec(str(self.policy["name"]), params)
+
+
+def default_arms(*, thresholds=(0.6, 0.8), fixed=(0,),
+                 speculative: bool = True,
+                 spec_window: int = 4) -> tuple[PolicyArm, ...]:
+    """baseline + early-exit sweep (fixed anchor + confidence
+    thresholds) + speculative. The fixed-exit anchor always exits at its
+    exit point, so the frontier has a guaranteed lower-J/token row even
+    for models whose confidence never crosses a threshold; the model
+    needs >= 1 exit point (``core.exit_points``) for any non-baseline
+    arm to differ."""
+    arms = [PolicyArm("baseline", {"name": "none"})]
+    arms += [PolicyArm(f"fixed@{i}", {"name": "fixed", "exit_idx": float(i)})
+             for i in fixed]
+    arms += [PolicyArm(f"confidence@{t:g}",
+                       {"name": "confidence", "threshold": float(t)})
+             for t in thresholds]
+    if speculative:
+        arms.append(PolicyArm("speculative",
+                              {"name": "speculative", "draft_idx": 0,
+                               "window": float(spec_window)}))
+    return tuple(arms)
+
+
+@dataclass(frozen=True)
+class EvalRunConfig:
+    """Knobs shared by both drivers. Seeds are derived per (task, sample)
+    so a sample's draw stream never depends on suite composition."""
+    n_samples: int = 1
+    ks: tuple = (1, 10)
+    temperature: float = 0.0          # <= 0: greedy (n_samples should be 1)
+    top_p: float = 1.0
+    seed: int = 0
+    rate_hz: float = 8.0              # HTTP driver Poisson arrival rate
+    check_timeout_s: float = 10.0
+    request_timeout_s: float = 300.0
+
+    def sample_seed(self, task_idx: int, sample_idx: int) -> int:
+        return (self.seed * 100003 + task_idx * 1009 + sample_idx) % (2**31)
+
+
+# ---------------------------------------------------------------------------
+# Shared aggregation
+# ---------------------------------------------------------------------------
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode("utf-8", "surrogatepass")).hexdigest()
+
+
+def _aggregate_arm(arm: PolicyArm, tasks, samples: list, cfg: EvalRunConfig,
+                   ttfts: list, ttft_unit: str) -> dict:
+    """Fold per-sample records into the arm summary both drivers share."""
+    per_task: dict = {}
+    for t in tasks:
+        per_task[t.task_id] = {"n": 0, "c": 0}
+    tok = 0
+    e_dec = 0.0
+    e_pre = 0.0
+    layer_sum = 0.0
+    statuses: Counter = Counter()
+    reasons: Counter = Counter()
+    for s in samples:
+        pt = per_task[s["task_id"]]
+        pt["n"] += 1
+        pt["c"] += int(s["status"] == "passed")
+        tok += s["tokens"]
+        e_dec += s["energy_j"]
+        e_pre += s["prefill_energy_j"]
+        layer_sum += s["mean_exit_layer"] * s["tokens"]
+        statuses[s["status"]] += 1
+        reasons[s["finish_reason"]] += 1
+    pass_at = {}
+    for k in cfg.ks:
+        vals = [pass_at_k(pt["n"], pt["c"], k)
+                for pt in per_task.values() if pt["n"]]
+        pass_at[str(k)] = float(np.mean(vals)) if vals else 0.0
+    pct = latency_percentiles(ttfts)
+    return {
+        "policy": dict(arm.policy),
+        "samples": len(samples),
+        "per_task": per_task,
+        "pass_at": pass_at,
+        "tokens": tok,
+        "decode_energy_j": e_dec,
+        "prefill_energy_j": e_pre,
+        "j_per_token": e_dec / max(tok, 1),
+        "mean_exit_layer": layer_sum / max(tok, 1),
+        "statuses": dict(sorted(statuses.items())),
+        "finish_reasons": dict(sorted(reasons.items())),
+        f"ttft_p50_{ttft_unit}": pct["p50_s"],
+        f"ttft_p95_{ttft_unit}": pct["p95_s"],
+    }
+
+
+def _flat_samples(tasks, cfg: EvalRunConfig):
+    """Deterministic submission order: tasks in suite order, samples
+    innermost. Yields (flat_idx, task_idx, task, sample_idx)."""
+    j = 0
+    for ti, t in enumerate(tasks):
+        for si in range(cfg.n_samples):
+            yield j, ti, t, si
+            j += 1
+
+
+# ---------------------------------------------------------------------------
+# Deterministic replay driver
+# ---------------------------------------------------------------------------
+def _virtual_clock(jobs, *, slots: int = 4, chunk: int = 16) -> dict:
+    """Integer virtual-clock timing for a list of (prompt_len, n_tokens)
+    jobs, mirroring ``run_admission_trace``: job i arrives at tick i, one
+    chunked prefill in flight at a time (shortest prompt first, id
+    tiebreak, ``ceil(plen/chunk)`` ticks), then 1 token per resident per
+    tick. TTFT is arrival → end of the job's last prefill chunk."""
+    n = len(jobs)
+    queue: list = []
+    prefill = None                    # [job_idx, chunks_left]
+    residents: dict = {}              # job_idx -> tokens left to emit
+    ttft = [None] * n
+    finish = [None] * n
+    events = []
+    done = 0
+    arrived = 0
+    for t in range(1_000_000):
+        if done == n:
+            break
+        while arrived < n and arrived <= t:
+            queue.append(arrived)
+            events.append([t, "arrive", arrived])
+            arrived += 1
+        if prefill is None and queue and len(residents) < slots:
+            queue.sort(key=lambda i: (jobs[i][0], i))
+            i = queue.pop(0)
+            prefill = [i, max(-(-jobs[i][0] // chunk), 1)]
+            events.append([t, "admit", i])
+        for i in sorted(residents):
+            residents[i] -= 1
+            if residents[i] == 0:
+                del residents[i]
+                finish[i] = t
+                events.append([t, "retire", i])
+                done += 1
+        if prefill is not None:
+            prefill[1] -= 1
+            if prefill[1] == 0:
+                i, prefill = prefill[0], None
+                n_tok = jobs[i][1]
+                if n_tok > 0:
+                    ttft[i] = t - i + 1          # arrival tick is i
+                    events.append([t, "first_token", i])
+                if n_tok <= 1:                   # 0 or 1 token: no decode
+                    finish[i] = t
+                    events.append([t, "retire", i])
+                    done += 1
+                else:
+                    residents[i] = n_tok - 1
+    else:
+        raise RuntimeError("virtual clock did not converge")
+    return {"events": events, "ttft_ticks": ttft,
+            "finish_ticks": finish, "makespan_ticks": t}
+
+
+def run_replay(params, model_cfg, tokenizer, tasks, arms, cfg: EvalRunConfig,
+               *, slots: int = 4, prefill_chunk: int = 16,
+               spec_window: int = 4) -> dict:
+    """Deterministic eval replay; the returned payload is a pure function
+    of (params, model_cfg, tasks, arms, cfg) — no wall clock anywhere."""
+    from repro.obs import Tracer
+    from repro.serving.scheduler import Scheduler
+
+    tasks = tuple(tasks)
+    arms = tuple(arms)
+    kinds = sorted({"none"} | {str(a.policy["name"]) for a in arms})
+    enc = {t.task_id: tokenizer.encode(t.prompt) for t in tasks}
+    max_plen = max(len(v) for v in enc.values())
+    max_new = max(t.max_new_tokens for t in tasks)
+    sched = Scheduler(
+        params, model_cfg, allowed_kinds=kinds, tokenizer=tokenizer,
+        default_policy="none", max_slots=1,
+        max_len=max_plen + max_new + spec_window + 2, max_new=max_new,
+        prefill_chunk=prefill_chunk, spec_window=spec_window,
+        kv_layout="contiguous", tracer=Tracer(enabled=False))
+    sched.start()
+    arms_out = {}
+    try:
+        for arm in arms:
+            samples = []
+            jobs = []
+            for _, ti, task, si in _flat_samples(tasks, cfg):
+                greedy = cfg.temperature <= 0.0
+                req = GenerationRequest(
+                    prompt=task.prompt,
+                    max_new_tokens=task.max_new_tokens,
+                    policy=arm.spec(),
+                    sampling=SamplingParams(
+                        temperature=max(cfg.temperature, 0.0),
+                        top_p=cfg.top_p if not greedy else 1.0,
+                        seed=cfg.sample_seed(ti, si)),
+                    stop_sequences=task.stop_sequences)
+                h = sched.submit(req)
+                h.result(timeout=cfg.request_timeout_s)
+                res = h.to_result(tokenizer)
+                check = check_completion(task, res.text or "",
+                                         timeout_s=cfg.check_timeout_s)
+                el = res.exit_layers or [model_cfg.num_layers]
+                samples.append({
+                    "task_id": task.task_id, "sample": si,
+                    "status": check.status,
+                    "tokens": res.n_tokens,
+                    "energy_j": res.energy_j,
+                    "prefill_energy_j": res.prefill_energy_j,
+                    "mean_exit_layer": float(np.mean(el)),
+                    "finish_reason": res.finish_reason,
+                    "text_sha256": _sha(res.text or ""),
+                })
+                jobs.append((len(enc[task.task_id]), res.n_tokens))
+            vc = _virtual_clock(jobs, slots=slots, chunk=prefill_chunk)
+            ttfts = [float(x) for x in vc["ttft_ticks"] if x is not None]
+            summary = _aggregate_arm(arm, tasks, samples, cfg, ttfts,
+                                     "ticks")
+            summary["makespan_ticks"] = vc["makespan_ticks"]
+            summary["clock_events"] = len(vc["events"])
+            arms_out[arm.name] = {"summary": summary, "samples": samples}
+    finally:
+        sched.stop()
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "mode": "replay",
+        "model": model_cfg.name,
+        "num_layers": model_cfg.num_layers,
+        "config": {"n_samples": cfg.n_samples, "ks": list(cfg.ks),
+                   "temperature": cfg.temperature, "top_p": cfg.top_p,
+                   "seed": cfg.seed, "slots": slots,
+                   "prefill_chunk": prefill_chunk,
+                   "spec_window": spec_window},
+        "tasks": [t.task_id for t in tasks],
+        "arms": arms_out,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Live HTTP driver
+# ---------------------------------------------------------------------------
+def _post_stream(url: str, payload: dict, timeout_s: float) -> dict:
+    """POST a streaming generate; return token lines + final record +
+    wall-clock TTFT (first token line) and total latency.
+
+    503 (scheduler queue full / draining) is backpressure, not failure —
+    the client retries with backoff until the request deadline, like any
+    load generator. TTFT is measured from the *first* attempt: the queue
+    wait a saturated server imposes is real latency.
+    """
+    body = json.dumps(payload).encode()
+    req = urllib.request.Request(
+        f"{url}/generate", data=body,
+        headers={"Content-Type": "application/json"})
+    t0 = time.monotonic()
+    ttft = None
+    final = None
+    n_lines = 0
+    backoff = 0.05
+    while True:
+        try:
+            resp = urllib.request.urlopen(req, timeout=timeout_s)
+            break
+        except urllib.error.HTTPError as e:
+            if e.code != 503 or time.monotonic() - t0 > timeout_s:
+                raise
+            e.close()
+            time.sleep(backoff)
+            backoff = min(backoff * 2, 1.0)
+    with resp:
+        for raw in resp:
+            line = raw.decode().strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            n_lines += 1
+            if "token" in obj:
+                if ttft is None:
+                    ttft = time.monotonic() - t0
+            else:
+                final = obj
+    if final is None:
+        raise RuntimeError("stream ended without a final metrics record")
+    return {"final": final, "ttft_s": ttft,
+            "latency_s": time.monotonic() - t0, "token_lines": n_lines - 1}
+
+
+def _drain_trace(url: str, timeout_s: float = 30.0) -> dict:
+    """``GET /trace`` → {req_id: lifecycle-end args} for the energy join
+    (the ``req/*`` async spans carry energy_j / prefill_energy_j /
+    finish_reason on their closing event)."""
+    with urllib.request.urlopen(f"{url}/trace", timeout=timeout_s) as resp:
+        trace = json.loads(resp.read())
+    by_req: dict = {}
+    for ev in trace.get("traceEvents", []):
+        if (ev.get("ph") == "e" and str(ev.get("name", "")).startswith("req/")
+                and "energy_j" in ev.get("args", {})):
+            by_req[ev["id"]] = ev["args"]
+    return by_req
+
+
+def run_http(url: str, tasks, arms, cfg: EvalRunConfig) -> dict:
+    """Drive a running server under Poisson load, one arm at a time."""
+    url = url.rstrip("/")
+    tasks = tuple(tasks)
+    arms = tuple(arms)
+    arms_out = {}
+    for arm in arms:
+        flat = list(_flat_samples(tasks, cfg))
+        offsets = poisson_times(len(flat), cfg.rate_hz,
+                                seed=cfg.seed ^ 0x5EED)
+        results: list = [None] * len(flat)
+        errors: list = [None] * len(flat)
+
+        def worker(j, ti, task, si, at, start, arm=arm):
+            delay = start + at - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            greedy = cfg.temperature <= 0.0
+            par = {"max_new_tokens": task.max_new_tokens,
+                   "stop": list(task.stop_sequences),
+                   "temperature": max(cfg.temperature, 0.0),
+                   "top_p": cfg.top_p if not greedy else 1.0,
+                   "seed": cfg.sample_seed(ti, si),
+                   "policy": dict(arm.policy),
+                   "stream": True}
+            try:
+                results[j] = _post_stream(
+                    url, {"inputs": task.prompt, "parameters": par},
+                    cfg.request_timeout_s)
+            except Exception as e:  # noqa: BLE001
+                errors[j] = repr(e)
+
+        start = time.monotonic()
+        threads = [threading.Thread(target=worker,
+                                    args=(j, ti, task, si, offsets[j],
+                                          start),
+                                    daemon=True)
+                   for j, ti, task, si in flat]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(cfg.request_timeout_s + 30.0)
+        span_args = _drain_trace(url)
+        samples = []
+        ttfts = []
+        joined = 0
+        for (j, ti, task, si) in flat:
+            if results[j] is None:
+                samples.append({
+                    "task_id": task.task_id, "sample": si,
+                    "status": "error", "tokens": 0, "energy_j": 0.0,
+                    "prefill_energy_j": 0.0, "mean_exit_layer": 0.0,
+                    "finish_reason": "transport_error",
+                    "error": errors[j]})
+                continue
+            r = results[j]
+            fin = r["final"]
+            check = check_completion(task, fin.get("generated_text") or "",
+                                     timeout_s=cfg.check_timeout_s)
+            el = fin.get("exit_layers") or [0]
+            rec = {
+                "task_id": task.task_id, "sample": si,
+                "status": check.status,
+                "tokens": fin.get("tokens", r["token_lines"]),
+                "energy_j": fin.get("decode_energy_j", fin["energy_j"]),
+                "prefill_energy_j": fin.get("prefill_energy_j", 0.0),
+                "mean_exit_layer": float(np.mean(el)),
+                "finish_reason": fin.get("finish_reason", "unknown"),
+                "ttft_s": r["ttft_s"],
+                "latency_s": r["latency_s"],
+                "replica_id": fin.get("replica_id"),
+            }
+            span = span_args.get(fin.get("request_id"))
+            if span is not None:
+                joined += 1
+                rec["span_energy_j"] = span.get("energy_j")
+                rec["span_prefill_energy_j"] = span.get("prefill_energy_j")
+            samples.append(rec)
+            if r["ttft_s"] is not None:
+                ttfts.append(r["ttft_s"])
+        summary = _aggregate_arm(arm, tasks, samples, cfg, ttfts, "s")
+        summary["span_join_frac"] = joined / max(len(flat), 1)
+        summary["transport_errors"] = sum(e is not None for e in errors)
+        arms_out[arm.name] = {"summary": summary, "samples": samples}
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "mode": "http",
+        "url": url,
+        "config": {"n_samples": cfg.n_samples, "ks": list(cfg.ks),
+                   "temperature": cfg.temperature, "top_p": cfg.top_p,
+                   "seed": cfg.seed, "rate_hz": cfg.rate_hz},
+        "tasks": [t.task_id for t in tasks],
+        "arms": arms_out,
+    }

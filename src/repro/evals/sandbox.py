@@ -1,0 +1,126 @@
+"""Sandboxed subprocess checker for candidate programs.
+
+Each check runs ``task.program(completion)`` in a fresh ``python -I``
+subprocess with:
+
+* a private tempdir as cwd — deleted afterwards;
+* a wall-clock timeout (the parent kills the process group) and a CPU
+  rlimit one notch above it, so a busy-looping candidate dies either way;
+* an address-space rlimit against runaway allocation;
+* a write guard installed before the candidate runs: ``open``/``io.open``
+  and ``os.open`` refuse to create or write anything that resolves
+  outside the sandbox dir (reads stay unrestricted — the test harness
+  itself is file-based).
+
+This is a *reliability* sandbox in the HumanEval tradition — it converts
+broken generated code into a clean "failed" verdict and keeps stray
+writes out of the repo checkout. It is not a security boundary against
+an adversarial model.
+
+Status taxonomy (the distinction the negative-path tests pin down):
+``passed``   exit code 0
+``failed``   nonzero exit — assertion, exception, SyntaxError, killed by
+             a signal: the *sample* is wrong, the harness is fine
+``timeout``  wall-clock or CPU limit hit
+``error``    the harness itself could not run the check (spawn failure)
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from dataclasses import dataclass
+
+# Installed ahead of the candidate program inside `python -I -c`.
+# The guard chdirs are done by the parent (cwd=sandbox); realpath of a
+# relative path therefore resolves inside the sandbox.
+_GUARD = r"""
+import builtins, io, os, sys, tempfile
+SANDBOX = os.path.realpath(os.getcwd())
+tempfile.tempdir = SANDBOX
+try:
+    import resource
+    _cpu = {cpu_s}
+    resource.setrlimit(resource.RLIMIT_CPU, (_cpu, _cpu))
+    resource.setrlimit(resource.RLIMIT_AS, (1 << 31, 1 << 31))
+except Exception:
+    pass
+
+def _inside(p):
+    p = os.path.realpath(os.fspath(p))
+    return p == SANDBOX or p.startswith(SANDBOX + os.sep)
+
+_open = builtins.open
+def _guarded_open(file, mode="r", *a, **k):
+    if not isinstance(file, int) and any(ch in str(mode) for ch in "wax+"):
+        if not _inside(file):
+            raise PermissionError(f"sandbox: write outside tempdir: {{file!r}}")
+    return _open(file, mode, *a, **k)
+builtins.open = _guarded_open
+io.open = _guarded_open
+
+_os_open = os.open
+_W = os.O_WRONLY | os.O_RDWR | os.O_CREAT | os.O_APPEND | os.O_TRUNC
+def _guarded_os_open(path, flags, *a, **k):
+    if not isinstance(path, int) and (flags & _W) and not _inside(path):
+        raise PermissionError(f"sandbox: write outside tempdir: {{path!r}}")
+    return _os_open(path, flags, *a, **k)
+os.open = _guarded_os_open
+
+_src = _open("__candidate__.py", encoding="utf-8").read()
+exec(compile(_src, "candidate.py", "exec"), {{"__name__": "__main__"}})
+"""
+
+
+@dataclass(frozen=True)
+class CheckResult:
+    """Outcome of one sandboxed candidate check."""
+    status: str                 # passed | failed | timeout | error
+    detail: str = ""            # stderr tail / harness error message
+    duration_s: float = 0.0     # wall-clock (excluded from replay payloads)
+
+    @property
+    def passed(self) -> bool:
+        return self.status == "passed"
+
+
+def check_completion(task, completion: str,
+                     timeout_s: float = 10.0) -> CheckResult:
+    """Run ``task.program(completion)`` sandboxed; classify the outcome."""
+    program = task.program(completion)
+    guard = _GUARD.format(cpu_s=max(int(timeout_s) + 1, 2))
+    t0 = time.monotonic()
+    with tempfile.TemporaryDirectory(prefix="repro-eval-") as box:
+        with open(os.path.join(box, "__candidate__.py"), "w",
+                  encoding="utf-8") as f:
+            f.write(program)
+        env = {"PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+               "HOME": box, "TMPDIR": box}
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-I", "-c", guard],
+                cwd=box, env=env, timeout=timeout_s,
+                stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                stdin=subprocess.DEVNULL)
+        except subprocess.TimeoutExpired:
+            return CheckResult("timeout",
+                               f"wall-clock timeout after {timeout_s}s",
+                               time.monotonic() - t0)
+        except OSError as e:            # spawn infrastructure failure
+            return CheckResult("error", f"spawn failed: {e}",
+                               time.monotonic() - t0)
+    dt = time.monotonic() - t0
+    if proc.returncode == 0:
+        return CheckResult("passed", "", dt)
+    tail = proc.stderr.decode("utf-8", "replace")[-400:]
+    # SIGXCPU (CPU rlimit) presents as a negative returncode; classify a
+    # CPU-limit kill as timeout, everything else as a failed sample
+    try:
+        import signal
+        if proc.returncode == -signal.SIGXCPU:
+            return CheckResult("timeout", "CPU rlimit exceeded", dt)
+    except (ImportError, AttributeError):
+        pass
+    return CheckResult("failed", tail, dt)

@@ -1,0 +1,52 @@
+"""The unbiased pass@k estimator (Codex paper, eq. 1).
+
+Given ``n`` samples of which ``c`` passed, the estimator is the
+probability that a uniformly-drawn size-``k`` subset contains at least
+one passing sample:
+
+    pass@k = 1 - C(n-c, k) / C(n, k)
+           = 1 - prod_{i=n-c+1..n} (1 - k/i)
+
+The product form is the numerically stable one (no large binomials).
+tests/test_evals.py cross-checks it against brute-force subset
+enumeration for every (n, c, k) with n <= 12.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pass_at_k(n: int, c: int, k: int) -> float:
+    """Unbiased pass@k from ``n`` samples with ``c`` passes.
+
+    ``k > n`` clamps to ``n`` (with all samples drawn, pass@n is the
+    right-hand anchor of the curve); ``c == 0`` is exactly 0 and
+    ``n - c < k`` exactly 1 without touching the product.
+    """
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if not 0 <= c <= n:
+        raise ValueError(f"c must be in [0, n={n}], got {c}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    k = min(k, n)
+    if c == 0:
+        return 0.0
+    if n - c < k:
+        return 1.0
+    return float(1.0 - np.prod(1.0 - k / np.arange(n - c + 1, n + 1,
+                                                   dtype=np.float64)))
+
+
+def pass_at_k_bruteforce(n: int, c: int, k: int) -> float:
+    """Reference implementation: enumerate every size-k subset of the n
+    samples and count those containing >= 1 of the c passes. O(C(n, k)) —
+    test-only, feasible for n <= ~12."""
+    from itertools import combinations
+    k = min(k, n)
+    passing = set(range(c))                   # WLOG the first c pass
+    total = hit = 0
+    for subset in combinations(range(n), k):
+        total += 1
+        hit += bool(passing.intersection(subset))
+    return hit / total

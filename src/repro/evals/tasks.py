@@ -1,0 +1,203 @@
+"""HumanEval-style completion tasks: vendored set + JSONL loader.
+
+A task is a *completion* problem: the model continues ``prompt`` and the
+concatenation ``prompt + completion`` must define ``entry_point`` such
+that the ``test`` program's ``check(entry_point)`` passes (the HumanEval
+contract; see the energy-code-eval harness for the same schema).
+
+The vendored set is deliberately tiny and deterministic. Two task styles
+matter for CI on untrained toy models:
+
+* *comment tasks* — the prompt already defines a correct ``entry_point``
+  and ends inside a line comment with stop ``("\\n",)``; any truncated
+  completion keeps the program valid, so they pass regardless of model
+  quality. They give the frontier a nonzero, arm-invariant pass floor.
+* *needle tasks* — passing requires emitting an exact short string, which
+  an untrained model essentially never does; they pin the failure side.
+
+Every vendored ``canonical_solution`` passes its own test (asserted in
+tests/test_evals.py), so the sandbox's positive path is self-checking.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+# standard BigCode-style completion stops: a new top-level definition or
+# statement ends the function body being completed
+DEFAULT_STOPS = ("\ndef ", "\nclass ", "\nif ", "\nprint")
+
+
+@dataclass(frozen=True)
+class EvalTask:
+    """One completion task (HumanEval schema subset)."""
+    task_id: str
+    prompt: str                       # the model continues this text
+    entry_point: str                  # function the test calls
+    test: str                         # defines check(candidate)
+    stop_sequences: tuple = DEFAULT_STOPS
+    max_new_tokens: int = 24
+    canonical_solution: str = ""      # reference completion (must pass)
+
+    def program(self, completion: str) -> str:
+        """The candidate program the sandbox executes.
+
+        NUL bytes are stripped: the byte-fallback tokenizer can emit them
+        mid-stream and CPython rejects NUL in source text — this is the
+        harness's only completion post-processing, applied identically to
+        every arm.
+        """
+        body = self.prompt + completion.replace("\x00", "")
+        return (f"{body}\n\n{self.test}\n"
+                f"check({self.entry_point})\n")
+
+
+def _task(task_id, prompt, entry_point, test, *, stops=DEFAULT_STOPS,
+          max_new=24, canonical="") -> EvalTask:
+    return EvalTask(task_id=task_id, prompt=prompt, entry_point=entry_point,
+                    test=test, stop_sequences=tuple(stops),
+                    max_new_tokens=max_new, canonical_solution=canonical)
+
+
+def vendored_tasks() -> tuple[EvalTask, ...]:
+    """The vendored deterministic suite (8 tasks)."""
+    return (
+        _task(
+            "vend/comment_pad",
+            'def pad(xs):\n'
+            '    """Identity pad helper."""\n'
+            '    return xs\n'
+            '\n'
+            '# note: ',
+            "pad",
+            "def check(candidate):\n"
+            "    assert candidate([1, 2]) == [1, 2]\n"
+            "    assert candidate([]) == []\n",
+            stops=("\n",), max_new=12, canonical="identity, no-op"),
+        _task(
+            "vend/comment_greet",
+            'def greet(name):\n'
+            '    """Greet by name."""\n'
+            '    return "hi " + name\n'
+            '\n'
+            '# summary: ',
+            "greet",
+            "def check(candidate):\n"
+            "    assert candidate('ada') == 'hi ada'\n",
+            stops=("\n",), max_new=12, canonical="string concat"),
+        _task(
+            "vend/needle",
+            'def needle():\n'
+            '    """Return the magic string."""\n'
+            '    return "xyzzy-',
+            "needle",
+            "def check(candidate):\n"
+            "    assert candidate() == 'xyzzy-plugh'\n",
+            stops=("\n",), max_new=12, canonical='plugh"'),
+        _task(
+            "vend/add_two",
+            'def add_two(x):\n'
+            '    """Return x plus 2."""\n',
+            "add_two",
+            "def check(candidate):\n"
+            "    assert candidate(0) == 2\n"
+            "    assert candidate(-2) == 0\n"
+            "    assert candidate(40) == 42\n",
+            canonical="    return x + 2\n"),
+        _task(
+            "vend/is_even",
+            'def is_even(n):\n'
+            '    """True iff n is even."""\n',
+            "is_even",
+            "def check(candidate):\n"
+            "    assert candidate(2) is True\n"
+            "    assert candidate(3) is False\n"
+            "    assert candidate(0) is True\n",
+            canonical="    return n % 2 == 0\n"),
+        _task(
+            "vend/reverse_string",
+            'def reverse_string(s):\n'
+            '    """Return s reversed."""\n',
+            "reverse_string",
+            "def check(candidate):\n"
+            "    assert candidate('abc') == 'cba'\n"
+            "    assert candidate('') == ''\n",
+            canonical="    return s[::-1]\n"),
+        _task(
+            "vend/max_of_three",
+            'def max_of_three(a, b, c):\n'
+            '    """Largest of the three arguments."""\n',
+            "max_of_three",
+            "def check(candidate):\n"
+            "    assert candidate(1, 2, 3) == 3\n"
+            "    assert candidate(5, -1, 2) == 5\n",
+            canonical="    return max(a, b, c)\n"),
+        _task(
+            "vend/count_vowels",
+            'def count_vowels(s):\n'
+            '    """Number of vowels (aeiou) in s."""\n',
+            "count_vowels",
+            "def check(candidate):\n"
+            "    assert candidate('abcde') == 2\n"
+            "    assert candidate('xyz') == 0\n",
+            canonical="    return sum(1 for ch in s if ch in 'aeiou')\n"),
+    )
+
+
+def smoke_tasks() -> tuple[EvalTask, ...]:
+    """The 2-task CI smoke pair: one always-pass comment task, one
+    needle task an untrained model cannot hit — pass@1 is exactly 0.5."""
+    by_id = {t.task_id: t for t in vendored_tasks()}
+    return (by_id["vend/comment_pad"], by_id["vend/needle"])
+
+
+REQUIRED_KEYS = ("task_id", "prompt", "entry_point", "test")
+
+
+def load_jsonl(path) -> tuple[EvalTask, ...]:
+    """Load an external HumanEval-style JSONL task file.
+
+    Each line is an object with ``task_id``/``prompt``/``entry_point``/
+    ``test`` (required) and ``stop_sequences``/``max_new_tokens``/
+    ``canonical_solution`` (optional). Errors name the offending line.
+    """
+    tasks = []
+    with open(path, encoding="utf-8") as f:
+        for ln, raw in enumerate(f, 1):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                obj = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{ln}: invalid JSON: {e}") from e
+            if not isinstance(obj, dict):
+                raise ValueError(f"{path}:{ln}: expected an object")
+            missing = [k for k in REQUIRED_KEYS if k not in obj]
+            if missing:
+                raise ValueError(f"{path}:{ln}: missing keys {missing}")
+            for k in REQUIRED_KEYS:
+                if not isinstance(obj[k], str) or not obj[k]:
+                    raise ValueError(
+                        f"{path}:{ln}: {k!r} must be a non-empty string")
+            stops = obj.get("stop_sequences", list(DEFAULT_STOPS))
+            if (not isinstance(stops, list)
+                    or any(not isinstance(s, str) or not s for s in stops)):
+                raise ValueError(f"{path}:{ln}: stop_sequences must be a "
+                                 f"list of non-empty strings")
+            max_new = obj.get("max_new_tokens", 24)
+            if not isinstance(max_new, int) or max_new < 1:
+                raise ValueError(f"{path}:{ln}: max_new_tokens must be a "
+                                 f"positive int")
+            tasks.append(EvalTask(
+                task_id=obj["task_id"], prompt=obj["prompt"],
+                entry_point=obj["entry_point"], test=obj["test"],
+                stop_sequences=tuple(stops), max_new_tokens=max_new,
+                canonical_solution=obj.get("canonical_solution", "")))
+    if not tasks:
+        raise ValueError(f"{path}: no tasks found")
+    ids = [t.task_id for t in tasks]
+    if len(set(ids)) != len(ids):
+        dup = sorted({i for i in ids if ids.count(i) > 1})
+        raise ValueError(f"{path}: duplicate task_ids {dup}")
+    return tuple(tasks)

@@ -1,0 +1,169 @@
+"""Eval-harness launcher: pass-rate-vs-J/token frontier (CLI).
+
+  python -m repro.launch.eval --mode both --out BENCH_eval.json
+  python -m repro.launch.eval --mode replay --tasks suite.jsonl --samples 10
+
+Builds a mini model (optionally lite-trained), drives the vendored (or
+``--tasks`` JSONL) completion suite through the exit-policy arms with
+``repro.evals``, and writes ``BENCH_eval.json``:
+
+* ``--mode http``   spin an in-process ``repro.serving.server`` and drive
+  it with the live Poisson client — wall-clock TTFT, lifecycle-span
+  energy join.
+* ``--mode replay`` the deterministic virtual-clock driver — the payload
+  is a pure function of (weights, tasks, arms, config); ``--replays 2``
+  re-runs it and hard-checks byte-identity the way CI does.
+* ``--mode both``   HTTP frontier + replay section in one artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+
+import jax
+
+from repro.evals import (EvalRunConfig, default_arms, frontier, load_jsonl,
+                         payload_bytes, run_http, run_replay, smoke_tasks,
+                         vendored_tasks, write_bench)
+
+
+def build_model(num_layers: int, d_model: int, train_steps: int,
+                seed: int = 0):
+    """Mini model + tokenizer. ``train_steps > 0`` lite-trains on the java
+    corpus (the tokenizer then carries real code tokens); 0 keeps random
+    weights with a pure byte-fallback tokenizer — fast, fully offline."""
+    from repro.configs.llama32_3b import paper_mini
+    from repro.models import transformer as T
+    if train_steps > 0:
+        from repro.data import CodeCompletionDataset
+        from repro.training import train_model
+        ds = CodeCompletionDataset(language="java", n_files=60, seq_len=128,
+                                   vocab_size=512)
+        cfg = paper_mini(num_layers=num_layers, d_model=d_model,
+                         vocab_size=ds.tokenizer.vocab_size)
+        params, _ = train_model(cfg, ds, kind="lite", steps=train_steps,
+                                batch_size=4, lr=1e-3, log_every=0)
+        return cfg, params, ds.tokenizer
+    from repro.data.tokenizer import _SPECIALS, CodeTokenizer
+    tok = CodeTokenizer(_SPECIALS)
+    cfg = paper_mini(num_layers=num_layers, d_model=d_model,
+                     vocab_size=tok.vocab_size)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params, tok
+
+
+def serve_inprocess(params, cfg, tokenizer, *, max_slots: int = 4,
+                    max_len: int = 256, max_new: int = 32,
+                    spec_window: int = 4):
+    """Start an in-process HTTP server (tracing on, so the eval client
+    can join the ``req/*`` lifecycle spans). Returns (url, closer)."""
+    from http.server import ThreadingHTTPServer
+
+    from repro.obs import Tracer
+    from repro.serving import Scheduler
+    from repro.serving.server import Handler, _State
+    _State.cfg, _State.params = cfg, params
+    _State.agent, _State.tokenizer = None, tokenizer
+    sched = Scheduler(
+        params, cfg,
+        allowed_kinds=("none", "fixed", "confidence", "entropy",
+                       "speculative"),
+        tokenizer=tokenizer, max_slots=max_slots, max_len=max_len,
+        max_new=max_new, prefill_chunk=16, spec_window=spec_window,
+        tracer=Tracer(enabled=True)).start()
+    _State.scheduler = sched
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+
+    def close():
+        srv.shutdown()
+        sched.stop()
+        _State.scheduler = None
+
+    return f"http://127.0.0.1:{srv.server_address[1]}", close
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("http", "replay", "both"),
+                    default="both")
+    ap.add_argument("--tasks", default=None,
+                    help="external JSONL task file (default: vendored)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-task deterministic smoke suite")
+    ap.add_argument("--samples", type=int, default=1,
+                    help="completions per task (n for pass@k)")
+    ap.add_argument("--ks", type=int, nargs="+", default=[1, 10])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="HTTP Poisson arrival rate (req/s)")
+    ap.add_argument("--layers", type=int, default=6,
+                    help=">= 6 so the exit-point schedule is non-trivial")
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--train-steps", type=int, default=0)
+    ap.add_argument("--thresholds", type=float, nargs="+", default=[0.8])
+    ap.add_argument("--no-speculative", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--replays", type=int, default=2,
+                    help="replay invocations; > 1 hard-checks that the "
+                         "payloads are byte-identical")
+    ap.add_argument("--out", default="BENCH_eval.json")
+    args = ap.parse_args(argv)
+
+    if args.tasks:
+        tasks = load_jsonl(args.tasks)
+    elif args.smoke:
+        tasks = smoke_tasks()
+    else:
+        tasks = vendored_tasks()
+    cfg, params, tok = build_model(args.layers, args.d_model,
+                                   args.train_steps, args.seed)
+    arms = default_arms(thresholds=tuple(args.thresholds),
+                        speculative=not args.no_speculative)
+    rc = EvalRunConfig(n_samples=args.samples, ks=tuple(args.ks),
+                       temperature=args.temperature, top_p=args.top_p,
+                       seed=args.seed, rate_hz=args.rate)
+    max_new = max(t.max_new_tokens for t in tasks)
+    max_plen = max(len(tok.encode(t.prompt)) for t in tasks)
+
+    http_report = None
+    if args.mode in ("http", "both"):
+        url, close = serve_inprocess(
+            params, cfg, tok, max_slots=args.slots,
+            max_len=max_plen + max_new + 8, max_new=max_new)
+        try:
+            print(f"[eval] http driver against {url} "
+                  f"({len(tasks)} tasks x {args.samples} samples x "
+                  f"{len(arms)} arms)")
+            http_report = run_http(url, tasks, arms, rc)
+        finally:
+            close()
+
+    replay_report = None
+    if args.mode in ("replay", "both"):
+        payloads = []
+        for i in range(max(args.replays, 1)):
+            print(f"[eval] replay {i + 1}/{max(args.replays, 1)} "
+                  f"(virtual clock)")
+            payloads.append(run_replay(params, cfg, tok, tasks, arms, rc,
+                                       slots=args.slots))
+        replay_report = payloads[0]
+        for i, p in enumerate(payloads[1:], 2):
+            assert payload_bytes(p) == payload_bytes(replay_report), \
+                f"replay {i} diverged from replay 1 — determinism broken"
+        if len(payloads) > 1:
+            print(f"[eval] {len(payloads)} replays byte-identical")
+
+    bench = write_bench(args.out, http_report, replay_report)
+    shown = bench.get("frontier", bench.get("replay_frontier"))
+    print(f"[eval] frontier ({'http' if 'frontier' in bench else 'replay'}):")
+    print(json.dumps(shown, indent=1))
+    print(f"[eval] wrote {args.out}")
+    return bench
+
+
+if __name__ == "__main__":
+    main()

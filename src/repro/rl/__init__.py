@@ -1,4 +1,5 @@
-from repro.rl.rollout import build_rollout_cache  # noqa: F401
+from repro.rl.rollout import (build_rollout_cache,  # noqa: F401
+                              task_delta_from_reports)
 from repro.rl.env import EarlyExitEnv, RewardCoefs  # noqa: F401
 from repro.rl.ppo import PPOConfig, ppo_train  # noqa: F401
 from repro.rl.train import agent_policy_spec, train_agent  # noqa: F401

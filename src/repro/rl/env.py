@@ -27,11 +27,30 @@ CONTINUE, EXIT = 0, 1
 
 @dataclass(frozen=True)
 class RewardCoefs:
-    """Paper Eq. 2/3 trade-off coefficients (0 <= a,b,g <= 1, alpha <= beta)."""
+    """Paper Eq. 2/3 trade-off coefficients (0 <= a,b,g <= 1, alpha <= beta).
+
+    The two ``*_weight`` knobs extend Eq. 2 with serving-side signals and
+    default to 0.0, which reproduces the paper's reward bit-for-bit:
+
+    ``energy_weight``
+        speculative-aware energy shaping from
+        :func:`repro.core.energy.speculative_step_energy`: an EXIT pays
+        its boundary's modeled energy fraction, and a *wrong* EXIT
+        additionally pays the full-depth verify pass a rejected draft
+        costs the speculative decoder — without this the agent never
+        learns that a bad draft is not free.
+    ``accuracy_weight``
+        task-accuracy-delta shaping from the eval harness
+        (``repro.evals``): a wrong EXIT is penalized in proportion to
+        the measured pass-rate drop of exiting early on this episode's
+        suite (``RolloutCache.task_delta``).
+    """
     alpha: float = 0.2       # late-exit penalty (correct but past ℓ_opt)
     beta: float = 1.0        # early-exit penalty (wrong, before ℓ_opt)
     gamma: float = 1.0       # late-continue penalty
     epsilon: float = 0.1     # edge case: wrong and past ℓ_opt
+    energy_weight: float = 0.0    # speculative draft/verify energy shaping
+    accuracy_weight: float = 0.0  # eval-harness pass-rate-delta shaping
 
 
 @dataclass
@@ -41,20 +60,49 @@ class EnvArrays:
     preds: jax.Array         # [E, T, n_b]
     l_opt: jax.Array         # [E, T]
     boundaries: jax.Array    # [n_b]
+    exit_frac: jax.Array     # [n_b] modeled exit energy / full-depth energy
+    verify_frac: jax.Array   # [n_b] rejected-draft verify energy / full
+    task_delta: jax.Array    # [E] eval pass-rate drop for this episode
 
 
 class EarlyExitEnv:
     def __init__(self, cache: RolloutCache, coefs: RewardCoefs = RewardCoefs(),
-                 n_lanes: int = 16):
+                 n_lanes: int = 16, *, cfg=None, ctx_len: int = 256):
+        n_b = len(cache.boundaries)
+        if coefs.energy_weight > 0.0:
+            # per-boundary energy fractions from the analytic model: what
+            # exiting at boundary b costs, and what the full-depth verify
+            # pass costs when an exit at b is used as a draft and rejected
+            # (speculative_step_energy's split, normalized by the
+            # full-depth token cost)
+            if cfg is None:
+                raise ValueError("energy_weight > 0 needs cfg= (the "
+                                 "ModelConfig the energy model prices)")
+            from repro.core import energy
+            full = energy.full_token_energy(cfg, ctx_len)
+            exit_frac = (energy.decode_token_energy(
+                cfg, ctx_len, cache.boundaries) / full)
+            verify_frac = [energy.speculative_step_energy(
+                cfg, ctx_len, int(b), 1, 2)["verify_j"] / full
+                for b in cache.boundaries]
+        else:
+            exit_frac = [0.0] * n_b
+            verify_frac = [0.0] * n_b
+        task_delta = cache.task_delta
+        if task_delta is None:
+            task_delta = jnp.zeros((cache.n_episodes,), jnp.float32)
         self.arrays = EnvArrays(
             hidden=jnp.asarray(cache.hidden),
             preds=jnp.asarray(cache.preds),
             l_opt=jnp.asarray(cache.l_opt),
-            boundaries=jnp.asarray(cache.boundaries))
+            boundaries=jnp.asarray(cache.boundaries),
+            exit_frac=jnp.asarray(exit_frac, jnp.float32),
+            verify_frac=jnp.asarray(verify_frac, jnp.float32),
+            task_delta=jnp.asarray(task_delta, jnp.float32))
         self.coefs = coefs
         self.n_lanes = n_lanes
         self.num_layers = cache.num_layers
-        self.n_b = len(cache.boundaries)
+        self.n_b = n_b
         self.T = cache.tokens_per_episode
         self.E = cache.n_episodes
         self.d_model = cache.hidden.shape[-1]
@@ -100,6 +148,18 @@ class EarlyExitEnv:
         r_cont = jnp.where(l_curr < l_opt, 1.0, -d_next * c.gamma)
 
         reward = jnp.where(act == EXIT, r_exit, r_cont)
+
+        # ---- serving-side shaping (no-ops at the 0.0 defaults) ----------
+        # energy: an EXIT pays its boundary's modeled cost; a wrong EXIT
+        # additionally pays the full-depth verify pass a rejected draft
+        # costs (speculative_step_energy's split)
+        e_pay = a.exit_frac[b] + jnp.where(correct, 0.0, a.verify_frac[b])
+        reward = reward - c.energy_weight * jnp.where(
+            act == EXIT, e_pay, 0.0)
+        # accuracy: a wrong EXIT is penalized by the eval harness's
+        # measured pass-rate drop for this episode's suite
+        reward = reward - c.accuracy_weight * jnp.where(
+            (act == EXIT) & ~correct, a.task_delta[ep], 0.0)
 
         # ---- transition ---------------------------------------------------
         exit_taken = act == EXIT

@@ -13,7 +13,8 @@ hiddens equal the decode-time hiddens the controller will see at inference.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,10 @@ class RolloutCache:
     l_opt: np.ndarray       # [E, T] int32 — optimal exit layer (layer units)
     boundaries: np.ndarray  # [n_b] int32 — layer number of each boundary
     num_layers: int
+    # per-episode task-accuracy-delta signal from the eval harness
+    # (pass-rate drop of exiting early, >= 0 when exit hurt); None keeps
+    # the paper's pure Eq. 2/3 reward
+    task_delta: Optional[np.ndarray] = None     # [E] float32
 
     @property
     def n_episodes(self):
@@ -40,6 +45,28 @@ class RolloutCache:
     @property
     def tokens_per_episode(self):
         return self.hidden.shape[1]
+
+    def with_task_delta(self, deltas) -> "RolloutCache":
+        """Attach a per-episode accuracy-delta array (or scalar)."""
+        d = np.broadcast_to(np.asarray(deltas, np.float32),
+                            (self.n_episodes,)).copy()
+        return replace(self, task_delta=d)
+
+
+def task_delta_from_reports(baseline_arm: dict, exit_arm: dict,
+                            n_episodes: int, k: str = "1") -> np.ndarray:
+    """Per-episode accuracy-delta signal from two eval-run arms.
+
+    ``baseline_arm``/``exit_arm`` are ``run_http``/``run_replay`` arm
+    payloads (``report["arms"][name]``). The delta is the measured
+    pass@k drop of the exit policy vs the full-depth baseline, floored
+    at 0 (an exit policy that *helps* should not be rewarded for being
+    wrong), broadcast over the cache's episodes — the reward join the
+    ROADMAP names: the agent finally sees task accuracy, not just
+    head-agreement."""
+    b = float(baseline_arm["summary"]["pass_at"][str(k)])
+    e = float(exit_arm["summary"]["pass_at"][str(k)])
+    return np.full((n_episodes,), max(b - e, 0.0), np.float32)
 
 
 def build_rollout_cache(params, cfg: ModelConfig, dataset, *,

@@ -602,6 +602,9 @@ class Router:
             "latency_p95_s": max((st["latency_p95_s"] for st in per
                                   if st["latency_p95_s"] is not None),
                                  default=None),
+            "ttft_p95_s": max((st["ttft_p95_s"] for st in per
+                               if st.get("ttft_p95_s") is not None),
+                              default=None),
             "rebalanced_requests": rebalanced,
             "prefix_homes": prefix_homes,
         }

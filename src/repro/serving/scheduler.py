@@ -215,6 +215,7 @@ class Request:
     spec_accepted: int = 0
     metrics: Optional[RequestMetrics] = None
     started_at: Optional[float] = None
+    first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
 
     _exits_all: list[int] = field(default_factory=list, repr=False)
@@ -238,6 +239,13 @@ class Request:
         if self.finished_at is None:
             return None
         return self.finished_at - self.submitted_at
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Queue wait + prefill: submit → first emitted token."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
 
     def result(self, timeout: Optional[float] = None) -> "Request":
         if not self._done.wait(timeout):
@@ -266,6 +274,7 @@ class Request:
             finish_reason=self.finish_reason or "unknown", text=text,
             energy_j=self.energy_j, metrics=self.metrics,
             request_id=self.req_id, latency_s=self.latency_s,
+            prefill_energy_j=self.prefill_energy_j, ttft_s=self.ttft_s,
             truncated=self.truncated,
             # speculative super-ticks emit verified tokens without picker
             # logprobs — surface the trace only when it is complete
@@ -463,6 +472,7 @@ class Scheduler:
         self._power_ema_t = time.monotonic()
         self._exit_layer_ema = float(cfg.num_layers)
         self._latencies: list[float] = []
+        self._ttfts: list[float] = []
         self._ecache: dict[int, np.ndarray] = {}
 
     def _legacy_spec(self, kind: str, threshold: Optional[float]
@@ -1326,6 +1336,8 @@ class Scheduler:
             # excluded from accounting too (Engine.serve semantics).
             self._retire(req, slot, "eos")
             return 0.0
+        if not req.tokens:
+            req.first_token_at = time.monotonic()
         req.tokens.append(token)
         if logprob is not None:
             req.logprobs.append(logprob)
@@ -1420,6 +1432,10 @@ class Scheduler:
             self._latencies.append(req.latency_s)
             if len(self._latencies) > 4096:
                 del self._latencies[:2048]
+            if req.ttft_s is not None:
+                self._ttfts.append(req.ttft_s)
+                if len(self._ttfts) > 4096:
+                    del self._ttfts[:2048]
         req._stream.put(None)
         req._done.set()
 
@@ -1478,6 +1494,7 @@ class Scheduler:
             self._fleet_energy_j = 0.0
             self._fleet_prefill_j = 0.0
             self._latencies.clear()
+            self._ttfts.clear()
             self._peak_active = self.pool.n_used
             self._blocked_admissions = 0
             self._deferred_admissions = 0
@@ -1493,6 +1510,7 @@ class Scheduler:
         with self._lock:
             lt = self._lifetime
             pct = latency_percentiles(self._latencies)
+            tpct = latency_percentiles(self._ttfts)
             up = max(time.monotonic() - self._t0, 1e-9)
             kv = {"kv_layout": self.kv_layout}
             if self.kv_layout == "paged":
@@ -1539,6 +1557,8 @@ class Scheduler:
                 "exit_layer_ema": self._exit_layer_ema,
                 "latency_p50_s": pct["p50_s"],
                 "latency_p95_s": pct["p95_s"],
+                "ttft_p50_s": tpct["p50_s"],
+                "ttft_p95_s": tpct["p95_s"],
                 "step_compiles": self.step_compiles,
                 "controllers": sorted(self.allowed_kinds),
                 "uptime_s": up,

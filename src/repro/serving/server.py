@@ -158,6 +158,15 @@ def _req_json(req) -> dict:
         "truncated": res.truncated,
         "latency_s": res.latency_s,
         "request_id": res.request_id,
+        # per-request attribution for eval/bench clients: decode joules as
+        # charged by the scheduler (exit-layer or draft+verify model),
+        # prompt-ingestion joules, and submit→first-token latency
+        "tokens": res.n_tokens,
+        "decode_energy_j": res.energy_j,
+        "prefill_energy_j": res.prefill_energy_j,
+        "energy_per_token_j": res.energy_j / max(res.n_tokens, 1),
+        "ttft_s": res.ttft_s,
+        "replica_id": getattr(req, "replica_id", None),
     }
 
 

@@ -60,6 +60,99 @@ def test_find_stop_earliest_then_longest():
 
 
 # ---------------------------------------------------------------------------
+# find_stop properties (satellite: overlapping stops, chunk splits,
+# prefix-of-another stops)
+# ---------------------------------------------------------------------------
+def _stop_ref(text, stops):
+    """Naive reference: scan every position left to right; first position
+    with any match wins, longest match at that position breaks the tie."""
+    for i in range(len(text)):
+        matches = [s for s in stops if text.startswith(s, i)]
+        if matches:
+            return i, max(matches, key=len)
+    return None
+
+
+_ALPHA = "ab\n"
+
+
+def _text_from(ints):
+    return "".join(_ALPHA[i % len(_ALPHA)] for i in ints)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2), min_size=0,
+                max_size=40),
+       st.lists(st.integers(min_value=0, max_value=2), min_size=1,
+                max_size=6),
+       st.lists(st.integers(min_value=0, max_value=2), min_size=1,
+                max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_find_stop_matches_reference_on_overlapping_stops(ti, s1, s2):
+    text = _text_from(ti)
+    stops = (_text_from(s1), _text_from(s2), "aba", "ba\n")
+    assert find_stop(text, stops) == _stop_ref(text, stops)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2), min_size=0,
+                max_size=20),
+       st.lists(st.integers(min_value=0, max_value=2), min_size=1,
+                max_size=4),
+       st.integers(min_value=0, max_value=20),
+       st.lists(st.integers(min_value=1, max_value=5), min_size=1,
+                max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_find_stop_survives_chunk_splits(ti, si, at, chunks):
+    """A stop split across streamed chunks: scanning the accumulated text
+    after each chunk first fires at exactly the cut the one-shot scan of
+    the full text reports — no matter how the chunk boundaries fall."""
+    body = _text_from(ti)
+    stop = _text_from(si)
+    at = min(at, len(body))
+    text = body[:at] + stop + body[at:]
+    expected = find_stop(text, (stop,))
+    assert expected is not None
+    acc = ""
+    first = None
+    pos = 0
+    for c in chunks:
+        if pos >= len(text):
+            break
+        acc += text[pos: pos + c]
+        pos += c
+        hit = find_stop(acc, (stop,))
+        if hit is not None:
+            first = hit
+            break
+    else:
+        acc = text                     # drain the remainder in one chunk
+        first = find_stop(acc, (stop,))
+    assert first == expected
+    # the visible text the server would emit is cut identically
+    assert acc[: first[0]] == text[: expected[0]]
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2), min_size=1,
+                max_size=6),
+       st.lists(st.integers(min_value=0, max_value=2), min_size=1,
+                max_size=4),
+       st.lists(st.integers(min_value=0, max_value=2), min_size=0,
+                max_size=10))
+@settings(max_examples=60, deadline=None)
+def test_find_stop_prefers_longer_when_one_stop_prefixes_another(si, ext,
+                                                                 pre):
+    """One stop a strict prefix of another: wherever the long one
+    matches, the tie at that index must resolve to the long one."""
+    short = _text_from(si)
+    long = short + _text_from(ext)
+    text = _text_from(pre) + long
+    i, s = find_stop(text, (short, long))
+    assert (i, s) == _stop_ref(text, (short, long))
+    if text.startswith(long, i):
+        assert s == long
+    assert i <= len(_text_from(pre))   # never later than the planted hit
+
+
+# ---------------------------------------------------------------------------
 # picker invariants (satellite: top_k / top_p property tests)
 # ---------------------------------------------------------------------------
 def _logits(seed, B=3, V=48):

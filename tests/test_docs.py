@@ -33,10 +33,12 @@ def test_docs_exist_and_are_linked():
     assert "docs/architecture.md" in readme
     assert "docs/speculative.md" in readme
     assert "docs/fleet.md" in readme
+    assert "docs/evals.md" in readme
     assert (ROOT / "docs" / "architecture.md").exists()
     assert (ROOT / "docs" / "speculative.md").exists()
     assert (ROOT / "docs" / "api.md").exists()
     assert (ROOT / "docs" / "fleet.md").exists()
+    assert (ROOT / "docs" / "evals.md").exists()
 
 
 def test_every_doc_has_executable_snippets():
@@ -46,6 +48,7 @@ def test_every_doc_has_executable_snippets():
     assert found["architecture.md"] >= 1
     assert found["speculative.md"] >= 1
     assert found["fleet.md"] >= 3
+    assert found["evals.md"] >= 2
 
 
 @pytest.fixture(scope="module")

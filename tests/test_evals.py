@@ -1,0 +1,389 @@
+"""Eval harness: pass@k estimator vs brute force, sandbox negative
+paths, task schema + loader, virtual clock, replay byte-identity, HTTP
+driver smoke, frontier/report assembly."""
+import json
+import threading
+import time
+import urllib.request
+from http.server import ThreadingHTTPServer
+
+import jax
+import pytest
+
+from repro.configs.llama32_3b import paper_mini
+from repro.data.tokenizer import _SPECIALS, CodeTokenizer
+from repro.evals import (EvalRunConfig, EvalTask, PolicyArm, check_completion,
+                         default_arms, frontier, load_jsonl, pass_at_k,
+                         payload_bytes, payload_digest, run_http, run_replay,
+                         smoke_tasks, vendored_tasks, write_bench)
+from repro.evals.runner import _virtual_clock
+from repro.evals.stats import pass_at_k_bruteforce
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# pass@k estimator (satellite: exhaustive cross-check vs enumeration)
+# ---------------------------------------------------------------------------
+def test_pass_at_k_matches_bruteforce_exhaustively():
+    """Every (n, c, k) with n <= 12, k up to n + 3 (k > n clamps)."""
+    checked = 0
+    for n in range(1, 13):
+        for c in range(0, n + 1):
+            for k in range(1, n + 4):
+                fast = pass_at_k(n, c, k)
+                slow = pass_at_k_bruteforce(n, c, k)
+                assert abs(fast - slow) < 1e-12, (n, c, k, fast, slow)
+                checked += 1
+    assert checked == 998          # sum over n<=12 of (n+1)(n+3)
+
+
+def test_pass_at_k_edges():
+    assert pass_at_k(10, 0, 1) == 0.0            # c = 0
+    assert pass_at_k(10, 10, 1) == 1.0           # c = n
+    assert pass_at_k(5, 3, 10) == 1.0            # k > n clamps to n; c >= 1
+    assert pass_at_k(1, 1, 1) == 1.0
+    assert abs(pass_at_k(10, 3, 1) - 0.3) < 1e-12
+    assert 0.0 < pass_at_k(12, 1, 3) < 1.0
+
+
+def test_pass_at_k_validates():
+    with pytest.raises(ValueError):
+        pass_at_k(0, 0, 1)
+    with pytest.raises(ValueError):
+        pass_at_k(5, 6, 1)
+    with pytest.raises(ValueError):
+        pass_at_k(5, -1, 1)
+    with pytest.raises(ValueError):
+        pass_at_k(5, 2, 0)
+
+
+# ---------------------------------------------------------------------------
+# tasks: vendored invariants + JSONL loader
+# ---------------------------------------------------------------------------
+def test_vendored_canonicals_pass_and_ids_unique():
+    tasks = vendored_tasks()
+    ids = [t.task_id for t in tasks]
+    assert len(set(ids)) == len(ids)
+    for t in tasks:
+        r = check_completion(t, t.canonical_solution, timeout_s=15.0)
+        assert r.passed, (t.task_id, r.status, r.detail)
+
+
+def test_comment_task_passes_any_truncated_completion():
+    """The always-pass construction: prompt ends inside a comment with
+    stop ("\\n",) — arbitrary (even NUL-bearing) one-line garbage keeps
+    the program valid."""
+    t = smoke_tasks()[0]
+    assert t.stop_sequences == ("\n",)
+    for garbage in ("", "x]]]\x00)( !!", "import os; os.x", "\"'\\"):
+        r = check_completion(t, garbage, timeout_s=15.0)
+        assert r.passed, (garbage, r.detail)
+
+
+def test_needle_task_rejects_wrong_completion():
+    t = smoke_tasks()[1]
+    assert check_completion(t, t.canonical_solution, timeout_s=15.0).passed
+    assert check_completion(t, "oops", timeout_s=15.0).status == "failed"
+
+
+def test_load_jsonl_roundtrip_and_errors(tmp_path):
+    p = tmp_path / "suite.jsonl"
+    rows = [{"task_id": t.task_id, "prompt": t.prompt,
+             "entry_point": t.entry_point, "test": t.test,
+             "stop_sequences": list(t.stop_sequences),
+             "max_new_tokens": t.max_new_tokens,
+             "canonical_solution": t.canonical_solution}
+            for t in vendored_tasks()[:3]]
+    p.write_text("\n".join(json.dumps(r) for r in rows) + "\n\n")
+    loaded = load_jsonl(p)
+    assert [t.task_id for t in loaded] == [r["task_id"] for r in rows]
+    assert loaded[0] == vendored_tasks()[0]
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"task_id": "x"}\n')
+    with pytest.raises(ValueError, match="missing keys"):
+        load_jsonl(bad)
+    bad.write_text("not json\n")
+    with pytest.raises(ValueError, match="invalid JSON"):
+        load_jsonl(bad)
+    bad.write_text("")
+    with pytest.raises(ValueError, match="no tasks"):
+        load_jsonl(bad)
+    dup = json.dumps(rows[0])
+    bad.write_text(dup + "\n" + dup + "\n")
+    with pytest.raises(ValueError, match="duplicate"):
+        load_jsonl(bad)
+
+
+# ---------------------------------------------------------------------------
+# sandbox negative paths (satellite)
+# ---------------------------------------------------------------------------
+CALL_TEST = "def check(candidate):\n    candidate()\n"
+
+
+def test_sandbox_timeout_on_infinite_loop():
+    t = EvalTask(task_id="loop", prompt="def f():\n", entry_point="f",
+                 test=CALL_TEST)
+    t0 = time.monotonic()
+    r = check_completion(t, "    while True:\n        pass\n", timeout_s=2.0)
+    assert r.status == "timeout"
+    assert not r.passed
+    assert time.monotonic() - t0 < 30.0
+
+
+def test_sandbox_exception_is_failed_not_error():
+    t = EvalTask(task_id="boom", prompt="def f():\n", entry_point="f",
+                 test=CALL_TEST)
+    r = check_completion(t, "    raise RuntimeError('boom')\n",
+                         timeout_s=15.0)
+    assert r.status == "failed"          # sample wrong, harness fine
+    assert "boom" in r.detail
+
+
+def test_sandbox_assertion_and_syntax_are_failed():
+    t = EvalTask(task_id="val", prompt="def f():\n", entry_point="f",
+                 test="def check(candidate):\n    assert candidate() == 1\n")
+    assert check_completion(t, "    return 2\n",
+                            timeout_s=15.0).status == "failed"
+    assert check_completion(t, "  ((bad syntax",
+                            timeout_s=15.0).status == "failed"
+    assert check_completion(t, "    return 1\n", timeout_s=15.0).passed
+
+
+def test_sandbox_blocks_writes_outside_tempdir(tmp_path):
+    target = tmp_path / "escape-proof.txt"
+    t = EvalTask(
+        task_id="esc",
+        prompt=f"def f():\n    open({str(target)!r}, 'w').write('x')\n",
+        entry_point="f", test=CALL_TEST)
+    r = check_completion(t, "", timeout_s=15.0)
+    assert r.status == "failed"
+    assert "PermissionError" in r.detail
+    assert not target.exists()
+    # os.open write flags are guarded too
+    t2 = EvalTask(
+        task_id="esc2",
+        prompt=(f"import os\ndef f():\n"
+                f"    os.open({str(target)!r}, os.O_WRONLY | os.O_CREAT)\n"),
+        entry_point="f", test=CALL_TEST)
+    r2 = check_completion(t2, "", timeout_s=15.0)
+    assert r2.status == "failed" and "PermissionError" in r2.detail
+    assert not target.exists()
+
+
+def test_sandbox_allows_writes_inside_tempdir():
+    t = EvalTask(
+        task_id="inbox",
+        prompt=("import os\ndef f():\n"
+                "    open('scratch.txt', 'w').write('ok')\n"
+                "    assert open('scratch.txt').read() == 'ok'\n"),
+        entry_point="f", test=CALL_TEST)
+    r = check_completion(t, "", timeout_s=15.0)
+    assert r.passed, r.detail
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+def test_virtual_clock_deterministic_and_accounts_every_job():
+    jobs = [(40, 6), (10, 3), (25, 1), (30, 0), (16, 8)]
+    a = _virtual_clock(jobs, slots=2, chunk=16)
+    b = _virtual_clock(jobs, slots=2, chunk=16)
+    assert a == b
+    for kind in ("arrive", "admit", "retire"):
+        assert sum(1 for e in a["events"] if e[1] == kind) == len(jobs)
+    # every finished job has a finish tick; zero-token jobs have no TTFT
+    assert all(f is not None for f in a["finish_ticks"])
+    assert a["ttft_ticks"][3] is None
+    assert all(t >= 1 for t in a["ttft_ticks"] if t is not None)
+    # among co-queued jobs the shorter prompt admits first: jobs 1 (10)
+    # and 2 (25) both wait while job 0 prefills
+    admit = {e[2]: e[0] for e in a["events"] if e[1] == "admit"}
+    assert admit[1] < admit[2]
+
+
+def test_virtual_clock_slots_bound_concurrency():
+    jobs = [(8, 12)] * 6
+    one = _virtual_clock(jobs, slots=1, chunk=8)
+    four = _virtual_clock(jobs, slots=4, chunk=8)
+    assert four["makespan_ticks"] < one["makespan_ticks"]
+
+
+# ---------------------------------------------------------------------------
+# replay determinism + HTTP smoke on a tiny model
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def eval_model():
+    tok = CodeTokenizer(_SPECIALS)          # pure byte-fallback tokenizer
+    cfg = paper_mini(num_layers=6, d_model=64, vocab_size=tok.vocab_size)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, tok
+
+
+SMOKE_ARMS = (PolicyArm("baseline", {"name": "none"}),
+              PolicyArm("fixed@0", {"name": "fixed", "exit_idx": 0.0}))
+SMOKE_CFG = EvalRunConfig(n_samples=1, ks=(1,), temperature=0.0, seed=0)
+
+
+def test_replay_byte_identical_and_smoke_pass_rate(eval_model):
+    """The CI determinism gate in miniature: two full replays of the
+    2-task smoke suite are byte-identical, and the suite's pass@1 is
+    exactly 0.5 (comment task passes, needle task fails) on every arm."""
+    cfg, params, tok = eval_model
+    rep1 = run_replay(params, cfg, tok, smoke_tasks(), SMOKE_ARMS,
+                      SMOKE_CFG)
+    rep2 = run_replay(params, cfg, tok, smoke_tasks(), SMOKE_ARMS,
+                      SMOKE_CFG)
+    assert payload_bytes(rep1) == payload_bytes(rep2)
+    assert payload_digest(rep1) == payload_digest(rep2)
+    for name, arm in rep1["arms"].items():
+        s = arm["summary"]
+        assert s["pass_at"]["1"] == 0.5, name
+        assert s["statuses"] == {"failed": 1, "passed": 1}, name
+        assert s["tokens"] > 0 and s["decode_energy_j"] > 0
+        assert s["ttft_p95_ticks"] is not None
+    # the fixed-exit arm must be strictly cheaper than full depth (the
+    # 6-layer mini has an exit point at layer 4)
+    base = rep1["arms"]["baseline"]["summary"]
+    fixed = rep1["arms"]["fixed@0"]["summary"]
+    assert fixed["j_per_token"] < base["j_per_token"]
+    assert fixed["mean_exit_layer"] < base["mean_exit_layer"]
+
+
+def test_replay_payload_has_no_wallclock_fields(eval_model):
+    cfg, params, tok = eval_model
+    rep = run_replay(params, cfg, tok, smoke_tasks(), SMOKE_ARMS, SMOKE_CFG)
+
+    def walk(obj, path=""):
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                assert not k.endswith("_s"), f"wall-clock key {path}.{k}"
+                walk(v, f"{path}.{k}")
+        elif isinstance(obj, list):
+            for i, v in enumerate(obj):
+                walk(v, f"{path}[{i}]")
+    walk(rep)
+
+
+def test_frontier_and_write_bench(eval_model, tmp_path):
+    cfg, params, tok = eval_model
+    rep = run_replay(params, cfg, tok, smoke_tasks(), SMOKE_ARMS, SMOKE_CFG)
+    rows = frontier(rep)
+    assert [r["arm"] for r in rows] == ["fixed@0", "baseline"]  # cheap first
+    assert all("pass@1" in r and "ttft_p95_ticks" in r for r in rows)
+    out = tmp_path / "BENCH_eval.json"
+    bench = write_bench(out, replay_report=rep)
+    on_disk = json.loads(out.read_text())
+    assert on_disk["bench"] == "code_eval"
+    assert on_disk["replay_frontier"] == rows
+    assert on_disk["replay_digest"] == bench["replay_digest"]
+    with pytest.raises(ValueError):
+        write_bench(out)
+
+
+@pytest.fixture(scope="module")
+def eval_server(eval_model):
+    from repro.obs import Tracer
+    from repro.serving import Scheduler
+    from repro.serving.server import Handler, _State
+    cfg, params, tok = eval_model
+    _State.cfg, _State.params = cfg, params
+    _State.agent, _State.tokenizer = None, tok
+    sched = Scheduler(
+        params, cfg, allowed_kinds=("none", "fixed", "confidence",
+                                    "speculative"),
+        tokenizer=tok, max_slots=4, max_len=192, max_new=24,
+        prefill_chunk=16, spec_window=4, tracer=Tracer(enabled=True))
+    sched.start()
+    _State.scheduler = sched
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    yield f"http://127.0.0.1:{srv.server_address[1]}"
+    srv.shutdown()
+    sched.stop()
+    _State.scheduler = None
+
+
+def test_http_driver_smoke_with_span_join(eval_server):
+    rc = EvalRunConfig(n_samples=1, ks=(1,), temperature=0.0,
+                       rate_hz=100.0, seed=0)
+    rep = run_http(eval_server, smoke_tasks(), SMOKE_ARMS, rc)
+    assert rep["mode"] == "http"
+    for name, arm in rep["arms"].items():
+        s = arm["summary"]
+        assert s["transport_errors"] == 0, name
+        assert s["pass_at"]["1"] == 0.5, name
+        assert s["ttft_p95_s"] > 0
+        # per-request energy join: every sample matched a req/* lifecycle
+        # span and the span's joules equal the NDJSON record's
+        assert s["span_join_frac"] == 1.0, name
+        for smp in arm["samples"]:
+            assert smp["span_energy_j"] == pytest.approx(smp["energy_j"])
+            assert smp["tokens"] > 0
+            assert smp["ttft_s"] is not None
+
+
+def test_server_records_carry_energy_and_ttft(eval_server):
+    """The new final-record fields the eval client consumes."""
+    payload = {"inputs": "def add(a, b):\n",
+               "parameters": {"max_new_tokens": 4}}
+    req = urllib.request.Request(
+        f"{eval_server}/generate", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=120) as r:
+        out = json.loads(r.read())
+    assert out["tokens"] == len(out["exit_layers"])
+    assert out["decode_energy_j"] > 0
+    assert out["prefill_energy_j"] > 0
+    assert out["energy_per_token_j"] == pytest.approx(
+        out["decode_energy_j"] / out["tokens"])
+    assert out["ttft_s"] is not None and out["ttft_s"] <= out["latency_s"]
+    # scheduler-level TTFT percentiles surface in /queue
+    with urllib.request.urlopen(f"{eval_server}/queue", timeout=30) as r:
+        st = json.loads(r.read())
+    assert st["ttft_p95_s"] is not None and st["ttft_p95_s"] > 0
+
+
+def test_default_arms_shape():
+    arms = default_arms(thresholds=(0.5, 0.9))
+    names = [a.name for a in arms]
+    assert names[0] == "baseline"
+    assert "fixed@0" in names
+    assert "confidence@0.5" in names and "confidence@0.9" in names
+    assert names[-1] == "speculative"
+    specs = [a.spec() for a in arms]         # all validate eagerly
+    assert specs[0].name == "none"
+
+
+def test_sandbox_env_is_isolated():
+    """`python -I` + scrubbed env: the candidate must not see the
+    parent's PYTHONPATH (no repro import) or inherit cwd."""
+    t = EvalTask(
+        task_id="iso",
+        prompt=("import os, sys\n"
+                "def f():\n"
+                "    assert 'PYTHONPATH' not in os.environ\n"
+                "    assert (os.path.realpath(os.getcwd())\n"
+                "            == os.path.realpath(os.environ['HOME']))\n"
+                "    try:\n"
+                "        import repro\n"
+                "        raise AssertionError('repro importable')\n"
+                "    except ImportError:\n"
+                "        pass\n"),
+        entry_point="f", test=CALL_TEST)
+    r = check_completion(t, "", timeout_s=15.0)
+    assert r.passed, r.detail
+
+
+def test_run_config_sample_seeds_stable():
+    rc = EvalRunConfig(seed=7)
+    s1 = rc.sample_seed(0, 0)
+    assert s1 == rc.sample_seed(0, 0)
+    assert rc.sample_seed(0, 1) != s1
+    assert rc.sample_seed(1, 0) != s1
+    assert 0 <= s1 < 2 ** 31
+
+
+def test_smoke_pass_at_1_is_half_scalar():
+    """The arithmetic behind the CI hard gate: 1 pass + 1 fail at n=1."""
+    assert (pass_at_k(1, 1, 1) + pass_at_k(1, 0, 1)) / 2 == 0.5

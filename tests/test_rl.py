@@ -90,6 +90,103 @@ def test_episode_reset_on_last_token(env):
     assert (np.asarray(state["tok"]) < env.T).all()
 
 
+# ---------------------------------------------------------------------------
+# serving-side reward shaping (energy_weight / accuracy_weight hooks)
+# ---------------------------------------------------------------------------
+def _shaping_cfg():
+    from repro.configs.llama32_3b import paper_mini
+    return paper_mini(num_layers=12, d_model=32, vocab_size=64)
+
+
+def test_default_coefs_are_paper_reward():
+    """The shaping knobs default to 0.0 — the paper's Eq. 2/3 reward is
+    reproduced bit-for-bit (subtracting 0.0 * x is the identity), which
+    the exact-value tests above already pin. Here: the defaults really
+    are zero and an unshaped env needs no cfg."""
+    c = RewardCoefs()
+    assert c.energy_weight == 0.0 and c.accuracy_weight == 0.0
+    EarlyExitEnv(_toy_cache(), c, n_lanes=4)       # no cfg= required
+
+
+def test_energy_weight_requires_cfg():
+    with pytest.raises(ValueError, match="cfg"):
+        EarlyExitEnv(_toy_cache(), RewardCoefs(energy_weight=0.5),
+                     n_lanes=4)
+
+
+def test_energy_shaping_charges_exits_and_rejected_drafts():
+    cache = _toy_cache()
+    cfg = _shaping_cfg()
+    k = jax.random.PRNGKey(0)
+    base = EarlyExitEnv(cache, RewardCoefs(), n_lanes=4)
+    shaped = EarlyExitEnv(cache, RewardCoefs(energy_weight=1.0), n_lanes=4,
+                          cfg=cfg)
+    ef = np.asarray(shaped.arrays.exit_frac)
+    vf = np.asarray(shaped.arrays.verify_frac)
+    assert (ef > 0).all() and (vf > 0).all()
+    assert (np.diff(ef) > 0).all()       # deeper exit = more energy
+    assert np.allclose(np.asarray(base.arrays.exit_frac), 0.0)
+
+    s0, _ = base.reset(k)
+    t0, _ = shaped.reset(k)
+    ones = jnp.ones(4, jnp.int32)
+    zeros = jnp.zeros(4, jnp.int32)
+    # CONTINUE pays nothing
+    _, _, rb, _ = base.step(s0, zeros, k)
+    _, _, rs, _ = shaped.step(t0, zeros, k)
+    assert np.allclose(np.asarray(rb), np.asarray(rs))
+    # wrong EXIT at boundary 0 pays its exit cost PLUS the full-depth
+    # verify pass a rejected speculative draft costs
+    _, _, rb, _ = base.step(s0, ones, k)
+    _, _, rs, _ = shaped.step(t0, ones, k)
+    assert np.allclose(np.asarray(rs), np.asarray(rb) - (ef[0] + vf[0]),
+                       atol=1e-6)
+    # correct EXIT at boundary 1 pays only the exit cost (draft accepted)
+    s1, _, _, _ = base.step(s0, zeros, k)
+    t1, _, _, _ = shaped.step(t0, zeros, k)
+    _, _, rb, _ = base.step(s1, ones, k)
+    _, _, rs, _ = shaped.step(t1, ones, k)
+    assert np.allclose(np.asarray(rs), np.asarray(rb) - ef[1], atol=1e-6)
+
+
+def test_accuracy_shaping_uses_task_delta():
+    cache = _toy_cache().with_task_delta(0.25)
+    assert cache.task_delta.shape == (4,)
+    base = EarlyExitEnv(_toy_cache(), RewardCoefs(), n_lanes=4)
+    shaped = EarlyExitEnv(cache, RewardCoefs(accuracy_weight=2.0), n_lanes=4)
+    k = jax.random.PRNGKey(0)
+    s0, _ = base.reset(k)
+    t0, _ = shaped.reset(k)
+    ones = jnp.ones(4, jnp.int32)
+    zeros = jnp.zeros(4, jnp.int32)
+    # wrong EXIT at boundary 0: extra penalty = weight * delta
+    _, _, rb, _ = base.step(s0, ones, k)
+    _, _, rs, _ = shaped.step(t0, ones, k)
+    assert np.allclose(np.asarray(rs), np.asarray(rb) - 2.0 * 0.25,
+                       atol=1e-6)
+    # correct EXIT at boundary 1: no accuracy penalty
+    s1, _, _, _ = base.step(s0, zeros, k)
+    t1, _, _, _ = shaped.step(t0, zeros, k)
+    _, _, rb, _ = base.step(s1, ones, k)
+    _, _, rs, _ = shaped.step(t1, ones, k)
+    assert np.allclose(np.asarray(rb), np.asarray(rs))
+
+
+def test_task_delta_from_reports_join():
+    from repro.rl import task_delta_from_reports
+    baseline = {"summary": {"pass_at": {"1": 0.6, "10": 0.9}}}
+    exit_arm = {"summary": {"pass_at": {"1": 0.45, "10": 0.9}}}
+    d = task_delta_from_reports(baseline, exit_arm, 5)
+    assert d.shape == (5,) and d.dtype == np.float32
+    assert np.allclose(d, 0.15)
+    # an exit policy that helps is floored at zero, not rewarded
+    d = task_delta_from_reports(exit_arm, baseline, 3)
+    assert np.allclose(d, 0.0)
+    # k selects the pass@k column
+    d = task_delta_from_reports(baseline, exit_arm, 2, k="10")
+    assert np.allclose(d, 0.0)
+
+
 def test_ppo_learns_toy_env():
     """On the toy cache the optimal policy is deterministic — PPO should
     reach near-optimal mean step reward (continue@0 -> exit@1 = +1/step)."""
