@@ -68,6 +68,21 @@ def sampling_probs(logits: Array, temperature=0.0, top_k=0,
     return jnp.where((t <= 0.0)[:, None], onehot, probs)
 
 
+def chosen_logprob_matrix(logits: Array) -> Array:
+    """``log_softmax(logits [B, V])`` pinned into its own XLA fusion region.
+
+    Reported token log-probs are part of the speculative bit-exactness
+    contract: the generation loop computes them inside its scan body (fused
+    with argmax / sampling machinery) while the verify path computes them
+    from materialized window logits — two different programs whose fusion
+    context can shift the softmax reduction rounding by 1 ulp on CPU. The
+    optimization barriers make the region's clusters identical under every
+    caller, so both paths produce the same bits (accept_drafts routes its
+    per-position slices through this same function)."""
+    z = jax.lax.optimization_barrier(logits.astype(jnp.float32))
+    return jax.lax.optimization_barrier(jax.nn.log_softmax(z, axis=-1))
+
+
 def pick_tokens(logits: Array, key: Array, temperature=0.0, top_k=0,
                 top_p=1.0):
     """Pick next tokens from ``logits [B, V]``.
@@ -92,7 +107,7 @@ def pick_tokens(logits: Array, key: Array, temperature=0.0, top_k=0,
     logits = logits.astype(jnp.float32)
     B, V = logits.shape
 
-    logp = jax.nn.log_softmax(logits, axis=-1)
+    logp = chosen_logprob_matrix(logits)
     greedy_tok = jnp.argmax(logits, axis=-1)
     if isinstance(temperature, (int, float)) and temperature <= 0:
         return greedy_tok, jnp.take_along_axis(logp, greedy_tok[:, None],
@@ -163,7 +178,13 @@ def make_decode_fn(cfg: ModelConfig, controller=None, *,
     Pallas paged-attention kernel over the XLA gather reference.
 
     signature: fn(params, tokens [B], caches, pos [B], key) ->
-               (next_tokens [B], new_caches, exit_layer [B], logprob [B])
+               (next_tokens [B], new_caches, exit_layer [B], logprob [B],
+                logits [B, V] float32)
+
+    The returned logits let the speculative verify loop replay a token
+    window through this very closure (teacher-forced) and run acceptance
+    against full-depth scores — one step program shared with the baseline
+    loop, so speculative == baseline holds bit-for-bit by construction.
     """
     temp, top_k, top_p = _sampling_args(sampling, temperature)
 
@@ -173,7 +194,8 @@ def make_decode_fn(cfg: ModelConfig, controller=None, *,
                                                block_tables=block_tables,
                                                use_kernel=use_kernel)
         nxt, lp = pick_tokens(logits, key, temp, top_k, top_p)
-        return (nxt.astype(jnp.int32), new_caches, info["exit_layer"], lp)
+        return (nxt.astype(jnp.int32), new_caches, info["exit_layer"], lp,
+                logits.astype(jnp.float32))
 
     return fn
 
@@ -256,28 +278,29 @@ def generate(params, cfg: ModelConfig, prompt: Array, steps: int,
     tok0, lp0 = pick_tokens(logits0, k0, temp, top_k, top_p)
     tok0 = tok0.astype(jnp.int32)
 
-    def step(carry, k):
-        tok, caches, pos = carry
-        if seeds is not None:
-            k = request_keys(seeds, pos - off)
-        nxt, caches, exit_layer, lp = decode_fn(params, tok, caches, pos, k)
-        return (nxt, caches, pos + 1), (tok, exit_layer, lp)
+    # A host loop over one jitted step (not lax.scan): the speculative
+    # verify replays token windows through the very same step program
+    # (``make_decode_fn``), which is what makes speculative == baseline
+    # bit-exact. Scanned and standalone compilations of the *same* body
+    # can differ by 1 ulp on CPU (fusion context shifts reduction
+    # rounding), so the baseline must run the shareable program itself.
+    decode_jit = jax.jit(decode_fn)
+    toks = [tok0]
+    # first generated token comes from full-depth prefill
+    exits = [jnp.full((B,), cfg.num_layers, jnp.int32)]
+    lps = [lp0]
+    keys = jax.random.split(key, steps - 1) if steps > 1 else []
+    tok = tok0
+    pos = jnp.full((B,), total0, jnp.int32)
+    for s in range(steps - 1):
+        k = request_keys(seeds, pos - off) if seeds is not None else keys[s]
+        tok, caches, exit_layer, lp, _ = decode_jit(params, tok, caches,
+                                                    pos, k)
+        toks.append(tok)
+        exits.append(exit_layer)
+        lps.append(lp)
+        pos = pos + 1
 
-    if steps > 1:
-        keys = jax.random.split(key, steps - 1)
-        pos0 = jnp.full((B,), total0, jnp.int32)
-        (last_tok, caches, _), (toks, exits, lps) = jax.lax.scan(
-            step, (tok0, caches, pos0), keys)
-        # scan emitted the *input* token of each step; append the last output
-        tokens = jnp.concatenate([toks.T, last_tok[:, None]], axis=1)
-        # first generated token comes from full-depth prefill
-        exit_layers = jnp.concatenate(
-            [jnp.full((B, 1), cfg.num_layers, jnp.int32), exits.T], axis=1)
-        logprobs = jnp.concatenate([lp0[:, None], lps.T], axis=1)
-    else:
-        tokens = tok0[:, None]
-        exit_layers = jnp.full((B, 1), cfg.num_layers, jnp.int32)
-        logprobs = lp0[:, None]
-
-    return {"tokens": tokens, "exit_layers": exit_layers,
-            "logprobs": logprobs}
+    return {"tokens": jnp.stack(toks, axis=1),
+            "exit_layers": jnp.stack(exits, axis=1),
+            "logprobs": jnp.stack(lps, axis=1)}

@@ -23,10 +23,16 @@ guaranteed exact:
     also passes when its full-depth probability reaches the threshold),
     trading exactness for acceptance rate.
 
-Rejected positions roll back: contiguous ring caches invalidate their
-``pos`` entries (``rewind_ring``), paged pools unbind the rejected block
-appends (``PagedKVPool.rollback_append``) — K/V garbage stays where it is,
-masked exactly like never-written slots.
+Rejected positions roll back: contiguous full-length ring caches invalidate
+their ``pos`` entries (``rewind_ring``), paged pools unbind the rejected
+block appends (``PagedKVPool.rollback_append``) — K/V garbage stays where
+it is, masked exactly like never-written slots. Configs whose cache writes
+are destructive (mamba recurrent state, sliding-window ring evictions) use
+the snapshot/commit protocol instead: the caches are snapshotted before
+drafting, restored before the verify pass, and committed per row afterwards
+(``transformer.commit_spec_cache``) from the verify scan's own per-step
+state snapshots — so every architecture in the zoo keeps the bit-exactness
+guarantee (tests/test_arch_matrix.py pins it per config).
 
 Energy: drafts are charged at the draft boundary, verification at full
 depth (``core.energy.speculative_step_energy``); the win is wall-clock and
@@ -44,18 +50,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
+from repro.config import MIXER_MAMBA, ModelConfig
 from repro.core import energy
-from repro.core.early_exit import (_sampling_args, pick_tokens, request_keys,
+from repro.core.early_exit import (_sampling_args, chosen_logprob_matrix,
+                                   make_decode_fn, pick_tokens, request_keys,
                                    sampling_probs)
 from repro.core.exit_points import segment_boundaries
-from repro.models.transformer import (decode_step, lm_logits, prefill,
+from repro.models.transformer import (_mamba_cache_parts, commit_spec_cache,
+                                      decode_step, lm_logits, prefill,
                                       rewind_ring, ring_to_paged,
+                                      spec_needs_cache_snapshot,
                                       speculative_unsupported, verify_step)
 
 Array = jax.Array
 
 SPEC_POLICY = "speculative"
+
+_logp_jit = jax.jit(chosen_logprob_matrix)
 
 
 def draft_boundary_layer(cfg: ModelConfig, draft_idx) -> int:
@@ -104,7 +115,8 @@ def _residual_sample(seed: int, pos: int, p_t: np.ndarray,
 def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
                   windows, temperature=0.0, top_k=0, top_p=1.0, seeds=None,
                   pos0=None, accept_threshold=1.0,
-                  draft_logits: Optional[np.ndarray] = None):
+                  draft_logits: Optional[np.ndarray] = None,
+                  step_picks=None):
     """Accept/reject a draft window against full-depth verify logits.
 
     draft_tokens: [B, K] proposals; target_logits: [B, K+1, V] full-depth
@@ -116,6 +128,13 @@ def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
     threshold. Sampled rows run standard rejection sampling against the
     shared :func:`sampling_probs` distributions (``draft_logits`` [B, K, V]
     required) with draws keyed by (seed, absolute position).
+
+    ``step_picks`` — optional ``(tokens [B, K+1], logprobs [B, K+1])`` from
+    replaying the window through the baseline decode-step program
+    (``speculative_generate``'s contiguous verify loop). When given, greedy
+    rows accept against and emit from these values directly: they carry the
+    exact bits the non-speculative loop would produce, so parity does not
+    depend on recomputing argmax/log-softmax in a second program.
 
     Returns ``(n_accept [B], next_token [B], emit_logprobs [B, K+1])`` —
     row b emits ``draft_tokens[b, :n_accept[b]]`` then ``next_token[b]``
@@ -133,8 +152,12 @@ def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
     pos0 = np.broadcast_to(np.asarray(0 if pos0 is None else pos0,
                                       np.int64), (B,))
 
-    logp = np.asarray(jax.nn.log_softmax(jnp.asarray(target_logits),
-                                         axis=-1))
+    # per-position [B, V] slices through the same barrier-isolated
+    # log-softmax region the baseline loop uses (chosen_logprob_matrix) —
+    # emitted log-probs must match the non-speculative path bit-for-bit
+    logp = np.stack(
+        [np.asarray(_logp_jit(jnp.asarray(target_logits[:, j])))
+         for j in range(K + 1)], axis=1)
     any_sampled = bool((temp > 0).any())
     lenient = bool((thr < 1.0).any())
     if any_sampled:
@@ -160,6 +183,11 @@ def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
                                             (B,)), K))
             p_d = np.asarray(flat).reshape(B, K, V)
 
+    step_tok = step_lp = None
+    if step_picks is not None:
+        step_tok = np.asarray(step_picks[0])
+        step_lp = np.asarray(step_picks[1], np.float32)
+
     n_accept = np.zeros(B, np.int64)
     next_tok = np.zeros(B, np.int64)
     emit_lp = np.zeros((B, K + 1), np.float32)
@@ -170,7 +198,11 @@ def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
         while n < w:
             d = int(draft_tokens[b, n])
             if temp[b] <= 0.0:
-                ok = d == int(np.argmax(target_logits[b, n]))
+                if step_tok is not None:
+                    ok = d == int(step_tok[b, n])
+                else:
+                    ok = d == int(np.argmax(target_logits[b, n]))
+                strict = ok
                 if not ok and lenient and thr[b] < 1.0:
                     # lenient mode: a near-argmax draft passes on its
                     # full-precision head probability, trading exactness
@@ -184,11 +216,22 @@ def accept_drafts(draft_tokens: np.ndarray, target_logits: np.ndarray, *,
                                               p_t[b, n], p_d[b, n])
             if not ok:
                 break
-            emit_lp[b, n] = logp[b, n, d]
+            # a strictly-accepted greedy draft IS the step program's pick:
+            # emit the exact log-prob bits the baseline loop would report
+            if step_lp is not None and temp[b] <= 0.0 and strict:
+                emit_lp[b, n] = step_lp[b, n]
+            else:
+                emit_lp[b, n] = logp[b, n, d]
             n += 1
         if forced is not None:
             t = forced
         elif temp[b] <= 0.0:
+            if step_tok is not None:
+                t = int(step_tok[b, n])
+                n_accept[b] = n
+                next_tok[b] = t
+                emit_lp[b, n] = step_lp[b, n]
+                continue
             t = int(np.argmax(target_logits[b, n]))
         else:                            # bonus draw from the target dist
             rng = np.random.default_rng([int(seeds[b]) & 0x7FFFFFFF,
@@ -266,13 +309,33 @@ def speculative_generate(params, cfg: ModelConfig, prompt: Array,
         nxt, _ = pick_tokens(logits, keys, temp, top_k, top_p)
         return nxt.astype(jnp.int32), new_caches, logits.astype(jnp.float32)
 
+    # snapshot configs (mamba state / sliding-window rings): draft writes
+    # are destructive, so the loop snapshots before drafting, restores the
+    # snapshot for the verify pass, and commits per row afterwards; the
+    # cheap pos-rewind protocol covers everything else
+    snapshot = tables is None and spec_needs_cache_snapshot(cfg)
+    collect = snapshot and any(s.mixer == MIXER_MAMBA
+                               for s in cfg.block_pattern)
+
     def _verify(params, win, caches, pos0):
         return verify_step(params, cfg, win, caches, pos0,
                            block_tables=tables, use_kernel=use_kernel)
 
     draft_jit = jax.jit(_draft, donate_argnums=2)
+    # contiguous caches: verification replays the window teacher-forced
+    # through the SAME full-depth step closure the baseline loop compiles
+    # (``generate`` -> make_decode_fn, controller None) — one step program
+    # for both paths, so greedy tokens and emitted log-probs agree with
+    # non-speculative decoding bit-for-bit by construction rather than by
+    # cross-program compile luck. Paged caches keep the fused window scan
+    # (strict masking makes rollback trivial there).
+    step_jit = jax.jit(make_decode_fn(cfg, None, temperature=temperature,
+                                      sampling=sampling))
     verify_jit = jax.jit(_verify, donate_argnums=2)
     rewind_jit = jax.jit(partial(rewind_ring, cfg), donate_argnums=0)
+    copy_jit = jax.jit(lambda c: jax.tree.map(jnp.copy, c))
+    commit_jit = jax.jit(partial(commit_spec_cache, cfg),
+                         donate_argnums=(0, 1))
 
     pos = np.full(B, S0, np.int64)
     cur = np.asarray(t0, np.int64).copy()
@@ -297,6 +360,7 @@ def speculative_generate(params, cfg: ModelConfig, prompt: Array,
         win = np.zeros((B, K + 1), np.int64)
         win[:, 0] = cur
         dlogits = []
+        snap = copy_jit(caches) if snapshot else None
         tok = jnp.asarray(cur, jnp.int32)
         for j in range(1, K + 1):
             pj = jnp.asarray(p0 + j - 1, jnp.int32)
@@ -306,25 +370,60 @@ def speculative_generate(params, cfg: ModelConfig, prompt: Array,
             win[:, j] = np.asarray(tok)
             if sampled:
                 dlogits.append(np.asarray(dl))
-        if tables is None:
-            # the verify scan must see clean slots: the inclusive cache
+        if snapshot:
+            # draft writes were destructive (mamba state updates, window
+            # evictions): verify must start from the pre-draft caches
+            caches = copy_jit(snap)
+        elif tables is None:
+            # the verify pass must see clean slots: the inclusive cache
             # mask plus the explicit self term would double-count a
             # still-valid draft entry at the query's own position
             caches = rewind_jit(caches, jnp.asarray(p0 - 1, jnp.int32))
-        tlogits, caches = verify_jit(params, jnp.asarray(win, jnp.int32),
-                                     caches, jnp.asarray(p0, jnp.int32))
+        state_snaps = picks = None
+        if tables is None:
+            # teacher-forced replay through the shared baseline step
+            tl, parts = [], []
+            step_tok = np.zeros((B, K + 1), np.int64)
+            step_lp = np.zeros((B, K + 1), np.float32)
+            for j in range(K + 1):
+                pj = jnp.asarray(p0 + j, jnp.int32)
+                kj = request_keys(jnp.asarray(seeds, jnp.int32),
+                                  pj - jnp.asarray(off, jnp.int32))
+                nxt_j, caches, _, lp_j, lg_j = step_jit(
+                    params, jnp.asarray(win[:, j], jnp.int32), caches, pj,
+                    kj)
+                step_tok[:, j] = np.asarray(nxt_j)
+                step_lp[:, j] = np.asarray(lp_j)
+                tl.append(np.asarray(lg_j))
+                if collect:
+                    # mamba state after consuming window position j — the
+                    # commit indexes these at each row's acceptance count
+                    parts.append(_mamba_cache_parts(cfg, caches))
+            tlogits = np.stack(tl, axis=1)
+            picks = (step_tok, step_lp)
+            if collect:
+                state_snaps = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *parts)
+        else:
+            tlogits, caches = verify_jit(params, jnp.asarray(win, jnp.int32),
+                                         caches, jnp.asarray(p0, jnp.int32))
+            tlogits = np.asarray(tlogits)
         live = produced < steps
         eff_w = np.minimum(windows, np.maximum(steps - produced - 1, 0))
         n_acc, nxt, emit_lp = accept_drafts(
-            win[:, 1:], np.asarray(tlogits), windows=np.where(live, eff_w,
-                                                              0),
+            win[:, 1:], tlogits, windows=np.where(live, eff_w, 0),
             temperature=temp, top_k=top_k, top_p=top_p, seeds=seeds,
             # draws are keyed by the row's own (unpadded) positions, like
             # every pick_tokens key above — batch-composition independent
             pos0=p0 - off, accept_threshold=accept_threshold,
-            draft_logits=np.stack(dlogits, axis=1) if sampled else None)
+            draft_logits=np.stack(dlogits, axis=1) if sampled else None,
+            step_picks=picks)
         keep = np.where(live, p0 + n_acc, p0 - 1)
-        if tables is None:
+        if snapshot:
+            caches = commit_jit(caches, snap, jnp.asarray(keep, jnp.int32),
+                                state_snaps,
+                                jnp.asarray(n_acc, jnp.int32))
+        elif tables is None:
             caches = rewind_jit(caches, jnp.asarray(keep, jnp.int32))
         for b in np.nonzero(live)[0]:
             m = int(n_acc[b]) + 1

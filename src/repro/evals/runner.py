@@ -168,12 +168,25 @@ def _flat_samples(tasks, cfg: EvalRunConfig):
 # ---------------------------------------------------------------------------
 # Deterministic replay driver
 # ---------------------------------------------------------------------------
-def _virtual_clock(jobs, *, slots: int = 4, chunk: int = 16) -> dict:
+def _virtual_clock(jobs, *, slots: int = 4, chunk: int = 16,
+                   substeps: int = 1, interleave_prefill: bool = True,
+                   tokens_per_super: int = 1) -> dict:
     """Integer virtual-clock timing for a list of (prompt_len, n_tokens)
-    jobs, mirroring ``run_admission_trace``: job i arrives at tick i, one
+    jobs, mirroring ``run_admission_trace``: job i arrives at step i, one
     chunked prefill in flight at a time (shortest prompt first, id
-    tiebreak, ``ceil(plen/chunk)`` ticks), then 1 token per resident per
-    tick. TTFT is arrival → end of the job's last prefill chunk."""
+    tiebreak, ``ceil(plen/chunk)`` chunk steps), then ``tokens_per_super``
+    tokens per resident per super-tick. TTFT is arrival → end of the job's
+    last prefill chunk, measured in compiled-model *steps* so arms with
+    different super-tick depths stay comparable.
+
+    ``substeps`` models the super-tick depth: a speculative arm runs
+    ``spec_window`` draft steps + 1 verify per scheduler tick, so its
+    super-tick costs ``spec_window + 1`` steps. With
+    ``interleave_prefill`` (the scheduler's behavior) the in-flight
+    admission advances one chunk per *step*; without it (the pre-fix
+    scheduler, kept as the regression baseline) prefill advances only one
+    chunk per super-tick — which is exactly the ``(K+1)x`` TTFT
+    starvation the BENCH_eval.json speculative outlier showed."""
     n = len(jobs)
     queue: list = []
     prefill = None                    # [job_idx, chunks_left]
@@ -183,9 +196,11 @@ def _virtual_clock(jobs, *, slots: int = 4, chunk: int = 16) -> dict:
     events = []
     done = 0
     arrived = 0
-    for t in range(1_000_000):
+    chunks_per_super = substeps if interleave_prefill else 1
+    for s in range(1_000_000):
         if done == n:
             break
+        t = s * substeps              # clock in compiled-model steps
         while arrived < n and arrived <= t:
             queue.append(arrived)
             events.append([t, "arrive", arrived])
@@ -196,30 +211,32 @@ def _virtual_clock(jobs, *, slots: int = 4, chunk: int = 16) -> dict:
             prefill = [i, max(-(-jobs[i][0] // chunk), 1)]
             events.append([t, "admit", i])
         for i in sorted(residents):
-            residents[i] -= 1
+            residents[i] -= min(tokens_per_super, residents[i])
             if residents[i] == 0:
                 del residents[i]
                 finish[i] = t
                 events.append([t, "retire", i])
                 done += 1
         if prefill is not None:
-            prefill[1] -= 1
+            advanced = min(chunks_per_super, prefill[1])
+            prefill[1] -= advanced
             if prefill[1] == 0:
                 i, prefill = prefill[0], None
+                t_done = t + advanced            # chunk steps consumed
                 n_tok = jobs[i][1]
                 if n_tok > 0:
-                    ttft[i] = t - i + 1          # arrival tick is i
-                    events.append([t, "first_token", i])
+                    ttft[i] = t_done - i         # arrival step is i
+                    events.append([t_done, "first_token", i])
                 if n_tok <= 1:                   # 0 or 1 token: no decode
-                    finish[i] = t
-                    events.append([t, "retire", i])
+                    finish[i] = t_done
+                    events.append([t_done, "retire", i])
                     done += 1
                 else:
                     residents[i] = n_tok - 1
     else:
         raise RuntimeError("virtual clock did not converge")
     return {"events": events, "ttft_ticks": ttft,
-            "finish_ticks": finish, "makespan_ticks": t}
+            "finish_ticks": finish, "makespan_ticks": s * substeps}
 
 
 def run_replay(params, model_cfg, tokenizer, tasks, arms, cfg: EvalRunConfig,
@@ -276,7 +293,13 @@ def run_replay(params, model_cfg, tokenizer, tasks, arms, cfg: EvalRunConfig,
                     "text_sha256": _sha(res.text or ""),
                 })
                 jobs.append((len(enc[task.task_id]), res.n_tokens))
-            vc = _virtual_clock(jobs, slots=slots, chunk=prefill_chunk)
+            # speculative arms run spec_window drafts + 1 verify per
+            # super-tick; the clock charges them in compiled-model steps
+            # (with the scheduler's chunk-per-step prefill interleave) so
+            # TTFT stays comparable to the baseline arm
+            is_spec = str(arm.policy["name"]) == "speculative"
+            vc = _virtual_clock(jobs, slots=slots, chunk=prefill_chunk,
+                                substeps=(spec_window + 1) if is_spec else 1)
             ttfts = [float(x) for x in vc["ttft_ticks"] if x is not None]
             summary = _aggregate_arm(arm, tasks, samples, cfg, ttfts,
                                      "ticks")

@@ -336,6 +336,70 @@ def apply_mla_train(p, cfg: ModelConfig, x: Array, *, window: int = 0,
     return out @ p["wo"], (latent, k_rope)
 
 
+def mla_chunk_qkv(p, cfg: ModelConfig, x: Array, pos0: Array):
+    """Multi-token MLA projections with per-row absolute rope positions.
+
+    x: [B, C, D] (a prefill chunk); pos0: [B] absolute position of
+    x[:, 0]. Returns (q_nope [B,C,H,nope], q_rope [B,C,H,rope],
+    latent [B,C,kvr], k_rope [B,C,rope]) — rope applied at ``pos0 + j``
+    per chunk index j. The MLA analogue of :func:`window_qkv`.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = apply_norm({"scale": p["q_norm"]}, x @ p["wdq"])
+    q = (q_lat @ p["wuq"]).reshape(B, S, H, qk_head)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    latent = apply_norm({"scale": p["kv_norm"]}, x @ p["wdkv"])
+    k_rope = (x @ p["wkr"])[:, :, None, :]
+
+    def rot(qr, kr, p0):
+        cos, sin = rope_freqs(m.qk_rope_head_dim, cfg.rope_theta,
+                              p0 + jnp.arange(S))
+        return apply_rope(qr, cos, sin), apply_rope(kr, cos, sin)
+    q_rope, k_rope = jax.vmap(rot)(q_rope, k_rope, pos0)
+    return q_nope, q_rope, latent, k_rope[:, :, 0, :]
+
+
+def mla_chunk_attend(p, cfg: ModelConfig, q_nope: Array, q_rope: Array,
+                     latent_ring: Array, krope_ring: Array, mask: Array):
+    """Absorbed-weight attention of C chunk queries against the full
+    latent ring (insert-then-attend: the chunk's own latents are already
+    in the ring, so there is no separate self term and every softmax
+    reduction runs at the fixed ring length — the property that makes
+    chunked prefill bit-identical for any chunk split).
+
+    q_nope/q_rope: [B,C,H,*]; latent_ring: [B,T,kvr];
+    krope_ring: [B,T,rope]; mask: [B,C,T] (True = attendable).
+    Returns out [B, C, H * v_head_dim] (pre-``wo``).
+    """
+    m = cfg.mla
+    H = cfg.num_heads
+    B, C = q_nope.shape[:2]
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    wuk_h = jnp.transpose(p["wuk"].reshape(m.kv_lora_rank, H,
+                                           m.qk_nope_head_dim), (1, 0, 2))
+    q_abs = jnp.einsum("bchd,hrd->bchr", q_nope, wuk_h)
+    scale = qk_head ** -0.5
+    s = (jnp.einsum("bchr,btr->bhct", q_abs, latent_ring,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bchd,btd->bhct", q_rope, krope_ring,
+                      preferred_element_type=jnp.float32)) * scale
+    s = softcap(s, cfg.attn_logit_softcap)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    mx = s.max(axis=-1)
+    pr = jnp.exp(s - mx[..., None])
+    denom = pr.sum(axis=-1)
+    o_lat = jnp.einsum("bhct,btr->bhcr", pr, latent_ring,
+                       preferred_element_type=jnp.float32)
+    o_lat = (o_lat / denom[..., None]).astype(q_nope.dtype)
+    wuv_h = jnp.transpose(p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim),
+                          (1, 0, 2))
+    o = jnp.einsum("bhcr,hrd->bchd", o_lat, wuv_h)
+    return o.reshape(B, C, H * m.v_head_dim)
+
+
 def apply_mla_decode(p, cfg: ModelConfig, x: Array, latent_cache: Array,
                      krope_cache: Array, kv_pos: Array, pos: Array, *,
                      window: int = 0):

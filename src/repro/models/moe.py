@@ -58,6 +58,17 @@ def _capacity(num_tokens: int, num_experts: int, k: int,
     return max(c, k, 4)
 
 
+def dropless_capacity_factor(cfg: ModelConfig) -> float:
+    """Capacity factor guaranteeing zero token drops for ANY routing:
+    f = E/K makes ``_capacity`` >= T, so every (token, k) pair gets an
+    expert slot regardless of how skewed the router is. With no drops the
+    per-token output is independent of which tokens share the batch — the
+    invariance chunked prefill needs (the chunk grid must not change
+    routing). Costs an [E, T+1, D] dispatch buffer, fine at chunk scale;
+    full-length training/decode paths keep ``_moe_capacity_factor``."""
+    return float(cfg.moe.num_experts) / cfg.moe.num_experts_per_tok
+
+
 def apply_moe(p, cfg: ModelConfig, x: Array, *, capacity_factor: float = 1.25):
     """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
 

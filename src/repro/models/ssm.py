@@ -198,6 +198,74 @@ def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
     }
 
 
+def apply_mamba_chunk(p, cfg: ModelConfig, x: Array, cache, pos0: Array,
+                      n_valid: Array):
+    """Chunk-prefill step: per-token SSD recurrence over a ``[B, C, D]``
+    chunk, carrying ``(recurrent state, conv tail)`` chunk-to-chunk.
+
+    Every per-position op (conv tap-sum, dt/decay, the scanned h update)
+    has a fixed reduction extent, so the result is bit-identical for ANY
+    chunk grid — including the one-chunk whole-prompt case the parity
+    tests use as reference. Positions at/after ``n_valid`` (final-chunk
+    padding) are neutralized by forcing ``dt = 0``: ``decay = exp(0) = 1``
+    exactly and the state-update term vanishes, so the carried state
+    passes through pad rows bitwise unchanged.
+
+    x: [B, C, D]; cache: ``init_mamba_cache`` layout (state f32, conv
+    tail of *pre-activation* xbc rows); pos0/n_valid: [B] int32.
+    Returns (y [B, C, D], new cache). Output rows past ``n_valid`` are
+    garbage and must be masked by the caller (the scheduler only reads
+    the last valid position's logits).
+    """
+    s = cfg.ssm
+    d_in, H, _ = _dims(cfg)
+    B, C, _ = x.shape
+    K = s.conv_dim - 1
+    proj = x @ p["in_proj"]                             # [B, C, d_proj]
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    # causal conv over [carried tail | chunk]: position pos0+j reads
+    # rows j..j+K of the concatenated window — same tap-sum chain as
+    # _causal_conv, with the carry replacing the zero left-pad
+    full = jnp.concatenate([cache["conv"].astype(xbc_raw.dtype), xbc_raw],
+                           axis=1)                      # [B, K+C, ch]
+    w = p["conv_w"]
+    conv = sum(full[:, k: k + C, :] * w[k] for k in range(s.conv_dim))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+    xs = xbc[..., :d_in]
+    Bs = xbc[..., d_in: d_in + s.state_dim].astype(jnp.float32)
+    Cs = xbc[..., d_in + s.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, C, H]
+    idx = pos0[:, None] + jnp.arange(C, dtype=pos0.dtype)        # [B, C]
+    valid = idx < n_valid[:, None]
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    xh = xs.reshape(B, C, H, s.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                      # [B, C, H]
+
+    def step(h, inp):
+        dt_t, xh_t, B_t, C_t, dec_t = inp
+        h = h * dec_t[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, xh_t, B_t)
+        y_t = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y_t
+
+    per_t = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0),
+                         (dt, xh, Bs, Cs, decay))
+    h_last, ys = jax.lax.scan(step, cache["state"], per_t)
+    y = jnp.moveaxis(ys, 0, 1) + xh * p["D"][:, None]            # [B,C,H,P]
+    y = y.reshape(B, C, d_in).astype(x.dtype)
+    y = _gated_norm(p, y, z)
+    out = y @ p["out_proj"]
+    # conv tail = raw xbc rows of the last K *valid* positions: rows
+    # [v, v+K) of the concatenated window, v = clip(n_valid - pos0, 0, C)
+    # (v clips to C on non-final chunks; short prompts pick up the
+    # zero-initialized carry rows, matching apply_mamba_train's left-pad)
+    v = jnp.clip(n_valid - pos0, 0, C)
+    tail_idx = v[:, None] + jnp.arange(K, dtype=v.dtype)         # [B, K]
+    tail = jnp.take_along_axis(full, tail_idx[..., None], axis=1)
+    return out, {"state": h_last, "conv": tail.astype(cache["conv"].dtype)}
+
+
 def apply_mamba_decode(p, cfg: ModelConfig, x: Array, cache):
     """One-token SSD recurrence. x: [B, 1, D] -> (y [B, 1, D], new cache)."""
     s = cfg.ssm

@@ -38,11 +38,12 @@ from repro.models import ssm
 from repro.models.attention import (NEG_INF, apply_gqa_decode,
                                     apply_gqa_train, apply_mla_decode,
                                     apply_mla_train, decode_qkv, init_gqa,
-                                    init_mla, window_qkv)
+                                    init_mla, mla_chunk_attend, mla_chunk_qkv,
+                                    window_qkv)
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
                                  init_embed, init_mlp, init_norm,
                                  padded_vocab, softcap)
-from repro.models.moe import apply_moe, init_moe
+from repro.models.moe import apply_moe, dropless_capacity_factor, init_moe
 from repro.sharding import constrain
 
 Array = jax.Array
@@ -319,22 +320,33 @@ def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
     ``paged``: None for ring caches, else ``(block_tables [B, nb] int32,
     use_kernel: bool)`` and the cache leaves are block planes.
     ``write_mask``: [B] bool — rows with False skip every cache write (the
-    speculative verify step batches rows whose caches must stay untouched);
-    only supported for full-attention GQA layers (``speculative_unsupported``
-    gates the rest).
+    speculative verify step batches rows whose caches must stay untouched):
+    ring writes scatter out of bounds and drop, mamba state updates are
+    where'd back to the old state per row.
     Returns (h, new_cache, aux).
     """
     window = _window_for(cfg, spec)
     aux = jnp.zeros((), jnp.float32)
+    # Pin the layer into its own XLA fusion region: different callers
+    # (standalone decode step, the batched verify scan) compile different
+    # surrounding programs, and on CPU the fusion context can shift
+    # reduction rounding by 1 ulp inside windowed-softmax / softcap layers.
+    # The barrier keeps the layer's clusters caller-independent, shrinking
+    # that drift. (The *guarantee* of speculative == baseline bit-exactness
+    # comes from sharing one step program — see core.speculative — not from
+    # this; decode-only, so no differentiation rule is needed.)
+    h, cache = jax.lax.optimization_barrier((h, cache))
     x = apply_norm(lp["norm1"], h)
     B = h.shape[0]
-    if write_mask is not None and (spec.mixer in (MIXER_MAMBA, MIXER_MLA)
-                                   or window):
-        raise NotImplementedError(
-            f"write_mask (speculative verify) unsupported for "
-            f"{spec.mixer} layers: {speculative_unsupported(cfg)}")
     if spec.mixer == MIXER_MAMBA:
         out, new_cache = ssm.apply_mamba_decode(lp["mixer"], cfg, x, cache)
+        if write_mask is not None:
+            # masked rows keep their state bit-unchanged (the speculative
+            # verify batches rows whose caches it must not touch)
+            new_cache = jax.tree.map(
+                lambda new, old: jnp.where(
+                    write_mask.reshape((B,) + (1,) * (new.ndim - 1)),
+                    new, old), new_cache, cache)
     elif paged is not None:
         # only full-attention GQA layers page (paged_unsupported gates)
         mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
@@ -346,11 +358,15 @@ def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
             lp["mixer"], cfg, x, cache["latent"], cache["krope"],
             cache["pos"], pos, window=window)
         slot = pos % W
+        if write_mask is not None:
+            slot = jnp.where(write_mask, slot, W)    # OOB -> dropped write
         bidx = jnp.arange(B)
         new_cache = {
-            "latent": cache["latent"].at[bidx, slot].set(lat_new[:, 0]),
-            "krope": cache["krope"].at[bidx, slot].set(kr_new[:, 0]),
-            "pos": cache["pos"].at[bidx, slot].set(pos),
+            "latent": cache["latent"].at[bidx, slot].set(lat_new[:, 0],
+                                                         mode="drop"),
+            "krope": cache["krope"].at[bidx, slot].set(kr_new[:, 0],
+                                                       mode="drop"),
+            "pos": cache["pos"].at[bidx, slot].set(pos, mode="drop"),
         }
     else:
         mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
@@ -398,6 +414,7 @@ def _apply_layer_decode(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
         h_new = h_new + y
     # predication: exited tokens keep their frozen hidden state
     h = jnp.where(active[:, None, None], h_new, h)
+    h, new_cache = jax.lax.optimization_barrier((h, new_cache))
     return h, new_cache, aux
 
 
@@ -837,26 +854,21 @@ def copy_paged_block(cfg: ModelConfig, caches, src, dst):
 def chunked_prefill_unsupported(cfg: ModelConfig) -> Optional[str]:
     """Why this config cannot use chunked prefill (None = it can).
 
-    Chunking covers full-attention GQA layers (incl. shared-weight and int8
-    variants) — the class whose prefix K/V is an exact function of the
-    prefix tokens. Mamba prefill carries recurrent state through a
-    different (train-path) scan, MLA latent rings are not chunk-aware yet,
-    sliding-window rings evict prefix entries later chunks must re-read,
-    and MoE expert-capacity routing couples tokens at prefill, so the
-    chunk grid would change the routing (and therefore the output). The
-    scheduler falls back to whole-prompt prefill for these configs.
+    Chunking covers the whole architecture zoo: full-attention GQA (incl.
+    shared-weight and int8 variants), sliding-window layers (the prefill
+    ring is full-length, so later chunks still see every prefix entry the
+    window mask admits), MLA latent rings, mamba layers (recurrent state
+    and the conv tail carry chunk-to-chunk), and MoE layers (the chunk
+    path routes at a dropless capacity, so the chunk grid cannot change
+    expert assignment). tests/test_arch_matrix.py pins bit-exact
+    chunk-split invariance per config. The one declared hole: frontend
+    configs (musicgen/pixtral), whose modality conditioning embeddings are
+    not threaded through the chunk step — the scheduler falls back to
+    whole-prompt prefill for these and counts the fallback in ``stats()``.
     """
-    for spec in cfg.block_pattern:
-        if spec.mixer == MIXER_MAMBA:
-            return "mamba prefill carries recurrent state, not a KV ring"
-        if spec.mixer == MIXER_MLA:
-            return "MLA latent rings are not chunk-aware yet"
-        if _window_for(cfg, spec):
-            return ("sliding-window rings evict prefix entries later "
-                    "chunks must re-read")
-        if spec.ffn == FFN_MOE:
-            return ("MoE expert-capacity routing couples tokens, so the "
-                    "chunk grid would change prefill routing")
+    if cfg.frontend is not None:
+        return (f"{cfg.frontend}-frontend conditioning embeddings are not "
+                f"threaded through the chunk step")
     return None
 
 
@@ -868,6 +880,10 @@ def init_prefill_ring(cfg: ModelConfig, batch: int, max_len: int,
     chunk attention must read the exact values whole-prompt prefill would
     have attended over; :func:`finalize_prefill_ring` quantizes once at
     splice time (the same one-shot quantization ``_ring_one`` applies).
+    Ring layers — including sliding-window ones — get full-length rings
+    (the ring never wraps during ingestion; the window is enforced by the
+    chunk attention mask and the ring is cut down to the decode window at
+    finalize time). Mamba layers get their constant-size recurrent cache.
     """
     reason = chunked_prefill_unsupported(cfg)
     if reason is not None:
@@ -875,8 +891,23 @@ def init_prefill_ring(cfg: ModelConfig, batch: int, max_len: int,
                          f"{reason}")
     segs = plan_segments(cfg)
 
-    def one(n: int | None):
+    def one(spec: LayerSpec, n: int | None):
         pre = (n,) if n is not None else ()
+        if spec.mixer == MIXER_MAMBA:
+            c = ssm.init_mamba_cache(cfg, batch, dtype)
+            if n is not None:
+                c = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n, *x.shape)).copy(), c)
+            return c
+        if spec.mixer == MIXER_MLA:
+            m = cfg.mla
+            return {
+                "latent": jnp.zeros((*pre, batch, max_len, m.kv_lora_rank),
+                                    dtype),
+                "krope": jnp.zeros((*pre, batch, max_len,
+                                    m.qk_rope_head_dim), dtype),
+                "pos": jnp.full((*pre, batch, max_len), -1, jnp.int32),
+            }
         return {
             "k": jnp.zeros((*pre, batch, max_len, cfg.num_kv_heads,
                             cfg.head_dim), dtype),
@@ -885,58 +916,99 @@ def init_prefill_ring(cfg: ModelConfig, batch: int, max_len: int,
             "pos": jnp.full((*pre, batch, max_len), -1, jnp.int32),
         }
 
-    return [one(seg.length) if seg.scanned
-            else [one(None) for _ in seg.specs] for seg in segs]
+    return [one(seg.specs[0], seg.length) if seg.scanned
+            else [one(spec, None) for spec in seg.specs] for seg in segs]
 
 
 def _apply_layer_chunk(lp, shared_p, cfg: ModelConfig, spec: LayerSpec,
                        h: Array, cache, pos0: Array, n_valid: Array):
-    """One prompt chunk through one full-attention GQA layer.
+    """One prompt chunk through one layer (any mixer).
 
-    Insert-then-attend against the fixed-length ring: the chunk's K/V is
-    written at its absolute positions first, then every query attends over
-    the whole ring under a ``kv_pos <= q_pos`` mask. The softmax max and
-    denominator therefore always reduce over the same ``W`` entries —
-    reductions are the one place XLA's rounding depends on extent, so the
-    fixed extent is what makes the result invariant to the chunk split
-    (dot-generals are exact under zero padding already).
+    Ring layers insert-then-attend against the fixed-length ring: the
+    chunk's K/V (or MLA latent) is written at its absolute positions first,
+    then every query attends over the whole ring under a
+    ``kv_pos <= q_pos`` mask (plus ``kv_pos > q_pos - window`` for
+    sliding-window layers — the prefill ring is full-length, so the mask,
+    not eviction, enforces the horizon). The softmax max and denominator
+    therefore always reduce over the same ``W`` entries — reductions are
+    the one place XLA's rounding depends on extent, so the fixed extent is
+    what makes the result invariant to the chunk split (dot-generals are
+    exact under zero padding already). Mamba layers run a per-token
+    recurrence whose state carries chunk-to-chunk (models/ssm.py). MoE
+    layers route at a dropless capacity so co-chunked tokens cannot evict
+    each other's expert slots.
     """
-    mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
     B, C, _ = h.shape
+    window = _window_for(cfg, spec)
     x = apply_norm(lp["norm1"], h)
-    q, k, v = window_qkv(mp, cfg, x, pos0)
     idx = pos0[:, None] + jnp.arange(C)[None, :]            # [B, C]
     bidx = jnp.arange(B)[:, None]
-    ck = cache["k"].at[bidx, idx].set(k, mode="drop")
-    cv = cache["v"].at[bidx, idx].set(v, mode="drop")
-    # grid-padding positions past the prompt keep pos = -1: their K/V lands
-    # in the ring as inert garbage nothing ever attends to
-    newpos = jnp.where(idx < n_valid[:, None], idx, -1)
-    cpos = cache["pos"].at[bidx, idx].set(newpos, mode="drop")
-    KH = cfg.num_kv_heads
-    G = cfg.num_heads // KH
-    scale = cfg.head_dim ** -0.5
-    qr = q.reshape(B, C, KH, G, cfg.head_dim) * scale
-    s = jnp.einsum("bckgd,btkd->bkgct", qr, ck,
-                   preferred_element_type=jnp.float32)
-    s = softcap(s, cfg.attn_logit_softcap)
-    mask = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= idx[..., None])
-    s = jnp.where(mask[:, None, None], s, NEG_INF)
-    m = s.max(axis=-1)
-    pr = jnp.exp(s - m[..., None])
-    denom = pr.sum(axis=-1)
-    o = jnp.einsum("bkgct,btkd->bkgcd", pr, cv,
-                   preferred_element_type=jnp.float32)
-    o = (o / denom[..., None]).astype(x.dtype)
-    o = o.transpose(0, 3, 1, 2, 4).reshape(B, C, cfg.q_dim)
-    out = o @ mp["wo"]
-    if "bo" in mp:
-        out = out + mp["bo"]
+    if spec.mixer == MIXER_MAMBA:
+        out, new_cache = ssm.apply_mamba_chunk(lp["mixer"], cfg, x, cache,
+                                               pos0, n_valid)
+    elif spec.mixer == MIXER_MLA:
+        q_nope, q_rope, latent, krope = mla_chunk_qkv(lp["mixer"], cfg, x,
+                                                      pos0)
+        clat = cache["latent"].at[bidx, idx].set(latent, mode="drop")
+        ckr = cache["krope"].at[bidx, idx].set(krope, mode="drop")
+        newpos = jnp.where(idx < n_valid[:, None], idx, -1)
+        cpos = cache["pos"].at[bidx, idx].set(newpos, mode="drop")
+        mask = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= idx[..., None])
+        if window:
+            mask &= cpos[:, None, :] > (idx[..., None] - window)
+        o = mla_chunk_attend(lp["mixer"], cfg, q_nope, q_rope, clat, ckr,
+                             mask)
+        out = o @ lp["mixer"]["wo"]
+        new_cache = {"latent": clat, "krope": ckr, "pos": cpos}
+    else:
+        mp = shared_p if spec.mixer == MIXER_SHARED_GQA else lp["mixer"]
+        q, k, v = window_qkv(mp, cfg, x, pos0)
+        ck = cache["k"].at[bidx, idx].set(k, mode="drop")
+        cv = cache["v"].at[bidx, idx].set(v, mode="drop")
+        # grid-padding positions past the prompt keep pos = -1: their K/V
+        # lands in the ring as inert garbage nothing ever attends to
+        newpos = jnp.where(idx < n_valid[:, None], idx, -1)
+        cpos = cache["pos"].at[bidx, idx].set(newpos, mode="drop")
+        KH = cfg.num_kv_heads
+        G = cfg.num_heads // KH
+        scale = cfg.head_dim ** -0.5
+        qr = q.reshape(B, C, KH, G, cfg.head_dim) * scale
+        s = jnp.einsum("bckgd,btkd->bkgct", qr, ck,
+                       preferred_element_type=jnp.float32)
+        s = softcap(s, cfg.attn_logit_softcap)
+        mask = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= idx[..., None])
+        if window:
+            mask &= cpos[:, None, :] > (idx[..., None] - window)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m = s.max(axis=-1)
+        pr = jnp.exp(s - m[..., None])
+        denom = pr.sum(axis=-1)
+        o = jnp.einsum("bkgct,btkd->bkgcd", pr, cv,
+                       preferred_element_type=jnp.float32)
+        o = (o / denom[..., None]).astype(x.dtype)
+        o = o.transpose(0, 3, 1, 2, 4).reshape(B, C, cfg.q_dim)
+        out = o @ mp["wo"]
+        if "bo" in mp:
+            out = out + mp["bo"]
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
     h = h + out
     if spec.ffn != FFN_NONE:
         x2 = apply_norm(lp["norm2"], h)
-        h = h + apply_mlp(lp["ffn"], cfg, x2)
-    return h, {"k": ck, "v": cv, "pos": cpos}
+        if spec.ffn == FFN_MOE:
+            y, _ = apply_moe(lp["ffn"]["moe"], cfg, x2,
+                             capacity_factor=dropless_capacity_factor(cfg))
+        else:
+            y = apply_mlp(lp["ffn"], cfg, x2)
+        h = h + y
+    return h, new_cache
+
+
+# Minimum compiled chunk-grid width. XLA CPU lowers matmuls with fewer
+# than 4 rows through a different dot kernel whose K-loop accumulation
+# order differs from the wide path by 1 ulp, which would break the
+# bit-exact chunk-split invariance prefill_chunk promises. Narrower
+# chunks are padded up to this width with inert columns.
+_CHUNK_MIN_WIDTH = 4
 
 
 def prefill_chunk(params, cfg: ModelConfig, tokens: Array, caches,
@@ -958,6 +1030,23 @@ def prefill_chunk(params, cfg: ModelConfig, tokens: Array, caches,
     if reason is not None:
         raise ValueError(f"chunked prefill unsupported for {cfg.name}: "
                          f"{reason}")
+    C = tokens.shape[1]
+    if C < _CHUNK_MIN_WIDTH:
+        # sub-SIMD-width grids (C in {1, 3}) select a different CPU dot
+        # path whose accumulation rounds differently by 1 ulp, breaking
+        # bit-exact split invariance against wider grids. Pad the grid to
+        # the minimum width and slice the logits back. Clamping n_valid to
+        # pos0 + C makes the added columns look exactly like end-of-prompt
+        # grid padding (pos = -1, dt = 0), so they neither enter any
+        # attention mask nor advance recurrent SSM state, even when the
+        # padded chunk sits mid-prompt.
+        tokens = jnp.pad(jnp.asarray(tokens), ((0, 0),
+                                               (0, _CHUNK_MIN_WIDTH - C)))
+        n_valid = jnp.minimum(jnp.asarray(n_valid, jnp.int32),
+                              jnp.asarray(pos0, jnp.int32) + C)
+        logits, new_caches = prefill_chunk(params, cfg, tokens, caches,
+                                           pos0, n_valid)
+        return logits[:, :C], new_caches
     segs = plan_segments(cfg)
     pos0 = jnp.asarray(pos0, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
@@ -986,23 +1075,59 @@ def prefill_chunk(params, cfg: ModelConfig, tokens: Array, caches,
     return logits, new_caches
 
 
-def finalize_prefill_ring(cfg: ModelConfig, caches):
+def finalize_prefill_ring(cfg: ModelConfig, caches, plen):
     """Convert a finished full-precision prefill ring into pool-layout
     caches: int8 configs quantize K/V once (the same per-entry scheme
-    ``_ring_one`` applies after whole-prompt prefill), f32 configs pass
-    through unchanged. The result feeds ``write_cache_slots`` /
+    ``_ring_one`` applies after whole-prompt prefill); sliding-window
+    layers gather their full-length ingestion ring down to the W-slot
+    decode ring (slot ``s`` receives the most recent prompt position
+    ``p < plen`` with ``p % W == s`` — the ``_ring_one`` / ``pos % W``
+    invariant — and pos = -1 where no such position exists); everything
+    else passes through unchanged. ``plen`` [B] (traceable) is each row's
+    prompt length. The result feeds ``write_cache_slots`` /
     ``write_paged_ring`` directly."""
-    if cfg.kv_cache_dtype != "int8":
-        return caches
+    plen = jnp.asarray(plen, jnp.int32)
+    segs = plan_segments(cfg)
+    int8 = cfg.kv_cache_dtype == "int8"
 
-    def conv(c):
+    def quant(c):
+        if not (int8 and "k" in c):
+            return c
         out = dict(c)
         out["k"], out["k_s"] = _quant_kv(c["k"])
         out["v"], out["v_s"] = _quant_kv(c["v"])
         return out
 
-    segs = plan_segments(cfg)
-    return [conv(c) if seg.scanned else [conv(cj) for cj in c]
+    def conv(spec: LayerSpec, c, stacked: bool):
+        if spec.mixer == MIXER_MAMBA:
+            return c
+        window = _window_for(cfg, spec)
+        seq_ax = 2 if stacked else 1
+        T = c["pos"].shape[-1]
+        W = min(T, window) if window else T
+        if W == T:
+            return quant(c)
+        s = jnp.arange(W)
+        p = (plen[:, None] - 1) - ((plen[:, None] - 1 - s) % W)    # [B, W]
+        src = jnp.clip(p, 0, T - 1)
+
+        def gather(leaf):
+            i = src
+            if stacked:
+                i = jnp.broadcast_to(src, (leaf.shape[0],) + src.shape)
+            i = i.reshape(i.shape + (1,) * (leaf.ndim - i.ndim))
+            return jnp.take_along_axis(leaf, i, axis=seq_ax)
+
+        out = {k: gather(v) for k, v in c.items() if k != "pos"}
+        pos = jnp.where(p >= 0, p, -1)
+        if stacked:
+            pos = jnp.broadcast_to(pos[None], (c["pos"].shape[0],) + pos.shape)
+        out["pos"] = pos
+        return quant(out)
+
+    return [conv(seg.specs[0], c, True) if seg.scanned
+            else [conv(spec, cj, False)
+                  for spec, cj in zip(seg.specs, c)]
             for seg, c in zip(segs, caches)]
 
 
@@ -1153,20 +1278,149 @@ def decode_step(params, cfg: ModelConfig, tokens: Array, caches, pos: Array,
 def speculative_unsupported(cfg: ModelConfig) -> Optional[str]:
     """Why this config cannot run self-speculative decoding (None = it can).
 
-    Rollback of rejected draft positions relies on cache writes being
-    invertible: a full-attention GQA entry is invalidated by resetting its
-    ring ``pos`` (or unbinding its block-table append). Mamba state updates
-    are destructive, MLA latent rings are not speculative-aware yet, and a
-    sliding-window ring evicts entries a rollback would need.
+    Rollback of rejected draft positions is supported for every mixer:
+    full-attention GQA and MLA ring entries are invalidated by resetting
+    their ``pos`` (or unbinding their block-table append); mamba state and
+    sliding-window rings — whose writes are destructive — are covered by
+    the snapshot/commit protocol (``spec_needs_cache_snapshot`` /
+    ``select_cache_rows`` / ``commit_spec_cache``), which the driver loops
+    in core/speculative.py and serving/scheduler.py wire up.
+    tests/test_arch_matrix.py pins speculative == baseline bit-exactness
+    per config. The one declared hole: frontend configs (musicgen/
+    pixtral), whose modality conditioning embeddings are not threaded
+    through the draft/verify windows.
     """
-    for spec in cfg.block_pattern:
-        if spec.mixer == MIXER_MAMBA:
-            return "mamba state updates are destructive (no rollback)"
-        if spec.mixer == MIXER_MLA:
-            return "MLA latent caches are not speculative-aware yet"
-        if _window_for(cfg, spec):
-            return "sliding-window rings evict entries a rollback would need"
+    if cfg.frontend is not None:
+        return (f"{cfg.frontend}-frontend conditioning embeddings are not "
+                f"threaded through the draft/verify windows")
     return None
+
+
+def spec_needs_cache_snapshot(cfg: ModelConfig) -> bool:
+    """True when speculative rollback needs the snapshot/commit protocol.
+
+    A pos rewind (``rewind_ring``) fully undoes draft writes only when
+    every cache write is non-destructive: full-length rings just park
+    rejected K/V as garbage behind pos = -1. Mamba state updates overwrite
+    the recurrence in place, and sliding-window ring writes evict entries
+    a rolled-back row still needs — those configs must snapshot before
+    drafting and commit per-row after verify.
+    """
+    return any(spec.mixer == MIXER_MAMBA or _window_for(cfg, spec)
+               for spec in cfg.block_pattern)
+
+
+def select_cache_rows(cfg: ModelConfig, caches_a, caches_b, take_a):
+    """Per-row cache blend: row ``b`` comes from ``caches_a`` where
+    ``take_a[b]``, else from ``caches_b``.
+
+    The pre-verify restore for snapshot configs: speculative rows return
+    wholesale to the pre-draft snapshot (undoing draft-phase window
+    evictions and mamba state updates that a pos rewind cannot), while
+    co-batched non-speculative rows keep their live caches. Jit-able with
+    donation of ``caches_b``.
+    """
+    take = jnp.asarray(take_a, bool)
+    segs = plan_segments(cfg)
+
+    def sel(stacked):
+        def f(a, b):
+            shape = ((1, take.shape[0]) + (1,) * (a.ndim - 2) if stacked
+                     else (take.shape[0],) + (1,) * (a.ndim - 1))
+            return jnp.where(take.reshape(shape), a, b)
+        return f
+
+    out = []
+    for seg, ca, cb in zip(segs, caches_a, caches_b):
+        if seg.scanned:
+            out.append(jax.tree.map(sel(True), ca, cb))
+        else:
+            out.append([jax.tree.map(sel(False), caj, cbj)
+                        for caj, cbj in zip(ca, cb)])
+    return out
+
+
+def _mamba_cache_parts(cfg: ModelConfig, caches):
+    """The mamba sub-caches of a cache pytree (ring entries -> None):
+    the per-step state ``verify_step(..., collect_states=True)`` stacks."""
+    segs = plan_segments(cfg)
+    out = []
+    for seg, c in zip(segs, caches):
+        if seg.scanned:
+            out.append(c if seg.specs[0].mixer == MIXER_MAMBA else None)
+        else:
+            out.append([cj if spec.mixer == MIXER_MAMBA else None
+                        for spec, cj in zip(seg.specs, c)])
+    return out
+
+
+def commit_spec_cache(cfg: ModelConfig, verified, snap, keep_pos,
+                      state_snaps=None, accept_steps=None):
+    """Post-acceptance cache commit for snapshot configs.
+
+    Ring entries (GQA / MLA, incl. sliding-window): a slot keeps its
+    verify-phase write iff its new ``pos`` is <= ``keep_pos[b]``; every
+    other slot — a rejected draft position's write, including windowed
+    evictions of entries the row still needs — restores from the pre-draft
+    snapshot ``snap``. (All snapshot pos values predate the draft window,
+    so snapshot slots always satisfy the predicate; for full-length rings
+    this is equivalent to a pos rewind, for windowed rings it is the only
+    correct rollback.)
+
+    Mamba entries: the committed state is the per-step verify snapshot
+    ``state_snaps`` (from ``verify_step(..., collect_states=True)``) at
+    index ``accept_steps[b]`` — i.e. the state after consuming position
+    ``pos0 + n_accept``, exactly what the baseline sequential loop would
+    carry.
+
+    Rows whose caches must stay live (non-speculative residents) pass
+    ``keep_pos[b]`` = INT32_MAX and any in-range ``accept_steps[b]``:
+    their verify writes were masked no-ops, so every per-step snapshot
+    equals their live state. Jit-able with donation of ``verified``.
+    """
+    keep = jnp.asarray(keep_pos, jnp.int32)
+    segs = plan_segments(cfg)
+    if state_snaps is None:
+        state_snaps = [None] * len(segs)
+    steps = (None if accept_steps is None
+             else jnp.asarray(accept_steps, jnp.int32))
+
+    def blend_ring(cn, cs, stacked):
+        k = keep[None, :, None] if stacked else keep[:, None]
+        sel = cn["pos"] <= k                              # [L?, B, W]
+
+        def f(a, b):
+            m = sel.reshape(sel.shape + (1,) * (a.ndim - sel.ndim))
+            return jnp.where(m, a, b)
+
+        return {name: f(cn[name], cs[name]) for name in cn}
+
+    def pick_state(snaps_c, stacked):
+        bax = 2 if stacked else 1                         # [S, L?, B, ...]
+
+        def f(leaf):
+            lb = jnp.moveaxis(leaf, bax, 0)               # [B, S, L?, ...]
+            out = jax.vmap(lambda l, i: l[i])(lb, steps)  # [B, L?, ...]
+            return jnp.moveaxis(out, 0, bax - 1)
+
+        return jax.tree.map(f, snaps_c)
+
+    out = []
+    for seg, cn, cs, sn in zip(segs, verified, snap, state_snaps):
+        if seg.scanned:
+            if "pos" in cn:
+                out.append(blend_ring(cn, cs, True))
+            else:
+                out.append(pick_state(sn, True))
+        else:
+            row = []
+            for j, cnj in enumerate(cn):
+                if "pos" in cnj:
+                    row.append(blend_ring(cnj, cs[j], False))
+                else:
+                    row.append(pick_state(sn[j], False))
+            out.append(row)
+    return out
 
 
 def rewind_ring(cfg: ModelConfig, caches, keep_pos: Array):
@@ -1292,7 +1546,7 @@ def _verify_window_kernel(params, cfg: ModelConfig, tokens: Array, caches,
 def verify_step(params, cfg: ModelConfig, tokens: Array, caches,
                 pos0: Array, *, write_mask: Optional[Array] = None,
                 block_tables: Optional[Array] = None,
-                use_kernel: bool = False):
+                use_kernel: bool = False, collect_states: bool = False):
     """Score a [B, S] token window full-depth against the decode caches.
 
     ``tokens[:, j]`` is consumed at position ``pos0 + j`` and its K/V is
@@ -1312,13 +1566,21 @@ def verify_step(params, cfg: ModelConfig, tokens: Array, caches,
     caches mask strictly (``lpos < pos``), so stale draft K/V is ignored
     and overwritten in place.
 
-    Returns (logits [B, S, V] float32, new_caches).
+    ``collect_states`` (reference path only): additionally return the
+    mamba sub-caches after each of the S scan steps (leaves [S, L?, B,
+    ...]; ring entries None) — ``commit_spec_cache`` indexes them at each
+    row's acceptance count to roll the destructive recurrence back.
+
+    Returns (logits [B, S, V] float32, new_caches[, state_snaps]).
     """
     B, S = tokens.shape
     pos0 = jnp.asarray(pos0, jnp.int32)
     mask = None if write_mask is None else jnp.asarray(write_mask, bool)
     paged = None
     if block_tables is not None:
+        if collect_states:
+            raise ValueError("collect_states requires contiguous caches "
+                             "(snapshot configs never page)")
         paged = (jnp.asarray(block_tables, jnp.int32), bool(use_kernel))
         if use_kernel:
             return _verify_window_kernel(params, cfg, tokens, caches, pos0,
@@ -1338,8 +1600,13 @@ def verify_step(params, cfg: ModelConfig, tokens: Array, caches,
                                              active, paged, mask)
             new_caches.append(nc)
         logits = lm_logits(params, cfg, h)[:, 0, :].astype(jnp.float32)
+        if collect_states:
+            return new_caches, (logits, _mamba_cache_parts(cfg, new_caches))
         return new_caches, logits
 
-    caches, logits = jax.lax.scan(
+    caches, ys = jax.lax.scan(
         body, caches, (tokens.T, jnp.arange(S, dtype=jnp.int32)))
-    return jnp.transpose(logits, (1, 0, 2)), caches
+    if collect_states:
+        logits, snaps = ys
+        return jnp.transpose(logits, (1, 0, 2)), caches, snaps
+    return jnp.transpose(ys, (1, 0, 2)), caches

@@ -312,8 +312,8 @@ def make_serve_step(cfg: ModelConfig, controller=None):
     dummy = jax.random.PRNGKey(0)
 
     def step(params, tokens, caches, pos):
-        nxt, new_caches, exit_layer, _ = fn(params, tokens, caches, pos,
-                                            dummy)
+        nxt, new_caches, exit_layer, _, _ = fn(params, tokens, caches, pos,
+                                               dummy)
         return nxt, new_caches, exit_layer
 
     return step

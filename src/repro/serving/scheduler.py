@@ -52,9 +52,9 @@ Chunked prefill (one compiled shape, decode-interleaved admission)
     ``core.energy.prefill_chunk_energy`` into per-request
     ``prefill_energy_j`` and the fleet power EMA, so the power-gated
     admission sees prompt ingestion too. Configs whose prefill cannot
-    chunk (mamba / MLA / sliding-window / MoE —
+    chunk (frontend-conditioned models —
     ``transformer.chunked_prefill_unsupported`` names the reason) fall
-    back to whole-prompt admission.
+    back to whole-prompt admission, counted in ``stats()["fallbacks"]``.
 
 Policies and sampling as data
     Exit policies come from the first-class registry
@@ -104,7 +104,7 @@ import numpy as np
 
 from repro.api import (GenerationRequest, GenerationResult, SamplingParams,
                        find_stop)
-from repro.config import ModelConfig
+from repro.config import MIXER_MAMBA, ModelConfig
 from repro.core import energy, exit_policy
 from repro.core.early_exit import pick_tokens, request_keys
 from repro.core.exit_policy import PolicyContext, PolicySpec
@@ -112,11 +112,13 @@ from repro.core.speculative import (SPEC_POLICY, accept_drafts,
                                     draft_boundary_layer)
 from repro.data.tokenizer import EOS, PAD
 from repro.obs.trace import NULL_TRACER, Tracer
-from repro.models.transformer import (chunked_prefill_unsupported,
-                                      decode_step, finalize_prefill_ring,
-                                      init_cache, init_prefill_ring,
-                                      lm_logits, prefill, prefill_chunk,
-                                      rewind_ring,
+from repro.models.transformer import (_window_for, chunked_prefill_unsupported,
+                                      commit_spec_cache, decode_step,
+                                      finalize_prefill_ring, init_cache,
+                                      init_prefill_ring, lm_logits, prefill,
+                                      prefill_chunk, rewind_ring,
+                                      select_cache_rows,
+                                      spec_needs_cache_snapshot,
                                       speculative_unsupported, verify_step,
                                       write_cache_slots)
 from repro.serving.engine import ServeResult
@@ -348,7 +350,21 @@ class Scheduler:
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.prefill_chunk = int(prefill_chunk)
-        self.chunked = chunked_prefill_unsupported(cfg) is None
+        # fallback accounting: every *_unsupported gate that fires on this
+        # config records its reason here; the serving-time counter makes
+        # slow-path admissions visible in stats() instead of silent
+        self._fallback_reasons: dict[str, str] = {}
+        self._fallbacks: dict[str, int] = {}
+        self._warned_fallbacks: set[str] = set()
+        chunk_reason = chunked_prefill_unsupported(cfg)
+        self.chunked = chunk_reason is None
+        if chunk_reason is not None:
+            self._fallback_reasons["chunked_prefill"] = chunk_reason
+            self._fallbacks["chunked_prefill"] = 0
+        spec_reason = speculative_unsupported(cfg)
+        if spec_reason is not None:
+            self._fallback_reasons["speculative"] = spec_reason
+            self._fallbacks["speculative"] = 0
         self.prefill_buckets = None
         if prefill_buckets is not None:
             if self.chunked:
@@ -362,8 +378,8 @@ class Scheduler:
                     "(tune prefill_chunk= instead)",
                     DeprecationWarning, stacklevel=2)
             else:
-                # whole-prompt fallback configs (mamba/MLA/sliding-window/
-                # MoE) still compile per distinct prompt length — buckets
+                # whole-prompt fallback configs (frontend-conditioned)
+                # still compile per distinct prompt length — buckets
                 # remain their only compile-count mitigation
                 self.prefill_buckets = tuple(sorted(prefill_buckets))
         self.power_budget_w = power_budget_w
@@ -384,10 +400,9 @@ class Scheduler:
             raise ValueError(f"default policy {self.default_kind!r} not in "
                              f"allowed_kinds {sorted(self.allowed_kinds)}")
         if SPEC_POLICY in self.allowed_kinds:
-            reason = speculative_unsupported(cfg)
-            if reason is not None:
+            if spec_reason is not None:
                 raise ValueError(f"speculative policy unavailable for "
-                                 f"{cfg.name}: {reason}")
+                                 f"{cfg.name}: {spec_reason}")
             if spec_window < 1:
                 raise ValueError("spec_window must be >= 1")
         self.spec_window = spec_window
@@ -422,6 +437,21 @@ class Scheduler:
                                 static_argnames=("max_len",))
         self._verify = jax.jit(self._make_verify(), donate_argnums=2)
         self._rewind = jax.jit(partial(rewind_ring, cfg), donate_argnums=0)
+        # speculative rollback for destructive cache writes (mamba state,
+        # sliding-window evictions): snapshot before drafting, restore the
+        # speculative rows before verify, commit per-row after acceptance.
+        # Contiguous only — paged_unsupported keeps these configs off pages.
+        self._spec_snapshot = (kv_layout == "contiguous"
+                               and spec_needs_cache_snapshot(cfg))
+        self._spec_collect = self._spec_snapshot and any(
+            spec.mixer == MIXER_MAMBA for spec in cfg.block_pattern)
+        self._verify_collect = jax.jit(self._make_verify(collect=True),
+                                       donate_argnums=2)
+        self._copy = jax.jit(lambda c: jax.tree.map(jnp.copy, c))
+        self._restore = jax.jit(partial(select_cache_rows, cfg),
+                                donate_argnums=0)
+        self._commit = jax.jit(partial(commit_spec_cache, cfg),
+                               donate_argnums=(0, 1))
         # chunked-prefill machinery: the prompt-ingestion ring is sized so
         # paged splices land on the block grid; every chunk runs the same
         # compiled [1, prefill_chunk] step (prefill_compiles pins this)
@@ -432,11 +462,15 @@ class Scheduler:
             self._ring_len = max_len
         self._chunk = jax.jit(self._make_chunk(), donate_argnums=2)
         self._pick0 = jax.jit(self._make_pick0())
-        if cfg.kv_cache_dtype == "int8":
-            # no donation: the f32 ring cannot back the int8 output buffers
+        if (cfg.kv_cache_dtype == "int8"
+                or any(_window_for(cfg, s) for s in cfg.block_pattern)):
+            # int8 rings quantize at splice time; sliding-window rings
+            # gather the full-length ingestion ring down to the W-slot
+            # decode ring. No donation: the f32 full-length ring cannot
+            # back the int8/W-length output buffers.
             self._finalize = jax.jit(partial(finalize_prefill_ring, cfg))
         else:
-            self._finalize = lambda ring: ring   # f32 rings splice as-is
+            self._finalize = lambda ring, plen: ring  # rings splice as-is
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -468,6 +502,7 @@ class Scheduler:
         self._spec_drafted = 0
         self._spec_accepted = 0
         self._spec_emitted = 0
+        self._prefill_interleaved = 0
         self._power_w_ema = 0.0
         self._power_ema_t = time.monotonic()
         self._exit_layer_ema = float(cfg.num_layers)
@@ -519,10 +554,12 @@ class Scheduler:
 
         return step
 
-    def _make_verify(self):
+    def _make_verify(self, collect: bool = False):
         """The speculative verify step: one full-depth pass over every
         slot's [spec_window + 1] draft window. ``mask`` rows ride along
-        with untouched caches (non-speculative residents, free slots)."""
+        with untouched caches (non-speculative residents, free slots).
+        ``collect`` additionally returns per-step mamba state snapshots
+        for the snapshot-commit rollback (contiguous snapshot configs)."""
         cfg = self.cfg
         paged = self.kv_layout == "paged"
         use_kernel = self.use_kernel
@@ -531,7 +568,8 @@ class Scheduler:
             return verify_step(params, cfg, win, caches, pos0,
                                write_mask=mask,
                                block_tables=tables if paged else None,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel,
+                               collect_states=collect)
 
         return vstep
 
@@ -966,8 +1004,22 @@ class Scheduler:
                 if self.chunked:
                     self._start_prefill(req)
                 else:
+                    self._count_fallback("chunked_prefill")
                     self._admit(req)
                 self._admitting = None
+
+    def _count_fallback(self, feature: str) -> None:
+        """One slow-path admission: bump the per-feature fallback counter
+        and warn once per (config, feature) so the degradation is visible
+        without log-spamming every request."""
+        self._fallbacks[feature] = self._fallbacks.get(feature, 0) + 1
+        if feature not in self._warned_fallbacks:
+            self._warned_fallbacks.add(feature)
+            warnings.warn(
+                f"{self.cfg.name}: {feature} unsupported "
+                f"({self._fallback_reasons.get(feature, 'unknown reason')})"
+                f" — serving via the slow fallback path",
+                RuntimeWarning, stacklevel=2)
 
     # -- chunked admission ---------------------------------------------------
     def _start_prefill(self, req: Request) -> None:
@@ -1056,7 +1108,7 @@ class Scheduler:
             jnp.asarray([s.top_k], jnp.int32),
             jnp.asarray([s.top_p], jnp.float32))
         self.obs.count("dispatch")       # first-token picker
-        ring = self._finalize(job.ring)
+        ring = self._finalize(job.ring, jnp.asarray([job.plen], jnp.int32))
         if self.kv_layout == "paged":
             n_skip, n_write = self.pool.install_prompt(
                 slot, job.plen, job.ids, job.n_shared, job.tail_shared,
@@ -1187,11 +1239,26 @@ class Scheduler:
         speculative row's window (non-speculative rows ride along with
         cache writes masked off), accepted drafts + the correction token
         are emitted, and the rejected tail rolls back — ring ``pos``
-        rewound, paged block appends unbound.
+        rewound, paged block appends unbound. Configs with destructive
+        cache writes (mamba state, sliding-window evictions) use the
+        snapshot/commit protocol instead: caches are snapshotted before
+        drafting, speculative rows restore to the snapshot before verify,
+        and the post-acceptance commit blends verified entries with the
+        snapshot per row (``commit_spec_cache``).
+
+        An in-flight chunked admission advances one chunk per draft
+        sub-step (not one per super-tick): without the interleave a
+        ``spec_window``-deep super-tick starves prefill by a factor of
+        K + 1 and inflates queued requests' TTFT by the same factor.
         """
         t_start = time.monotonic()
         S = self.pool.max_slots
         paged = self.kv_layout == "paged"
+        snapshot = self._spec_snapshot
+        snap = None
+        if snapshot:
+            snap = self._copy(self.pool.caches)
+            self.obs.count("dispatch")
         spec = {s: r for s, r in enumerate(self._slot_req)
                 if r is not None and r.spec.name == SPEC_POLICY}
         # size the super-tick to the largest *effective* window resident:
@@ -1236,6 +1303,14 @@ class Scheduler:
                         tick_energy += self._account_token(
                             req, int(nxt[slot]), slot,
                             logprob=float(lp[slot]))
+            job = self._prefill_job
+            if job is not None and job.next_pos + self.prefill_chunk < job.plen:
+                # advance the in-flight admission at draft-step cadence —
+                # but leave its FINAL chunk to the main loop: finishing it
+                # here would seat the request mid-super-tick and skew this
+                # tick's draft/verify bookkeeping
+                self._prefill_tick()
+                self._prefill_interleaved += 1
 
         # full-depth verify over [t0, d1..dK] at positions p0..p0+K
         with self.obs.span("verify", window=K, rows=len(slots)):
@@ -1251,6 +1326,15 @@ class Scheduler:
                 for slot in spec:
                     self.pool.prepare_append(slot, p0[slot] + K)
                 tables = self.pool.device_tables()
+            elif snapshot:
+                # destructive draft writes (mamba recurrence, windowed
+                # evictions) cannot be pos-rewound: speculative rows return
+                # wholesale to the pre-draft snapshot, live rows keep their
+                # caches (incl. any admission spliced in mid-draft)
+                tables = jnp.zeros((0,), jnp.int32)
+                self.pool.caches = self._restore(self.pool.caches, snap,
+                                                 jnp.asarray(~mask))
+                self.obs.count("dispatch")
             else:
                 tables = jnp.zeros((0,), jnp.int32)
                 # clean the draft writes out of the window first: the
@@ -1261,9 +1345,15 @@ class Scheduler:
                 self.pool.caches = self._rewind(self.pool.caches,
                                                 jnp.asarray(keep, jnp.int32))
                 self.obs.count("dispatch")
-            tlogits, new_caches = self._verify(
-                self.params, jnp.asarray(win, jnp.int32), self.pool.caches,
-                tables, jnp.asarray(pos0, jnp.int32), jnp.asarray(mask))
+            state_snaps = None
+            vargs = (self.params, jnp.asarray(win, jnp.int32),
+                     self.pool.caches, tables, jnp.asarray(pos0, jnp.int32),
+                     jnp.asarray(mask))
+            if self._spec_collect:
+                tlogits, new_caches, state_snaps = self._verify_collect(
+                    *vargs)
+            else:
+                tlogits, new_caches = self._verify(*vargs)
             self.obs.count("dispatch")
             self.pool.caches = new_caches
             with self.obs.wait():
@@ -1280,10 +1370,12 @@ class Scheduler:
 
         with self.obs.span("bookkeeping"):
             keep = np.full(S, np.iinfo(np.int32).max, np.int64)
+            accept = np.zeros(S, np.int64)
             for i, slot in enumerate(slots):
                 req = spec[slot]
                 a = int(n_acc[i])
                 keep[slot] = p0[slot] + a
+                accept[slot] = a
                 dl_layer = draft_boundary_layer(self.cfg,
                                                 self._pp["draft_idx"][slot])
                 e = energy.speculative_step_energy(self.cfg, req.ctx_len,
@@ -1312,7 +1404,17 @@ class Scheduler:
                 if paged:
                     self.pool.rollback_append(slot,
                                               keep_tokens=p0[slot] + a + 1)
-            if not paged:
+            if snapshot:
+                # per-row blend: verified entries up to keep, snapshot
+                # beyond (windowed evictions restored); mamba rows commit
+                # the per-step verify state at their acceptance count.
+                # Non-speculative rows pass keep=INT32_MAX — their verify
+                # writes were masked no-ops, so the blend is the identity.
+                self.pool.caches = self._commit(
+                    self.pool.caches, snap, jnp.asarray(keep, jnp.int32),
+                    state_snaps, jnp.asarray(accept, jnp.int32))
+                self.obs.count("dispatch")
+            elif not paged:
                 self.pool.caches = self._rewind(self.pool.caches,
                                                 jnp.asarray(keep, jnp.int32))
                 self.obs.count("dispatch")
@@ -1502,6 +1604,7 @@ class Scheduler:
             self._spec_drafted = 0
             self._spec_accepted = 0
             self._spec_emitted = 0
+            self._prefill_interleaved = 0
             if isinstance(self.pool, PagedKVPool):
                 self.pool.reset_stats()
 
@@ -1528,6 +1631,7 @@ class Scheduler:
                                         / max(self._spec_drafted, 1)),
                     "tokens_per_verify": (self._spec_emitted
                                           / max(self._spec_verifies, 1)),
+                    "prefill_interleaved_chunks": self._prefill_interleaved,
                 }
             return {
                 "queue_depth": len(self._queue),
@@ -1541,6 +1645,9 @@ class Scheduler:
                 "blocked_admissions": self._blocked_admissions,
                 **kv,
                 "chunked_prefill": self.chunked,
+                "fallbacks": {
+                    f: {"count": self._fallbacks.get(f, 0), "reason": r}
+                    for f, r in sorted(self._fallback_reasons.items())},
                 "prefill_chunk": self.prefill_chunk,
                 "prefill_compiles": self.prefill_compiles,
                 "prefilling": self._prefill_job is not None,

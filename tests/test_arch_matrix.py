@@ -1,0 +1,233 @@
+"""Cross-architecture conformance matrix: chunked prefill + speculative
+decoding across SSM / MLA / sliding-window / MoE / GQA configs.
+
+One parameterized cell per (architecture, feature): chunked prefill must
+be bit-identical to whole-prompt prefill (every chunk's logits, every
+ring/state leaf at valid positions, and the decode continuation after the
+ring is finalized), and speculative decoding must be bit-identical to the
+baseline decode loop (tokens, exit layers AND logprobs). Cells a feature
+cannot serve are declared in UNSUPPORTED and asserted against the actual
+``*_unsupported`` gates — an undeclared gate (silent fallback) or a
+declared-but-passing gate both fail, so the matrix cannot drift.
+
+Cell IDs name the pair directly in CI output, e.g.
+``test_arch_matrix[mamba2_1_3b-chunked]``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.early_exit import generate
+from repro.core.speculative import speculative_generate
+from repro.models import transformer as T
+
+FEATURES = ("chunked", "speculative")
+
+# the declared holes: (arch, feature) -> required substring of the gate's
+# reason. Everything NOT listed here must pass bit-exact parity.
+UNSUPPORTED = {
+    ("musicgen-medium", "chunked"): "frontend",
+    ("musicgen-medium", "speculative"): "frontend",
+    ("pixtral-12b", "chunked"): "frontend",
+    ("pixtral-12b", "speculative"): "frontend",
+}
+
+S0 = 9          # prompt length
+STEPS = 8       # decode steps (speculative cells)
+K = 3           # speculative draft window
+CHUNKS = (3, 5)  # misaligned chunk splits checked against one whole chunk
+
+
+def _cell_id(arch: str, feature: str) -> str:
+    return f"{arch.replace('-', '_').replace('.', '_')}-{feature}"
+
+
+def _cfg(arch: str):
+    cfg = get_config(arch, "smoke")
+    if arch == "gemma2-9b":
+        # shrink the window below the prompt length so eviction, the
+        # finalize-time window gather and the windowed speculative
+        # rollback are actually exercised (smoke's 64 never wraps here)
+        cfg = dataclasses.replace(cfg, sliding_window=8)
+    return cfg
+
+
+_PARAMS: dict = {}
+
+
+def _model(arch: str):
+    if arch not in _PARAMS:
+        cfg = _cfg(arch)
+        _PARAMS[arch] = (cfg, T.init_params(jax.random.PRNGKey(0), cfg))
+    return _PARAMS[arch]
+
+
+def _prompt(cfg, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(4, cfg.vocab_size, (1, S0)).astype(np.int32)
+
+
+def _leaf_pairs(ref, got):
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        yield np.asarray(a), np.asarray(b)
+
+
+def _assert_rings_equal(cfg, ref, got, n_valid: int):
+    """Bit-equality of prefill rings: mamba state and ``pos`` planes
+    exactly, K/V (or MLA latent) planes at prompt positions only — grid
+    padding past the prompt is inert garbage the mask never admits."""
+    segs = T.plan_segments(cfg)
+
+    def check(spec, ca, cb, stacked):
+        if spec.mixer == "mamba":
+            for a, b in _leaf_pairs(ca, cb):
+                np.testing.assert_array_equal(a, b)
+            return
+        w_ax = 2 if stacked else 1
+        for name in ca:
+            a, b = np.asarray(ca[name]), np.asarray(cb[name])
+            if name == "pos":
+                np.testing.assert_array_equal(a, b)
+            else:
+                np.testing.assert_array_equal(
+                    np.take(a, range(n_valid), axis=w_ax),
+                    np.take(b, range(n_valid), axis=w_ax))
+
+    for seg, ca, cb in zip(segs, ref, got):
+        if seg.scanned:
+            check(seg.specs[0], ca, cb, True)
+        else:
+            for spec, caj, cbj in zip(seg.specs, ca, cb):
+                check(spec, caj, cbj, False)
+
+
+def _run_chunked(cfg, params, toks: np.ndarray, C: int, ring_len: int):
+    """Ingest the prompt in C-token chunks; return (all-position logits,
+    final ring)."""
+    S = toks.shape[1]
+    ring = T.init_prefill_ring(cfg, 1, ring_len)
+    logs = []
+    for pos0 in range(0, S, C):
+        grid = toks[:, pos0:pos0 + C]
+        if grid.shape[1] < C:
+            grid = np.pad(grid, ((0, 0), (0, C - grid.shape[1])))
+        lg, ring = T.prefill_chunk(params, cfg, jnp.asarray(grid), ring,
+                                   jnp.asarray([pos0], jnp.int32),
+                                   jnp.asarray([S], jnp.int32))
+        logs.append(np.asarray(lg[:, :min(C, S - pos0)]))
+    return np.concatenate(logs, axis=1), ring
+
+
+def _chunked_cell(arch: str):
+    cfg, params = _model(arch)
+    reason = T.chunked_prefill_unsupported(cfg)
+    assert reason is None, f"undeclared unsupported cell: {reason}"
+    toks = _prompt(cfg)
+    ring_len = 24
+    ref_log, ref_ring = _run_chunked(cfg, params, toks, S0, ring_len)
+    for C in CHUNKS:
+        lg, ring = _run_chunked(cfg, params, toks, C, ring_len)
+        np.testing.assert_array_equal(ref_log, lg)
+        _assert_rings_equal(cfg, ref_ring, ring, S0)
+    # decode continuation: the finalized ring (windowed gather, int8
+    # quantization) must carry on greedily exactly like the reference arm
+    plen = jnp.asarray([S0], jnp.int32)
+    ref_caches = T.finalize_prefill_ring(cfg, ref_ring, plen)
+    got_caches = T.finalize_prefill_ring(cfg, ring, plen)
+    tok = jnp.asarray([int(np.argmax(ref_log[0, -1]))], jnp.int32)
+    for s in range(2):
+        pos = jnp.asarray([S0 + s], jnp.int32)
+        la, ref_caches, _ = T.decode_step(params, cfg, tok, ref_caches, pos)
+        lb, got_caches, _ = T.decode_step(params, cfg, tok, got_caches, pos)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        tok = jnp.argmax(la, axis=-1).astype(jnp.int32)
+
+
+def _speculative_cell(arch: str):
+    cfg, params = _model(arch)
+    reason = T.speculative_unsupported(cfg)
+    assert reason is None, f"undeclared unsupported cell: {reason}"
+    prompt = jnp.asarray(_prompt(cfg))
+    # the SAME explicit max_len on both arms: different ring extents mean
+    # different reduction shapes, and bitwise parity is only defined
+    # within one program geometry
+    max_len = S0 + STEPS + K + 1
+    base = generate(params, cfg, prompt, STEPS, max_len=max_len)
+    spec = speculative_generate(params, cfg, prompt, STEPS, draft_idx=0,
+                                window=K, max_len=max_len)
+    np.testing.assert_array_equal(np.asarray(base["tokens"]),
+                                  np.asarray(spec["tokens"]))
+    np.testing.assert_array_equal(np.asarray(base["exit_layers"]),
+                                  np.asarray(spec["exit_layers"]))
+    np.testing.assert_array_equal(np.asarray(base["logprobs"]),
+                                  np.asarray(spec["logprobs"]))
+
+
+@pytest.mark.parametrize(
+    "arch,feature",
+    [(a, f) for a in ARCH_IDS for f in FEATURES],
+    ids=[_cell_id(a, f) for a in ARCH_IDS for f in FEATURES])
+def test_arch_matrix(arch, feature):
+    declared = UNSUPPORTED.get((arch, feature))
+    if declared is not None:
+        cfg = _cfg(arch)
+        gate = (T.chunked_prefill_unsupported if feature == "chunked"
+                else T.speculative_unsupported)
+        reason = gate(cfg)
+        assert reason is not None and declared in reason, (
+            f"declared-unsupported cell ({arch}, {feature}) is no longer "
+            f"gated — move it to the supported matrix")
+        # the gate fails eagerly, never silently
+        if feature == "chunked":
+            with pytest.raises(ValueError, match=declared):
+                T.init_prefill_ring(cfg, 1, 16)
+        return
+    if feature == "chunked":
+        _chunked_cell(arch)
+    else:
+        _speculative_cell(arch)
+
+
+def test_docs_matrix_matches_gates():
+    """The support-matrix table in docs/architecture.md is derived from
+    the runtime gates — parse it back and diff it against what the gates
+    actually say, so the docs cannot drift."""
+    import pathlib
+
+    doc = (pathlib.Path(__file__).resolve().parents[1] / "docs"
+           / "architecture.md").read_text()
+    rows = {}
+    for line in doc.splitlines():
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) == 6 and cells[0] in ARCH_IDS:
+            rows[cells[0]] = {"contiguous": cells[2], "paged": cells[3],
+                              "chunked prefill": cells[4],
+                              "speculative": cells[5]}
+    assert set(rows) == set(ARCH_IDS), "table must list every config"
+    for arch, got in rows.items():
+        cfg = get_config(arch, "smoke")
+        want = {
+            "contiguous": "yes",
+            "paged": "yes" if T.paged_unsupported(cfg) is None else "no",
+            "chunked prefill": ("yes" if T.chunked_prefill_unsupported(cfg)
+                                is None else "no"),
+            "speculative": ("yes" if T.speculative_unsupported(cfg)
+                            is None else "no"),
+        }
+        assert got == want, f"docs row for {arch} drifted: {got} != {want}"
+
+
+def test_matrix_covers_every_config():
+    """Every config module under src/repro/configs/ appears in the matrix
+    — a new architecture cannot be added without earning its cells."""
+    import pathlib
+
+    import repro.configs as C
+    mods = {p.stem for p in
+            pathlib.Path(C.__file__).parent.glob("*.py")} - {"__init__"}
+    ids = {a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+    assert mods == ids

@@ -208,12 +208,12 @@ def test_prefill_energy_charged_per_request():
 
 
 def test_chunked_prefill_unsupported_falls_back():
-    """Configs whose prefill cannot chunk (sliding-window here) keep the
-    whole-prompt admission path and still serve."""
-    from repro.configs.gemma2_9b import smoke as gemma_smoke
-    cfg = gemma_smoke()
+    """Configs whose prefill cannot chunk (frontend conditioning here) keep
+    the whole-prompt admission path and still serve."""
+    from repro.configs.musicgen_medium import smoke as musicgen_smoke
+    cfg = musicgen_smoke()
     reason = T.chunked_prefill_unsupported(cfg)
-    assert reason is not None and "window" in reason
+    assert reason is not None and "frontend" in reason
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     s = Scheduler(params, cfg, max_slots=2, max_len=48, max_new=3,
                   queue_depth=8).start()

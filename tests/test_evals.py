@@ -209,6 +209,30 @@ def test_virtual_clock_slots_bound_concurrency():
     assert four["makespan_ticks"] < one["makespan_ticks"]
 
 
+def _ttft_p95(vc):
+    ts = sorted(t for t in vc["ttft_ticks"] if t is not None)
+    return ts[min(int(0.95 * len(ts)), len(ts) - 1)]
+
+
+def test_spec_prefill_interleave_pins_ttft_within_2x_baseline():
+    """Regression for the BENCH_eval.json speculative TTFT outlier
+    (ttft_p95 21.7s vs 5.3s baseline ~= spec_window + 1): a K-deep
+    super-tick that advances the in-flight admission only one chunk per
+    super-tick starves prefill by (K+1)x. The scheduler interleaves one
+    chunk per draft step; the virtual clock models both behaviors, the
+    un-interleaved one must reproduce the outlier and the interleaved one
+    must stay within 2x of baseline."""
+    jobs = [(64, 12)] * 8
+    K = 4
+    kw = dict(slots=8, chunk=8)                 # no slot contention:
+    base = _virtual_clock(jobs, substeps=1, **kw)   # prefill cadence only
+    starved = _virtual_clock(jobs, substeps=K + 1,
+                             interleave_prefill=False, **kw)
+    fixed = _virtual_clock(jobs, substeps=K + 1, **kw)
+    assert _ttft_p95(starved) > 2 * _ttft_p95(base)     # the outlier
+    assert _ttft_p95(fixed) <= 2 * _ttft_p95(base)      # the pin
+
+
 # ---------------------------------------------------------------------------
 # replay determinism + HTTP smoke on a tiny model
 # ---------------------------------------------------------------------------
@@ -248,6 +272,24 @@ def test_replay_byte_identical_and_smoke_pass_rate(eval_model):
     fixed = rep1["arms"]["fixed@0"]["summary"]
     assert fixed["j_per_token"] < base["j_per_token"]
     assert fixed["mean_exit_layer"] < base["mean_exit_layer"]
+
+
+def test_replay_spec_arm_ttft_within_2x_baseline(eval_model):
+    """The deterministic-replay pin for the speculative TTFT outlier: the
+    speculative arm's virtual-clock TTFT (charged in compiled-model steps,
+    spec_window + 1 per super-tick, prefill interleaved) stays within 2x
+    of the baseline arm's."""
+    cfg, params, tok = eval_model
+    arms = (PolicyArm("baseline", {"name": "none"}),
+            PolicyArm("speculative",
+                      {"name": "speculative", "draft_idx": 0.0,
+                       "window": 4.0}))
+    rep = run_replay(params, cfg, tok, smoke_tasks(), arms, SMOKE_CFG,
+                     spec_window=4)
+    base = rep["arms"]["baseline"]["summary"]["ttft_p95_ticks"]
+    spec = rep["arms"]["speculative"]["summary"]["ttft_p95_ticks"]
+    assert base is not None and spec is not None
+    assert spec <= 2 * base
 
 
 def test_replay_payload_has_no_wallclock_fields(eval_model):

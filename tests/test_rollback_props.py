@@ -1,0 +1,254 @@
+"""Property tests for speculative rollback: random accept/reject
+sequences must restore KV state *exactly*.
+
+Two layers of the rollback story are pinned here:
+
+* contiguous rings — ``rewind_ring`` after k drafted writes with a of
+  them accepted leaves the cache bit-identical (``pos`` planes exact,
+  K/V at every still-valid position exact) to a cache that only ever
+  performed the a accepted writes;
+* paged pools — ``prepare_append`` + ``rollback_append`` return every
+  rejected block to the allocator and its unit to the slot's growth
+  reservation, so refcounts, reservations, tables and the free pool are
+  exactly what they were before the draft (full reject) and the
+  ``reserved + owned == worst case`` ledger never drifts (partial
+  accept), over arbitrarily interleaved multi-slot draft rounds.
+
+Uses the hypothesis shim in tests/_propcheck.py: real hypothesis when
+installed, deterministic seeded example loops otherwise.
+"""
+import random
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.kv_pool import PagedKVPool
+
+# ---------------------------------------------------------------- rings
+
+S0 = 5          # prompt length
+T_DEC = 14      # decode budget a trajectory may commit
+MAX_LEN = 24
+
+_MODELS: dict = {}
+
+
+def _ring_model(arch: str):
+    """(cfg, jitted decode step) — compiled once per arch, shared by all
+    drawn examples (same shapes throughout)."""
+    if arch not in _MODELS:
+        cfg = get_config(arch, "smoke")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(lambda tok, caches, pos:
+                       T.decode_step(params, cfg, tok, caches, pos))
+        _MODELS[arch] = (cfg, params, step)
+    return _MODELS[arch]
+
+
+def _assert_ring_state_equal(cfg, ref, got):
+    """pos planes bitwise equal; K/V (or MLA latent) planes bitwise equal
+    at every position the pos plane still admits (rewound entries hold
+    garbage by design — the mask is the contract)."""
+    segs = T.plan_segments(cfg)
+
+    def check(ca, cb):
+        pos = np.asarray(ca["pos"])
+        np.testing.assert_array_equal(pos, np.asarray(cb["pos"]))
+        valid = pos >= 0
+        for name in ca:
+            if name == "pos":
+                continue
+            a, b = np.asarray(ca[name]), np.asarray(cb[name])
+            m = valid.reshape(valid.shape + (1,) * (a.ndim - valid.ndim))
+            np.testing.assert_array_equal(np.where(m, a, 0),
+                                          np.where(m, b, 0))
+
+    for seg, ca, cb in zip(segs, ref, got):
+        if seg.scanned:
+            check(ca, cb)
+        else:
+            for caj, cbj in zip(ca, cb):
+                check(caj, cbj)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 9))
+def test_rewind_ring_random_accept_reject(seed):
+    """Random draft-k / accept-a rounds: after every rewind the spec
+    arm's ring must be bit-identical to the reference trajectory that
+    only ever wrote the accepted tokens, and its next-step logits must
+    match the reference bitwise. Runs a GQA ring and an MLA latent ring
+    (the two contiguous ring families rewind_ring serves alone — mamba
+    and windowed configs rewind via the scheduler's snapshot protocol)."""
+    for arch in ("llama32-3b", "minicpm3-4b"):
+        _rewind_round_trip(arch, seed)
+
+
+def _rewind_round_trip(arch: str, seed: int):
+    rng = random.Random(seed)
+    cfg, params, step = _ring_model(arch)
+    prompt = jnp.asarray(
+        np.random.default_rng(7).integers(4, cfg.vocab_size, (1, S0)),
+        jnp.int32)
+    toks = [rng.randrange(4, cfg.vocab_size) for _ in range(T_DEC + 1)]
+
+    _, cache0, _ = T.prefill(params, cfg, prompt, max_len=MAX_LEN)
+    # reference trajectory: caches after t committed decode writes
+    ref = [cache0]
+    for t in range(T_DEC):
+        _, c, _ = step(jnp.asarray([toks[t]], jnp.int32), ref[-1],
+                       jnp.asarray([S0 + t], jnp.int32))
+        ref.append(c)
+
+    spec, n = cache0, 0
+    for _ in range(4):
+        k = rng.randint(1, min(3, T_DEC - n))
+        a = rng.randint(0, k)
+        for j in range(k):            # draft writes the same token stream
+            _, spec, _ = step(jnp.asarray([toks[n + j]], jnp.int32), spec,
+                              jnp.asarray([S0 + n + j], jnp.int32))
+        spec = T.rewind_ring(cfg, spec,
+                             jnp.asarray([S0 + n + a - 1], jnp.int32))
+        n += a
+        _assert_ring_state_equal(cfg, ref[n], spec)
+    # the rewound cache must also *compute* like the reference arm
+    la, _, _ = step(jnp.asarray([toks[n]], jnp.int32), ref[n],
+                    jnp.asarray([S0 + n], jnp.int32))
+    lb, _, _ = step(jnp.asarray([toks[n]], jnp.int32), spec,
+                    jnp.asarray([S0 + n], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------- paged
+
+BS = 4
+
+
+def _paged_pool(prefix: bool) -> PagedKVPool:
+    cfg = get_config("llama32-3b", "smoke")
+    return PagedKVPool(cfg, max_slots=3, max_len=48, block_size=BS,
+                       enable_prefix_cache=prefix)
+
+
+def _snap(pool):
+    return (pool.blocks._refcount.copy(), sorted(pool.blocks._free),
+            pool.tables.copy(), pool._n_blocks.copy(),
+            pool._reserved.copy(), pool.blocks.n_in_use)
+
+
+def _assert_snap_equal(before, after):
+    ref_rc, ref_free, ref_tab, ref_nb, ref_res, ref_use = before
+    rc, free, tab, nb, res, use = after
+    np.testing.assert_array_equal(ref_rc, rc)
+    assert ref_free == free          # same *set* of free blocks
+    np.testing.assert_array_equal(ref_tab, tab)
+    np.testing.assert_array_equal(ref_nb, nb)
+    np.testing.assert_array_equal(ref_res, res)
+    assert ref_use == use
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 9))
+def test_paged_rollback_restores_accounting(seed):
+    """Multi-slot random draft/accept rounds (prefix cache off, so no
+    sharing/COW muddies the ledger): a full reject restores the allocator
+    snapshot exactly; any accept count keeps the per-slot invariant
+    ``reserved + owned == worst case`` and the global refcount ledger."""
+    rng = random.Random(seed)
+    pool = _paged_pool(prefix=False)
+    reqs = []
+    for _ in range(rng.randint(1, 3)):
+        S = rng.randint(1, 10)
+        max_new = rng.randint(4, 12)
+        prompt = [rng.randrange(256) for _ in range(S)]
+        slot = pool.alloc()
+        assert slot is not None
+        ids, n_shared, tail_shared = pool.bind_prompt(prompt)
+        pool.install_prompt(slot, S, ids, n_shared, tail_shared, max_new)
+        reqs.append({"slot": slot, "S": S, "max_new": max_new, "n": 0})
+
+    def ledger_ok():
+        for r in reqs:
+            owned = int(pool._n_blocks[r["slot"]])
+            res = int(pool._reserved[r["slot"]])
+            assert owned + res == pool.blocks_for(r["S"] + r["max_new"])
+        used = int(sum(pool._n_blocks[r["slot"]] for r in reqs))
+        assert pool.blocks.n_in_use == used
+
+    ledger_ok()
+    for _ in range(8):
+        r = rng.choice(reqs)
+        budget = r["max_new"] - r["n"]
+        if budget == 0:
+            continue
+        k = rng.randint(1, min(4, budget))
+        a = rng.randint(0, k)
+        before = _snap(pool)
+        base = r["S"] + r["n"]
+        for j in range(k):
+            pool.prepare_append(r["slot"], base + j)
+        pool.rollback_append(r["slot"], base + a)
+        r["n"] += a
+        if a == 0:
+            _assert_snap_equal(before, _snap(pool))
+        assert int(pool._n_blocks[r["slot"]]) == max(
+            pool.blocks_for(base + a), 1)
+        ledger_ok()
+    # retirement drains everything the rounds ever touched
+    for r in reqs:
+        pool.release(r["slot"])
+    assert pool.blocks.n_in_use == 0
+    assert pool.reserved_blocks == 0
+    assert int(pool.blocks._refcount[1:].sum()) == 0   # 0 stays pinned
+
+
+def test_paged_rollback_after_cow_does_not_drift():
+    """A draft that copy-on-writes a shared tail and is then fully
+    rejected keeps the COWed block (the slot now owns its tail
+    exclusively) — and repeated draft/reject cycles after that first COW
+    restore the snapshot exactly, so the reservation never drifts."""
+    pool = _paged_pool(prefix=True)
+    prompt = list(range(BS + 2))                  # partial tail block
+    s1 = pool.alloc()
+    pool.write_prompt(s1, prompt, _ring_for(pool, prompt), max_new=8)
+    s2 = pool.alloc()                             # exact-prompt sharer
+    pool.write_prompt(s2, prompt, _ring_for(pool, prompt), max_new=8)
+    tail = int(pool.tables[s1, 1])
+    assert pool.blocks.refcount(tail) == 2        # shared mutable tail
+    # first draft COWs, then rejects — the copy stays, sharing is gone
+    pool.prepare_append(s1, len(prompt))
+    pool.rollback_append(s1, len(prompt))
+    new_tail = int(pool.tables[s1, 1])
+    assert new_tail != tail
+    assert pool.blocks.refcount(new_tail) == 1
+    assert pool.blocks.refcount(tail) == 1        # only s2 holds it now
+    assert pool.cow_copies == 1
+    # every later cycle is a pure snapshot restore: COW happens at most
+    # once per slot, so no reservation unit is ever double-spent
+    before = _snap(pool)
+    for _ in range(3):
+        for j in range(3):
+            pool.prepare_append(s1, len(prompt) + j)
+        pool.rollback_append(s1, len(prompt))
+        _assert_snap_equal(before, _snap(pool))
+    assert pool.cow_copies == 1
+
+
+def _ring_for(pool: PagedKVPool, prompt):
+    """Minimal prefilled ring for write_prompt (content irrelevant to the
+    accounting properties — attention is never run here)."""
+    cfg = pool.cfg
+    params = _ring_model("llama32-3b")[1]
+    n = pool.blocks_for(len(prompt)) * pool.block_size
+    toks = jnp.asarray([prompt], jnp.int32)
+    _, caches, _ = T.prefill(params, cfg, toks, max_len=n)
+    return caches

@@ -97,20 +97,27 @@ def test_offline_sampled_is_deterministic_and_batch_independent(
 
 
 def test_speculative_unsupported_configs_fail_eagerly(mini_params):
-    from repro.configs.gemma2_9b import smoke as gemma_smoke
-    cfg = gemma_smoke()
-    with pytest.raises(ValueError, match="unsupported"):
+    from repro.configs.musicgen_medium import smoke as musicgen_smoke
+    cfg = musicgen_smoke()
+    assert "frontend" in T.speculative_unsupported(cfg)
+    with pytest.raises(ValueError, match="frontend"):
         speculative_generate(mini_params, cfg,
                              jnp.zeros((1, 4), jnp.int32), 2)
 
 
 def test_scheduler_rejects_speculative_for_unsupported_cfg():
-    from repro.configs.gemma2_9b import smoke as gemma_smoke
-    cfg = gemma_smoke()
+    from repro.configs.musicgen_medium import smoke as musicgen_smoke
+    cfg = musicgen_smoke()
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     with pytest.raises(ValueError, match="speculative"):
         Scheduler(params, cfg, allowed_kinds=("none", "speculative"),
                   max_slots=2, max_len=32)
+    # the refusal is an explicitly-declared unsupported cell, not a crash:
+    # a non-speculative scheduler on the same config records the reason
+    s = Scheduler(params, cfg, max_slots=2, max_len=32)
+    fb = s.stats()["fallbacks"]
+    assert "frontend" in fb["speculative"]["reason"]
+    assert fb["speculative"]["count"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +170,52 @@ def test_scheduler_greedy_spec_bit_identical(sched_pair, mini_cfg):
                 assert all(e == mini_cfg.num_layers
                            for e in spec.exit_layers)
                 assert spec.spec_verifies >= 1
+
+
+def test_scheduler_spec_snapshot_configs_bit_identical():
+    """Speculative serving on architectures whose rollback cannot be a
+    ``pos``-mask rewind — recurrent SSM state (mamba2) and sliding-window
+    rings that evict what a draft overwrote (gemma2) — runs the
+    snapshot/restore/commit protocol. Greedy spec tokens must still match
+    plain decode bit-for-bit, solo and in a mixed spec+none batch."""
+    import dataclasses
+
+    from repro.configs import get_config
+    for arch in ("mamba2-1.3b", "gemma2-9b"):
+        cfg = get_config(arch, "smoke")
+        if arch == "gemma2-9b":
+            # window below the prompt length so drafts really overwrite
+            # evicted entries and the snapshot is load-bearing
+            cfg = dataclasses.replace(cfg, sliding_window=8)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        sched = Scheduler(params, cfg, default_policy=PolicySpec("none"),
+                          allowed_kinds=("none", "speculative"),
+                          max_slots=2, max_len=48, max_new=8,
+                          queue_depth=8, kv_layout="contiguous",
+                          spec_window=3).start()
+        try:
+            prompts = _prompts(cfg.vocab_size, [12, 9], seed=11)
+            base, spec = [], []
+            for p in prompts:
+                h = sched.submit(p, max_new=8, policy="none")
+                h.result(180.0)
+                base.append(h)
+            for p in prompts:
+                h = sched.submit(p, max_new=8, policy=SPEC)
+                h.result(180.0)
+                spec.append(h)
+            for hb, hs in zip(base, spec):
+                assert hs.tokens == hb.tokens, arch
+                assert hs.spec_verifies >= 1, arch
+            # mixed batch: a non-spec row rides the super-tick with its
+            # cache blended through the identity rows of the commit
+            ha = sched.submit(prompts[0], max_new=8, policy=SPEC)
+            hb = sched.submit(prompts[1], max_new=8, policy="none")
+            ha.result(180.0), hb.result(180.0)
+            assert ha.tokens == base[0].tokens, arch
+            assert hb.tokens == base[1].tokens, arch
+        finally:
+            sched.stop()
 
 
 def test_mid_flight_spec_admission_is_byte_identical(sched_pair, mini_cfg):
